@@ -1,0 +1,31 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def timeit(fn: Callable, *args, n_warm: int = 2, n_iter: int = 10) -> float:
+    """Median wall-time per call in microseconds (CPU; relative numbers)."""
+    for _ in range(n_warm):
+        r = fn(*args)
+    jax.block_until_ready(r) if hasattr(r, "block_until_ready") or \
+        isinstance(r, jax.Array) else None
+    ts = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if isinstance(x, jax.Array)
+            else x, r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()

@@ -1,0 +1,31 @@
+"""Regenerate the §Roofline tables inside EXPERIMENTS.md from the dry-run
+result directories (baseline + optimized)."""
+from __future__ import annotations
+
+import re
+
+from .roofline import build_table
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    base = build_table("results/dryrun_baseline", multi_pod=False)
+    opt = build_table("results/dryrun", multi_pod=False)
+    opt_mp = build_table("results/dryrun", multi_pod=True)
+    text = re.sub(
+        r"<!-- BASELINE_TABLE -->.*?(?=\n## )",
+        "<!-- BASELINE_TABLE -->\n" + base + "\n\n",
+        text, flags=re.S)
+    text = re.sub(
+        r"<!-- OPTIMIZED_TABLE -->.*?(?=\n### Reading the table)",
+        "<!-- OPTIMIZED_TABLE -->\n" + opt
+        + "\n\nMulti-pod (2×256 chips) optimized:\n\n" + opt_mp + "\n",
+        text, flags=re.S)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md roofline tables updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Routing-kernel micro-benchmarks: Pallas (interpret) vs jnp reference.
+
+CPU wall-times are NOT TPU predictions; the derived column reports the
+kernel's arithmetic intensity and VMEM working set — the quantities that
+matter for the TPU roofline placement.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autoencoder import bank_scores
+from repro.kernels import ops
+from repro.kernels.expert_score import pad_to_lane
+
+from .common import emit, timeit
+
+
+def bench_expert_score(B=1024, K=6, D=784, H=128):
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    params = {
+        "w_enc": jax.random.normal(ks[0], (K, D, H)) * 0.03,
+        "b_enc": jnp.zeros((K, H)),
+        "bn_scale": jnp.ones((K, H)),
+        "bn_bias": jnp.zeros((K, H)),
+        "w_dec": jax.random.normal(ks[1], (K, H, D)) * 0.03,
+        "b_dec": jnp.zeros((K, D)),
+    }
+    states = {"mean": jnp.zeros((K, H)), "var": jnp.ones((K, H)),
+              "count": jnp.ones((K,))}
+    x = jax.random.uniform(ks[2], (B, D))
+    folded = ops.fold_bank(params, states)
+    t_kernel = timeit(lambda: ops.expert_score_folded(folded, x))
+    ref_fn = jax.jit(lambda: bank_scores(params, states, x))
+    t_ref = timeit(ref_fn)
+    Dp = pad_to_lane(D)
+    flops = 2 * B * K * (Dp * H * 2)
+    vmem_kb = (Dp * H * 2 * 4 + 128 * Dp * 4) / 1024
+    ai = flops / (B * Dp * 4 + K * (Dp * H * 2) * 4)
+    emit("expert_score_pallas_interp", t_kernel,
+         f"B={B};K={K};AI={ai:.1f}flop/B;vmem={vmem_kb:.0f}KB")
+    emit("expert_score_jnp_ref", t_ref, f"B={B};K={K}")
+
+
+def bench_decode_attention(B=8, H=16, KV=4, dh=128, S=4096):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, S, KV, dh))
+    v = jax.random.normal(ks[2], (B, S, KV, dh))
+    q_pos = jnp.asarray(S - 1, jnp.int32)
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    t_kernel = timeit(lambda: ops.decode_attention(q, k, v, q_pos, kv_pos),
+                      n_iter=3)
+    from repro.kernels import ref
+    ref_fn = jax.jit(lambda: ref.decode_attention_ref(q, k, v, q_pos, kv_pos))
+    t_ref = timeit(ref_fn, n_iter=3)
+    cache_mb = 2 * B * S * KV * dh * 4 / 2**20
+    emit("decode_attention_pallas_interp", t_kernel,
+         f"B={B};S={S};cache={cache_mb:.0f}MB")
+    emit("decode_attention_jnp_ref", t_ref, f"B={B};S={S}")
+
+
+def bench_routing_throughput(B=4096, K=6):
+    """End-to-end matcher routing throughput (samples/sec, jnp path)."""
+    from repro.core import build_matcher, init_ae
+    aes = [init_ae(jax.random.PRNGKey(i)) for i in range(K)]
+    m = build_matcher(aes, [str(i) for i in range(K)])
+    x = jax.random.uniform(jax.random.PRNGKey(0), (B, 784))
+    route = jax.jit(m.assign_coarse)
+    t = timeit(lambda: route(x))
+    emit("matcher_route_batch", t, f"B={B};{B / (t / 1e6):.0f}samples/s")
+
+
+def main():
+    bench_expert_score()
+    bench_decode_attention()
+    bench_routing_throughput()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Roofline table builder: reads results/dryrun/*.json and emits the
+per-(arch x shape x mesh) three-term analysis for EXPERIMENTS.md.
+
+MODEL_FLOPS convention: 6*N*D for dense (N params, D tokens),
+6*N_active*D for MoE; serving steps use 2*N(_active)*D. The ratio
+MODEL_FLOPS / HLO_FLOPS shows how much compiled compute is "useful"
+(catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.launch.mesh import HW
+from repro.models import SHAPES, build_model
+from repro.models.common import tree_size
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic 'useful' FLOPs for the whole step (all devices)."""
+    cfg = get_config(arch)
+    sc = SHAPES[shape_name]
+    model = build_model(cfg)
+    n = tree_size(model.param_shapes())
+    if cfg.n_experts:  # active params only
+        expert = 3 * cfg.d_model * cfg.d_ff
+        n = n - cfg.n_layers * (cfg.n_experts - cfg.experts_per_token) * expert
+    tokens = sc.global_batch * (sc.seq_len if sc.mode != "decode" else 1)
+    per_tok = 6 * n if sc.mode == "train" else 2 * n
+    return float(per_tok) * tokens
+
+
+def load_results(result_dir: str = "results/dryrun") -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def build_table(result_dir: str = "results/dryrun",
+                multi_pod: Optional[bool] = False) -> str:
+    rows = []
+    for r in load_results(result_dir):
+        if multi_pod is not None and r.get("multi_pod") != multi_pod:
+            continue
+        arch, shape = r["arch"], r["shape"]
+        if r["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | skipped | "
+                        f"{r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | ERROR | "
+                        f"{r.get('error', '')[:60]} |")
+            continue
+        rf = r["roofline"]
+        mf = model_flops(arch, shape)
+        hlo_total = r["flops_per_device"] * r["n_devices"]
+        useful = mf / hlo_total if hlo_total else 0.0
+        peak_gb = r["memory"]["peak_bytes"] / 2**30
+        adj = r["memory"].get("peak_bytes_tpu_adj")
+        note = f"peak {peak_gb:.1f} GiB"
+        if adj:
+            note += f" (tpu-adj {adj / 2**30:.1f})"
+        rows.append(
+            f"| {arch} | {shape} | {rf['t_compute_s']:.3g} | "
+            f"{rf['t_memory_s']:.3g} | {rf['t_collective_s']:.3g} | "
+            f"{useful:.2f} | {rf['bottleneck']} | {note} |")
+    head = ("| arch | shape | t_compute (s) | t_memory (s) | "
+            "t_collective (s) | useful-FLOPs ratio | bottleneck | notes |\n"
+            "|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    print(build_table(args.dir, multi_pod=args.multi_pod))
+
+
+if __name__ == "__main__":
+    main()

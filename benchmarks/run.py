@@ -1,0 +1,73 @@
+"""Benchmark entry point: one function per paper table + perf benches.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--tables-only]
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark, then the
+paper-table reproductions (ours vs paper side by side).
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes for CI (~2 min)")
+    ap.add_argument("--tables-only", action="store_true")
+    ap.add_argument("--kernels-only", action="store_true")
+    args = ap.parse_args()
+
+    n = 800 if args.fast else 2000
+    epochs = 25 if args.fast else 45
+
+    if not args.tables_only:
+        from . import kernel_bench
+        print("# --- kernel micro-benchmarks (name,us_per_call,derived) ---")
+        t0 = time.time()
+        kernel_bench.main()
+        print(f"# kernels done in {time.time()-t0:.1f}s")
+        if args.kernels_only:
+            return
+
+    from . import paper_tables
+    from .common import emit
+
+    print("# --- paper table reproductions ---")
+    t0 = time.time()
+    rows, summary = paper_tables.table1_datasets()
+    emit("table1_datasets", (time.time() - t0) * 1e6, summary)
+
+    t0 = time.time()
+    rows, summary = paper_tables.table3_coarse(n, epochs)
+    emit("table3_coarse_CA", (time.time() - t0) * 1e6, summary)
+    for r in rows:
+        paper = f"{r['paper']:.2f}" if r["paper"] is not None else "-"
+        print(f"#   {r['client']:9s} {r['dataset']:8s} "
+              f"ours={r['ours']:6.2f}%  paper={paper}%")
+
+    t0 = time.time()
+    rows, summary = paper_tables.table2_ca_methods(n, epochs)
+    emit("table2_ae_vs_mlp", (time.time() - t0) * 1e6, summary)
+    for r in rows:
+        print(f"#   {r['client']:9s} AE-MSE ours={r['AE-MSE']:6.2f}% "
+              f"(paper {r['AE-MSE paper']}%)  MLP ours="
+              f"{r['MLP-Softmax']:6.2f}% (paper {r['MLP paper']}%)")
+
+    t0 = time.time()
+    rows, summary = paper_tables.table4_fine(n, epochs)
+    emit("table4_fine_FA", (time.time() - t0) * 1e6, summary)
+    for r in rows:
+        print(f"#   {r['dataset']:6s} {r['client']:9s} "
+              f"ours={r['ours']:6.2f}%  paper={r['paper']}%  "
+              f"({r['classes']} classes)")
+
+    if not args.fast:
+        from . import landscape_ablation
+        print("# --- beyond-paper landscape ablation (Fig. 1 grid) ---")
+        landscape_ablation.run(n_per_dataset=min(n, 1500), epochs=epochs)
+
+
+if __name__ == "__main__":
+    main()

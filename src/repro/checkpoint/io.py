@@ -1,0 +1,109 @@
+"""Minimal sharded checkpointing: pytree -> npz shards + json index.
+
+Leaves are flattened by tree path; shards capped at ``shard_bytes`` so large
+models split across files. No orbax dependency (offline container).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# npz cannot store ml_dtypes (bfloat16 etc.); store as a bit-identical
+# unsigned view and restore from the recorded dtype string.
+_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+         "float8_e5m2": np.uint8}
+
+
+def _paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def rec(node, prefix):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k], f"{prefix}/{k}" if prefix else str(k))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, f"{prefix}/{i}")
+        else:
+            flat[prefix] = np.asarray(node)
+
+    rec(tree, "")
+    return flat
+
+
+def save_pytree(tree: PyTree, directory: str,
+                shard_bytes: int = 512 << 20) -> None:
+    os.makedirs(directory, exist_ok=True)
+    flat = _paths(tree)
+    index, shard, size, sid = {}, {}, 0, 0
+
+    def flush():
+        nonlocal shard, size, sid
+        if shard:
+            np.savez(os.path.join(directory, f"shard{sid}.npz"), **shard)
+            sid += 1
+            shard, size = {}, 0
+
+    for key, arr in flat.items():
+        if size + arr.nbytes > shard_bytes and shard:
+            flush()
+        safe = key.replace("/", "__")
+        stored = arr
+        if str(arr.dtype) in _VIEW:
+            stored = arr.view(_VIEW[str(arr.dtype)])
+        shard[safe] = stored
+        index[key] = {"shard": sid, "key": safe,
+                      "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        size += arr.nbytes
+    flush()
+    with open(os.path.join(directory, "index.json"), "w") as f:
+        json.dump(index, f)
+
+
+def load_pytree(directory: str, like: PyTree = None) -> PyTree:
+    """Load; if ``like`` given, restore that exact pytree structure."""
+    with open(os.path.join(directory, "index.json")) as f:
+        index = json.load(f)
+    shards = {}
+    flat = {}
+    for key, meta in index.items():
+        sid = meta["shard"]
+        if sid not in shards:
+            shards[sid] = np.load(
+                os.path.join(directory, f"shard{sid}.npz"))
+        arr = shards[sid][meta["key"]]
+        if meta["dtype"] in _VIEW:
+            arr = arr.view(jnp.dtype(meta["dtype"]))
+        flat[key] = arr
+    if like is None:
+        return _unflatten(flat)
+    ref = _paths(like)
+    assert set(ref) == set(flat), "checkpoint/pytree structure mismatch"
+    return _unflatten({k: flat[k] for k in ref})
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> PyTree:
+    root: Dict = {}
+    for key, arr in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+
+    def fix(node):
+        if isinstance(node, dict):
+            keys = list(node)
+            if keys and all(k.isdigit() for k in keys):
+                return [fix(node[str(i)]) for i in range(len(keys))]
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)

@@ -1,0 +1,111 @@
+"""The paper's autoencoder: 784 -> 128 -> 784 single-layer MLP enc/dec with
+BatchNorm, trained with MSE reconstruction loss (Sec. 4, Implementation
+Details). A *bank* of K such AEs (one per expert dataset) is stored with
+stacked params so scoring a batch against all K experts is one vmap.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import KeyGen, dense_init
+
+IN_DIM = 784
+HID_DIM = 128
+
+
+def init_ae(key, in_dim: int = IN_DIM, hid_dim: int = HID_DIM):
+    kg = KeyGen(key)
+    params = {
+        "w_enc": dense_init(kg(), (in_dim, hid_dim), jnp.float32),
+        "b_enc": jnp.zeros((hid_dim,), jnp.float32),
+        "bn_scale": jnp.ones((hid_dim,), jnp.float32),
+        "bn_bias": jnp.zeros((hid_dim,), jnp.float32),
+        "w_dec": dense_init(kg(), (hid_dim, in_dim), jnp.float32),
+        "b_dec": jnp.zeros((in_dim,), jnp.float32),
+    }
+    bn_state = {"mean": jnp.zeros((hid_dim,), jnp.float32),
+                "var": jnp.ones((hid_dim,), jnp.float32),
+                "count": jnp.zeros((), jnp.float32)}
+    return params, bn_state
+
+
+def _bn(h, params, state, train: bool, momentum: float = 0.9):
+    if train:
+        mu = jnp.mean(h, axis=0)
+        var = jnp.var(h, axis=0)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mu,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+            "count": state["count"] + 1,
+        }
+    else:
+        mu, var = state["mean"], state["var"]
+        new_state = state
+    hn = (h - mu) * jax.lax.rsqrt(var + 1e-5)
+    return hn * params["bn_scale"] + params["bn_bias"], new_state
+
+
+def encode(params, state, x, train: bool = False):
+    """x: (B, in_dim) -> (bottleneck (B, hid), new_bn_state)."""
+    h = x @ params["w_enc"] + params["b_enc"]
+    h, new_state = _bn(h, params, state, train)
+    return jax.nn.relu(h), new_state
+
+
+def decode(params, z):
+    return z @ params["w_dec"] + params["b_dec"]
+
+
+def forward(params, state, x, train: bool = False):
+    z, new_state = encode(params, state, x, train)
+    return decode(params, z), z, new_state
+
+
+def recon_mse(params, state, x, train: bool = False):
+    """Per-sample reconstruction MSE: (B,)."""
+    xhat, _, new_state = forward(params, state, x, train)
+    return jnp.mean(jnp.square(xhat - x), axis=-1), new_state
+
+
+def loss_fn(params, state, x):
+    """Scalar training loss (mean MSE over the batch)."""
+    per, new_state = recon_mse(params, state, x, train=True)
+    return jnp.mean(per), new_state
+
+
+# ---------------------------------------------------------------------------
+# AE bank: stacked params over K experts
+# ---------------------------------------------------------------------------
+
+
+def stack_bank(aes):
+    """List of (params, bn_state) -> (stacked_params, stacked_state)."""
+    params = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                    *[a[0] for a in aes])
+    states = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                    *[a[1] for a in aes])
+    return params, states
+
+
+def bank_scores(bank_params, bank_states, x):
+    """Reconstruction MSE of every sample under every AE.
+
+    x: (B, in_dim) -> (B, K) MSE matrix (lower = better match).
+    """
+    def one(params, state):
+        mse, _ = recon_mse(params, state, x, train=False)
+        return mse
+
+    return jax.vmap(one)(bank_params, bank_states).T  # (B, K)
+
+
+def bank_encode(bank_params, bank_states, x):
+    """Bottleneck features under every AE: (K, B, hid)."""
+    def one(params, state):
+        z, _ = encode(params, state, x, train=False)
+        return z
+
+    return jax.vmap(one)(bank_params, bank_states)

@@ -1,0 +1,157 @@
+"""ExpertMatcher: coarse (CA) and fine-grained (FA) expert assignment.
+
+Implements the paper's full landscape (Fig. 1 axes):
+  * Resolution — coarse (dataset-level, min reconstruction MSE) and fine
+    (class-level, max cosine similarity of the bottleneck vs per-class
+    centroids μ^n).
+  * Fusion — top-1 or top-K expert selection (``top_k``).
+  * Metric — "mse" (ad-hoc, paper default for CA), "cosine" (paper default
+    for FA); both exposed for either resolution.
+
+The matcher is a frozen artifact built from a trained AE bank + per-class
+centroids; routing is a pure jittable function, and the Pallas kernel
+``repro.kernels.expert_score`` is a drop-in for ``bank_scores`` on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import autoencoder as ae
+
+
+@dataclasses.dataclass
+class MatcherConfig:
+    metric: str = "mse"          # coarse metric: mse | cosine
+    fine_metric: str = "cosine"  # fine metric: cosine | mse
+    top_k: int = 1               # fusion: number of experts returned
+    use_kernel: bool = False     # route scoring through the Pallas kernel
+
+
+class ExpertMatcher:
+    """Routes client samples to expert models.
+
+    Attributes:
+      bank_params/bank_states: stacked AE params over K expert datasets.
+      centroids: (K, N_max, hid) per-class mean bottleneck features,
+        padded with zeros; centroid_mask: (K, N_max) validity mask.
+      names: dataset/expert names, index-aligned with the bank.
+    """
+
+    def __init__(self, bank_params, bank_states, names: Sequence[str],
+                 centroids=None, centroid_mask=None,
+                 config: Optional[MatcherConfig] = None):
+        self.bank_params = bank_params
+        self.bank_states = bank_states
+        self.names = list(names)
+        self.centroids = centroids
+        self.centroid_mask = centroid_mask
+        self.config = config or MatcherConfig()
+
+    @property
+    def n_experts(self) -> int:
+        return len(self.names)
+
+    # -- coarse ----------------------------------------------------------
+    def coarse_scores(self, x) -> jnp.ndarray:
+        """(B, K) matching score; LOWER is better (MSE convention)."""
+        if self.config.use_kernel:
+            from ..kernels import ops as kops
+            return kops.expert_score(self.bank_params, x)
+        if self.config.metric == "cosine":
+            z = ae.bank_encode(self.bank_params, self.bank_states, x)
+            xhat = jax.vmap(ae.decode)(self.bank_params, z)  # (K, B, D)
+            sim = _cos(xhat, x[None]).T  # (B, K)
+            return -sim
+        return ae.bank_scores(self.bank_params, self.bank_states, x)
+
+    def assign_coarse(self, x) -> jnp.ndarray:
+        """Top-1 expert index per sample: (B,)."""
+        return jnp.argmin(self.coarse_scores(x), axis=-1)
+
+    def assign_coarse_topk(self, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Fusion: (indices (B, top_k), scores (B, top_k))."""
+        s = self.coarse_scores(x)
+        neg, idx = jax.lax.top_k(-s, self.config.top_k)
+        return idx, -neg
+
+    # -- fine ------------------------------------------------------------
+    def fine_scores(self, x, expert_idx) -> jnp.ndarray:
+        """Similarity of each sample to each class centroid of its expert.
+
+        x: (B, D); expert_idx: (B,). Returns (B, N_max), invalid classes
+        = -inf (cosine) so argmax is safe.
+        """
+        z = ae.bank_encode(self.bank_params, self.bank_states, x)  # (K,B,h)
+        zi = jnp.take_along_axis(
+            z, expert_idx[None, :, None], axis=0)[0]  # (B, h)
+        cent = self.centroids[expert_idx]  # (B, N_max, h)
+        mask = self.centroid_mask[expert_idx]  # (B, N_max)
+        if self.config.fine_metric == "mse":
+            d = jnp.mean(jnp.square(cent - zi[:, None, :]), axis=-1)
+            sim = -d
+        else:
+            sim = _cos(cent, zi[:, None, :])
+        return jnp.where(mask > 0, sim, -jnp.inf)
+
+    def assign_fine(self, x, expert_idx=None) -> jnp.ndarray:
+        """Class/model index within the coarse-assigned expert: (B,)."""
+        if expert_idx is None:
+            expert_idx = self.assign_coarse(x)
+        return jnp.argmax(self.fine_scores(x, expert_idx), axis=-1)
+
+    def route(self, x) -> Dict[str, jnp.ndarray]:
+        """Hierarchical CA -> FA routing (Fig. 2)."""
+        coarse_idx, coarse_score = self.assign_coarse_topk(x)
+        fine_idx = self.assign_fine(x, coarse_idx[:, 0])
+        return {"coarse": coarse_idx, "coarse_score": coarse_score,
+                "fine": fine_idx}
+
+
+def _cos(a, b, eps: float = 1e-8):
+    """Cosine similarity over the last axis with broadcasting."""
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1)
+    return num / jnp.maximum(den, eps)
+
+
+def class_centroids(params, state, xs: np.ndarray, ys: np.ndarray,
+                    n_max: int):
+    """Per-class mean bottleneck features for one AE (paper's μ^n).
+
+    Returns (centroids (n_max, hid), mask (n_max,)).
+    """
+    z, _ = ae.encode(params, state, jnp.asarray(xs), train=False)
+    z = np.asarray(z)
+    hid = z.shape[-1]
+    cent = np.zeros((n_max, hid), np.float32)
+    mask = np.zeros((n_max,), np.float32)
+    for c in range(int(ys.max()) + 1):
+        sel = ys == c
+        if sel.any():
+            cent[c] = z[sel].mean(axis=0)
+            mask[c] = 1.0
+    return jnp.asarray(cent), jnp.asarray(mask)
+
+
+def build_matcher(aes, names, centroid_data=None,
+                  config: Optional[MatcherConfig] = None) -> ExpertMatcher:
+    """aes: list of (params, bn_state); centroid_data: optional list of
+    (xs, ys) per expert for FA centroids."""
+    bank_params, bank_states = ae.stack_bank(aes)
+    centroids = centroid_mask = None
+    if centroid_data is not None:
+        n_max = max(int(ys.max()) + 1 for _, ys in centroid_data)
+        cents, masks = [], []
+        for (params, state), (xs, ys) in zip(aes, centroid_data):
+            c, m = class_centroids(params, state, xs, ys, n_max)
+            cents.append(c)
+            masks.append(m)
+        centroids = jnp.stack(cents)
+        centroid_mask = jnp.stack(masks)
+    return ExpertMatcher(bank_params, bank_states, names, centroids,
+                         centroid_mask, config)

@@ -1,0 +1,56 @@
+"""The paper's baseline: MLP softmax dataset classifier
+(784 -> 256 -> 128 -> C) with BatchNorm (Table 2, "MLP-Softmax")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import KeyGen, dense_init, softmax_xent
+
+
+def init_mlp(key, in_dim: int = 784, n_classes: int = 4):
+    kg = KeyGen(key)
+    dims = [in_dim, 256, 128]
+    params = {"layers": [], "w_out": dense_init(kg(), (128, n_classes),
+                                                jnp.float32),
+              "b_out": jnp.zeros((n_classes,), jnp.float32)}
+    states = []
+    for i in range(len(dims) - 1):
+        params["layers"].append({
+            "w": dense_init(kg(), (dims[i], dims[i + 1]), jnp.float32),
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),
+            "bn_scale": jnp.ones((dims[i + 1],), jnp.float32),
+            "bn_bias": jnp.zeros((dims[i + 1],), jnp.float32),
+        })
+        states.append({"mean": jnp.zeros((dims[i + 1],), jnp.float32),
+                       "var": jnp.ones((dims[i + 1],), jnp.float32)})
+    return params, states
+
+
+def forward(params, states, x, train: bool = False, momentum: float = 0.9):
+    new_states = []
+    h = x
+    for lp, st in zip(params["layers"], states):
+        h = h @ lp["w"] + lp["b"]
+        if train:
+            mu, var = jnp.mean(h, axis=0), jnp.var(h, axis=0)
+            new_states.append({
+                "mean": momentum * st["mean"] + (1 - momentum) * mu,
+                "var": momentum * st["var"] + (1 - momentum) * var})
+        else:
+            mu, var = st["mean"], st["var"]
+            new_states.append(st)
+        h = (h - mu) * jax.lax.rsqrt(var + 1e-5)
+        h = jax.nn.relu(h * lp["bn_scale"] + lp["bn_bias"])
+    logits = h @ params["w_out"] + params["b_out"]
+    return logits, new_states
+
+
+def loss_fn(params, states, x, y):
+    logits, new_states = forward(params, states, x, train=True)
+    return softmax_xent(logits, y), new_states
+
+
+def predict(params, states, x):
+    logits, _ = forward(params, states, x, train=False)
+    return jnp.argmax(logits, axis=-1)

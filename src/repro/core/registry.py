@@ -1,0 +1,49 @@
+"""Expert registry: binds matcher bank indices to actual expert backends.
+
+In the paper an "expert" is a pretrained task model on the server. In this
+framework an expert entry carries (a) the dataset fingerprint the AE was
+trained on, (b) a handle to the serving backend (any of the 10 zoo
+architectures, or a lightweight classifier), and (c) optional per-class
+sub-experts for fine-grained routing.
+
+The registry is intentionally dumb: the matcher picks indices, the
+registry resolves them. New experts can be appended without retraining
+anything else — the paper's "modularity" property.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class ExpertEntry:
+    name: str
+    backend: Any = None                     # serving engine / callable
+    fine_backends: Optional[List[Any]] = None  # per-class sub-experts
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class ExpertRegistry:
+    def __init__(self):
+        self._entries: List[ExpertEntry] = []
+
+    def add(self, name: str, backend=None, fine_backends=None, **meta) -> int:
+        self._entries.append(ExpertEntry(name, backend, fine_backends, meta))
+        return len(self._entries) - 1
+
+    def __len__(self):
+        return len(self._entries)
+
+    def __getitem__(self, idx: int) -> ExpertEntry:
+        return self._entries[idx]
+
+    @property
+    def names(self) -> List[str]:
+        return [e.name for e in self._entries]
+
+    def resolve(self, coarse_idx: int, fine_idx: Optional[int] = None):
+        e = self._entries[coarse_idx]
+        if fine_idx is not None and e.fine_backends:
+            return e.fine_backends[fine_idx]
+        return e.backend

@@ -1,0 +1,83 @@
+"""Training loops for the matcher artifacts (paper Sec. 4 recipe):
+Adam, lr 1e-2 decayed x0.1 every 15 epochs, 45 epochs, BatchNorm.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import autoencoder as ae
+from . import mlp_baseline as mlp
+from ..optim import adamw_init, adamw_update, step_decay
+
+
+def _batches(n, batch_size, rng):
+    idx = rng.permutation(n)
+    for i in range(0, n - batch_size + 1, batch_size):
+        yield idx[i:i + batch_size]
+
+
+def train_ae(x: np.ndarray, *, key=None, epochs: int = 45,
+             batch_size: int = 256, base_lr: float = 1e-2,
+             lr_decay_epochs: int = 15, seed: int = 0,
+             in_dim: int = 784, hid_dim: int = 128):
+    """Train one autoencoder on one dataset. Returns (params, bn_state)."""
+    key = key if key is not None else jax.random.PRNGKey(seed)
+    params, bn_state = ae.init_ae(key, in_dim, hid_dim)
+    opt = adamw_init(params)
+    steps_per_epoch = max(1, len(x) // batch_size)
+    lr_fn = step_decay(base_lr, every_steps=lr_decay_epochs * steps_per_epoch)
+
+    @jax.jit
+    def step(params, bn_state, opt, batch):
+        (loss, new_bn), grads = jax.value_and_grad(
+            ae.loss_fn, has_aux=True)(params, bn_state, batch)
+        params, opt = adamw_update(grads, opt, params, lr_fn(opt["step"]))
+        return params, new_bn, opt, loss
+
+    rng = np.random.default_rng(seed)
+    loss = jnp.float32(0)
+    for _ in range(epochs):
+        for bidx in _batches(len(x), min(batch_size, len(x)), rng):
+            params, bn_state, opt, loss = step(
+                params, bn_state, opt, jnp.asarray(x[bidx]))
+    return params, bn_state
+
+
+def train_bank(datasets: Sequence[Tuple[str, np.ndarray]], **kw):
+    """Train one AE per (name, x) dataset. Returns (aes, names)."""
+    aes, names = [], []
+    for i, (name, x) in enumerate(datasets):
+        aes.append(train_ae(x, seed=1000 + i, **kw))
+        names.append(name)
+    return aes, names
+
+
+def train_mlp(xs: np.ndarray, ys: np.ndarray, *, n_classes: int,
+              epochs: int = 45, batch_size: int = 256,
+              base_lr: float = 1e-2, lr_decay_epochs: int = 15,
+              seed: int = 0, in_dim: int = 784):
+    """Train the MLP-softmax dataset classifier baseline."""
+    params, states = mlp.init_mlp(jax.random.PRNGKey(seed), in_dim, n_classes)
+    opt = adamw_init(params)
+    steps_per_epoch = max(1, len(xs) // batch_size)
+    lr_fn = step_decay(base_lr, every_steps=lr_decay_epochs * steps_per_epoch)
+
+    @jax.jit
+    def step(params, states, opt, bx, by):
+        (loss, new_states), grads = jax.value_and_grad(
+            mlp.loss_fn, has_aux=True)(params, states, bx, by)
+        params, opt = adamw_update(grads, opt, params, lr_fn(opt["step"]))
+        return params, new_states, opt, loss
+
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        for bidx in _batches(len(xs), min(batch_size, len(xs)), rng):
+            params, states, opt, _ = step(
+                params, states, opt, jnp.asarray(xs[bidx]),
+                jnp.asarray(ys[bidx]))
+    return params, states

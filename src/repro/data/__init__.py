@@ -1,0 +1,7 @@
+from .preprocess import adaptive_avg_pool_1d, resize_image, to_784
+from .splits import load_benchmark, server_client_split, synthetic_token_stream
+from .synthetic import SPECS, generate
+
+__all__ = ["adaptive_avg_pool_1d", "resize_image", "to_784",
+           "load_benchmark", "server_client_split", "synthetic_token_stream",
+           "SPECS", "generate"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  expert_score.py     — fused AE-bank routing score (encode→decode→MSE)
+  cosine_topk.py      — fine-grained assignment cosine scores
+  decode_attention.py — GQA flash-decode vs (ring) KV cache
+  wkv_step.py         — fused RWKV6 decode step (state + output, one pass)
+
+Each kernel ships with a pure-jnp oracle in ref.py and a jitted public
+wrapper in ops.py; kernels run with interpret=True on CPU (validated
+against the oracles in tests/test_kernels.py) and compile via Mosaic on
+real TPUs.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused AE-bank routing score (the paper's hot path).
+
+For every (sample tile, expert k) grid cell, computes the full
+encode -> ReLU -> decode -> per-sample MSE chain in VMEM:
+
+    h    = relu(x @ W1_k + b1_k)         (BN folded into W1/b1 by ops.py)
+    xhat = h @ W2_k + b2_k
+    out[i, k] = mean((xhat - x)^2)
+
+TPU adaptation (vs. launching K tiny GPU kernels): one pallas_call, grid
+(B/bm, K); the 784-dim feature axis is zero-padded to 896 = 7*128 for VREG
+lane alignment (zero padding is exact for MSE — pad reconstructs pad), and
+the per-expert weights (896x128 + 128x896 ~ 900 KB f32) stay resident in
+VMEM for the whole sample tile, so reconstructions never touch HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def pad_to_lane(d: int) -> int:
+    return ((d + LANE - 1) // LANE) * LANE
+
+
+def _kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref, *, d_real: int):
+    x = x_ref[...]  # (bm, Dp)
+    h = jnp.maximum(x @ w1_ref[0] + b1_ref[0], 0.0)  # (bm, H)
+    xhat = h @ w2_ref[0] + b2_ref[0]  # (bm, Dp)
+    d = xhat - x
+    out_ref[:, 0] = jnp.sum(d * d, axis=-1) / d_real
+
+
+def expert_score_pallas(x, w1, b1, w2, b2, *, d_real: int, block_m: int = 128,
+                        interpret: bool = True):
+    """x: (B, Dp) f32; w1: (K, Dp, H); b1: (K, H); w2: (K, H, Dp);
+    b2: (K, Dp). Returns (B, K) per-sample MSE. Dp must be lane-padded."""
+    B, Dp = x.shape
+    K, _, H = w1.shape
+    bm = min(block_m, B)
+    assert B % bm == 0, (B, bm)
+    grid = (B // bm, K)
+    return pl.pallas_call(
+        functools.partial(_kernel, d_real=d_real),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, Dp), lambda i, k: (i, 0)),
+            pl.BlockSpec((1, Dp, H), lambda i, k: (k, 0, 0)),
+            pl.BlockSpec((1, H), lambda i, k: (k, 0)),
+            pl.BlockSpec((1, H, Dp), lambda i, k: (k, 0, 0)),
+            pl.BlockSpec((1, Dp), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((B, K), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)

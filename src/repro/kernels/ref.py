@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-tested in CI)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_score_ref(x, w1, b1, w2, b2, *, d_real: int):
+    """x: (B, Dp); w1: (K, Dp, H); ... -> (B, K) per-sample MSE over the
+    first d_real features (padding reconstructs to zero exactly)."""
+    h = jnp.maximum(jnp.einsum("bd,kdh->kbh", x, w1) + b1[:, None, :], 0.0)
+    xhat = jnp.einsum("kbh,khd->kbd", h, w2) + b2[:, None, :]
+    mse = jnp.sum(jnp.square(xhat - x[None]), axis=-1) / d_real
+    return mse.T
+
+
+def cosine_scores_ref(z, centroids, mask, eps: float = 1e-12):
+    zn = z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True),
+                         jnp.sqrt(eps))
+    cn = centroids / jnp.maximum(
+        jnp.linalg.norm(centroids, axis=-1, keepdims=True), jnp.sqrt(eps))
+    sim = zn @ cn.T
+    return jnp.where(mask[None, :] > 0, sim, -jnp.inf)
+
+
+def decode_attention_ref(q, k, v, q_pos, kv_pos, *, window: int = 0):
+    """q: (B, H, dh); k/v: (B, S, KV, dh) -> (B, H, dh)."""
+    from ..models.attention import attention
+    o = attention(q[:, None], k, v, q_pos=q_pos[None].astype(jnp.int32),
+                  kv_pos=kv_pos, window=window, chunk=0)
+    return o[:, 0]

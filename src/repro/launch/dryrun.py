@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+This proves the distribution config is coherent without TPU hardware:
+``jax.jit(step, in_shardings=..., out_shardings=...).lower(shapes).compile()``
+must succeed on the production mesh; ``memory_analysis()`` proves the
+per-device footprint fits a v5e; ``cost_analysis()`` + HLO collective
+parsing feed the §Roofline table.
+
+The two module-level lines above MUST stay first: jax locks the device
+count at first backend init, and only the dry-run wants 512 host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+      --shape train_4k [--multi-pod] [--out out.json] [--swa-window 4096]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out-dir results/
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ALL_ARCHS, get_config
+from ..models import SHAPES, build_model
+from ..models.common import ShapeConfig, tree_size
+from ..sharding import mesh_context
+from ..sharding.rules import batch_spec, cache_specs, param_specs
+from ..train.loop import make_train_step, train_state_shapes
+from .hlo_analysis import collective_bytes, module_cost
+from .mesh import HW, make_production_mesh
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _named(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree)
+
+
+def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 swa_window: int = 0, fsdp: Optional[bool] = None,
+                 overrides: Optional[Dict[str, Any]] = None):
+    """Returns (fn, example_shapes, in_shardings, out_shardings, meta)."""
+    cfg = get_config(arch)
+    if swa_window:
+        cfg = cfg.replace(sliding_window=swa_window)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    model = build_model(cfg)
+    sc = SHAPES[shape_name]
+    ok, why = model.supports(sc)
+    if not ok:
+        return None, why
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pshapes = model.param_shapes()
+    n_params = tree_size(pshapes)
+    # FSDP(ZeRO-3) only pays off when every weight is touched once per
+    # *large* batch of tokens (training); at decode the per-token weight
+    # all-gathers dominate latency (measured: 14 GB/token on qwen2-72b),
+    # so serving steps use pure tensor-parallel params — UNLESS the params
+    # don't fit TP-only (mixtral's 140B: 17.5 GiB/chip on a 16-way axis),
+    # in which case weight gathers per token are the price of fitting.
+    model_axis = 16
+    tp_only_bytes = n_params * 2 / model_axis
+    if fsdp is not None:
+        use_fsdp = fsdp
+    elif sc.mode in ("train", "prefill"):
+        use_fsdp = n_params > 8e9
+    else:  # decode
+        use_fsdp = tp_only_bytes > 10e9
+    pspecs = param_specs(pshapes, mesh, fsdp=use_fsdp)
+
+    if sc.mode == "train":
+        # clamp grad-accumulation so every microbatch still spans all
+        # (pod x data) batch shards — a micro smaller than the batch mesh
+        # forces GSPMD to replicate activations across pods (measured:
+        # 8 GB/layer all-gathers on qwen2-72b multi-pod with mb=16)
+        batch_devs = int(np.prod([v for k, v in mesh.shape.items()
+                                  if k in ("pod", "data")]))
+        mb_max = max(1, sc.global_batch // batch_devs)
+        if cfg.train_microbatches > mb_max:
+            cfg = cfg.replace(train_microbatches=mb_max)
+            model = build_model(cfg)
+        state_shapes = train_state_shapes(model)
+        sspecs = {
+            "params": pspecs,
+            # ZeRO-1: optimizer moments additionally sharded over data
+            "opt": {"m": param_specs(pshapes, mesh, fsdp=True),
+                    "v": param_specs(pshapes, mesh, fsdp=True),
+                    "step": P()},
+            "step": P(),
+        }
+        bshapes = model.input_shapes(sc)
+        bspecs = batch_spec(bshapes, mesh)
+        step = make_train_step(model)
+        fn = step
+        args = (state_shapes, bshapes)
+        in_sh = (_named(sspecs, mesh), _named(bspecs, mesh))
+        out_sh = (_named(sspecs, mesh), None)
+    elif sc.mode == "prefill":
+        bshapes = model.input_shapes(sc)
+        bspecs = batch_spec(bshapes, mesh)
+
+        def fn(params, batch):
+            return model.prefill(params, batch)
+
+        args = (pshapes, bshapes)
+        in_sh = (_named(pspecs, mesh), _named(bspecs, mesh))
+        out_sh = None
+    else:  # decode
+        capacity = model.cache_capacity(sc.seq_len)
+        cshapes = model.cache_shapes(sc.global_batch, capacity)
+        cspecs = cache_specs(cshapes, mesh, sc.global_batch)
+        bshapes = model.input_shapes(sc)
+        bspecs = batch_spec(bshapes, mesh)
+
+        def fn(params, cache, batch):
+            return model.decode(params, cache, batch)
+
+        args = (pshapes, cshapes, bshapes)
+        in_sh = (_named(pspecs, mesh), _named(cspecs, mesh),
+                 _named(bspecs, mesh))
+        out_sh = (None, _named(cspecs, mesh))
+
+    meta = {"arch": arch, "shape": shape_name, "mode": sc.mode,
+            "multi_pod": multi_pod, "n_params": int(n_params),
+            "fsdp": bool(use_fsdp), "mesh": dict(mesh.shape),
+            "swa_window": swa_window}
+    return (fn, args, in_sh, out_sh, mesh, model), meta
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            swa_window: int = 0, fsdp: Optional[bool] = None,
+            overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    t0 = time.time()
+    built, meta = (None, None)
+    try:
+        res = build_dryrun(arch, shape_name, multi_pod=multi_pod,
+                           swa_window=swa_window, fsdp=fsdp,
+                           overrides=overrides)
+        built, meta = res
+        if built is None:
+            return {"arch": arch, "shape": shape_name,
+                    "multi_pod": multi_pod, "status": "skipped",
+                    "reason": meta}
+        fn, args, in_sh, out_sh, mesh, model = built
+        donate = (0,) if meta["mode"] == "train" else \
+            ((1,) if meta["mode"] == "decode" else ())
+        with mesh_context(mesh):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        mc = module_cost(hlo)  # loop-expanded per-device flops/bytes/coll
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        result = {
+            **meta,
+            "status": "ok",
+            "compile_s": round(time.time() - t0, 1),
+            "n_devices": n_dev,
+            # loop-expanded, per-device (the compiled module is the
+            # per-device partitioned program)
+            "flops_per_device": float(mc["flops"]),
+            "hlo_bytes_per_device": float(mc["bytes"]),
+            "analytic_bytes_per_device": float(
+                analytic_bytes(model, SHAPES[shape_name], n_dev)),
+            "xla_cost_flops_loop_once": float(cost.get("flops", -1)),
+            "collectives": {k.replace("coll_", ""): float(v)
+                            for k, v in mc.items()
+                            if k.startswith("coll")},
+            "memory": {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "peak_bytes": int(getattr(mem, "temp_size_in_bytes", 0))
+                + int(getattr(mem, "argument_size_in_bytes", 0))
+                - int(getattr(mem, "alias_size_in_bytes", 0)),
+                # XLA:CPU upcasts bf16 dot operands to f32 (no native bf16
+                # matmul), doubling weight/cache transients that a TPU
+                # keeps in bf16; halving temp approximates the TPU figure.
+                "peak_bytes_tpu_adj": int(getattr(mem, "argument_size_in_bytes", 0))
+                - int(getattr(mem, "alias_size_in_bytes", 0))
+                + int(getattr(mem, "temp_size_in_bytes", 0)) // 2,
+            },
+        }
+        result["roofline"] = roofline_terms(result)
+        return result
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+                "compile_s": round(time.time() - t0, 1)}
+
+
+def analytic_bytes(model, sc, n_dev: int) -> float:
+    """Per-device HBM-traffic floor (documented in EXPERIMENTS.md):
+    CPU-lowered HLO fragments fusions, so op-level byte counts overestimate
+    TPU traffic; this floor counts the unavoidable passes over params,
+    optimizer state, activations and caches given the step type."""
+    from ..models.common import tree_size, dt as _dt
+    import numpy as _np
+    pshapes = model.param_shapes()
+    pbytes = sum(int(_np.prod(x.shape)) * x.dtype.itemsize
+                 for x in jax.tree_util.tree_leaves(pshapes))
+    cfg = model.cfg
+    B, S = sc.global_batch, sc.seq_len
+    act_tok_bytes = cfg.d_model * 2  # bf16 residual stream
+    L = cfg.n_layers
+    if sc.mode == "train":
+        # params: read fwd + read bwd + grad write (bf16) ; opt: m,v r/w f32
+        param_traffic = 3 * pbytes + 4 * tree_size(pshapes) * 4
+        acts = 12 * B * S * act_tok_bytes * L  # ~12 materializations/layer
+        logits = 4 * B * S * cfg.vocab_size * 2
+        total = param_traffic + acts + logits
+    elif sc.mode == "prefill":
+        acts = 8 * B * S * act_tok_bytes * L
+        cache = 2 * tree_size(jax.eval_shape(
+            lambda: model.init_cache(B, model.cache_capacity(S)))) * 2
+        total = pbytes + acts + cache
+    else:
+        cache_tree = jax.eval_shape(
+            lambda: model.init_cache(B, model.cache_capacity(S)))
+        cache_bytes = sum(int(_np.prod(x.shape)) * x.dtype.itemsize
+                          for x in jax.tree_util.tree_leaves(cache_tree))
+        total = pbytes + 2 * cache_bytes + 8 * B * act_tok_bytes * L
+    return total / n_dev
+
+
+def roofline_terms(res: Dict[str, Any]) -> Dict[str, float]:
+    """Three roofline terms in seconds (per-device convention: the compiled
+    module is already the per-device partitioned program). The memory term
+    uses the analytic floor; the HLO op-level bytes are recorded alongside
+    as an upper bound (CPU fusion granularity inflates them)."""
+    flops = max(res.get("flops_per_device", 0.0), 0.0)
+    byts = max(res.get("analytic_bytes_per_device", 0.0), 0.0)
+    byts_hi = max(res.get("hlo_bytes_per_device", 0.0), 0.0)
+    coll = res.get("collectives", {}).get("total", 0.0)
+    t_compute = flops / HW["peak_flops_bf16"]
+    t_memory = byts / HW["hbm_bw"]
+    t_coll = coll / HW["ici_bw"]
+    dom = max((("compute", t_compute), ("memory", t_memory),
+               ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_memory_upper_s": byts_hi / HW["hbm_bw"],
+            "t_collective_s": t_coll, "bottleneck": dom}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--swa-window", type=int, default=0)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--fsdp", type=int, default=-1,
+                    help="-1 auto, 0 off, 1 on")
+    args = ap.parse_args()
+    fsdp = None if args.fsdp < 0 else bool(args.fsdp)
+
+    combos = []
+    if args.all:
+        for a in ALL_ARCHS:
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        combos.append((args.arch, args.shape))
+
+    results = []
+    for arch, shape in combos:
+        res = run_one(arch, shape, multi_pod=args.multi_pod,
+                      swa_window=args.swa_window, fsdp=fsdp)
+        results.append(res)
+        line = {k: v for k, v in res.items() if k not in ("trace",)}
+        print(json.dumps(line))
+        if args.out_dir:
+            import pathlib
+            pathlib.Path(args.out_dir).mkdir(parents=True, exist_ok=True)
+            tag = f"{arch}_{shape}_{'mp' if args.multi_pod else 'sp'}"
+            with open(f"{args.out_dir}/{tag}.json", "w") as f:
+                json.dump(res, f, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

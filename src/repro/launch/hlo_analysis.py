@@ -1,0 +1,235 @@
+"""Post-SPMD HLO analysis: collective traffic + loop-aware multipliers.
+
+``collective_bytes(hlo_text)`` parses the compiled (per-device) HLO module,
+sums the result-shape bytes of every collective op, and multiplies ops that
+live inside ``while`` bodies by the loop trip count (scan-over-layers,
+KV-chunk scans). Trip counts are recovered from the loop-condition
+computation's comparison constant — best-effort but exact for lax.scan.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,4096]' -> bytes. Tuples handled by summing components."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Computation headers are ``[ENTRY] %name (args) -> type {`` lines;
+    bodies run until a bare ``}``. Layout/metadata braces are same-line."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and ") -> " in stripped:
+                head = stripped.replace("ENTRY", "").strip()
+                name = head.split("(")[0].strip().lstrip("%")
+                cur = name or "entry"
+                comps[cur] = []
+        elif stripped == "}":
+            cur = None
+        elif stripped:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _while_trip_counts(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """Map body-computation name -> trip count (best effort)."""
+    trips: Dict[str, int] = {}
+    for _, lines in comps.items():
+        for ln in lines:
+            if " while(" not in ln and not re.search(r"=\s*\S+\s+while\(", ln):
+                continue
+            mb = re.search(r"body=%?([\w\.\-_]+)", ln)
+            mc = re.search(r"condition=%?([\w\.\-_]+)", ln)
+            if not mb or not mc:
+                continue
+            body, cond = mb.group(1), mc.group(1)
+            count = None
+            for cl in comps.get(cond, []):
+                for cm in re.finditer(r"constant\((\d+)\)", cl):
+                    v = int(cm.group(1))
+                    count = max(count or 0, v)
+            trips[body] = count if count else 1
+    return trips
+
+
+def _nesting_multiplier(comp: str, parent_of: Dict[str, Tuple[str, int]],
+                        depth_guard: int = 16) -> int:
+    mult = 1
+    seen = 0
+    while comp in parent_of and seen < depth_guard:
+        comp, trips = parent_of[comp]
+        mult *= trips
+        seen += 1
+    return mult
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "iota", "after-all", "partition-id",
+    "replica-id",
+}
+
+_OP_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-_]+)\s*=\s*(\(?[a-z0-9]+\[[^=]*?)\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w\.\-_]+)\s*:\s*(\(?[a-z0-9]+\[[0-9,\{\}\s]*\]\)?)")
+
+
+def _index_shapes(hlo: str) -> Dict[str, str]:
+    """Global %name -> result-type string (covers params via headers)."""
+    shapes: Dict[str, str] = {}
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = _OP_RE.match(s)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+        elif s.endswith("{") and ") -> " in s:
+            argpart = s[s.find("(") + 1:s.rfind(") -> ")]
+            for pm in _PARAM_RE.finditer(argpart):
+                shapes.setdefault(pm.group(1), pm.group(2))
+    return shapes
+
+
+def _dims_of(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _dot_flops(line: str, shapes: Dict[str, str]) -> int:
+    """2 * prod(result dims) * prod(contracted dim sizes of lhs)."""
+    m = _OP_RE.match(line)
+    if not m:
+        return 0
+    result_elems = 1
+    for d in _dims_of(m.group(2)):
+        result_elems *= d
+    ops = re.findall(r"\(([^)]*)\)", line)
+    operands = re.findall(r"%([\w\.\-_]+)", ops[0]) if ops else []
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    k = 1
+    if mc and operands:
+        lhs_dims = _dims_of(shapes.get(operands[0], ""))
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+    return 2 * result_elems * k
+
+
+def module_cost(hlo: str) -> Dict[str, float]:
+    """Loop-expanded per-device {flops, bytes, collectives...} from HLO text.
+
+    XLA's HloCostAnalysis counts while bodies once; here every computation's
+    cost is multiplied by the product of enclosing loop trip counts
+    (recovered from loop-condition constants), which makes scan-over-layers
+    and gradient-accumulation loops report their true cost.
+    """
+    comps = _split_computations(hlo)
+    shapes = _index_shapes(hlo)
+    trips = _while_trip_counts(comps)
+    parent_of: Dict[str, Tuple[str, int]] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            mb = re.search(r"body=%?([\w\.\-_]+)", ln)
+            if mb and mb.group(1) in trips:
+                parent_of[mb.group(1)] = (cname, trips[mb.group(1)])
+            mcond = re.search(r"condition=%?([\w\.\-_]+)", ln)
+            if mcond and mcond.group(1) not in parent_of:
+                parent_of[mcond.group(1)] = (cname, 1)
+            mcall = re.search(r"(?:calls|to_apply)=%?([\w\.\-_]+)", ln)
+            if mcall and mcall.group(1) not in parent_of:
+                parent_of[mcall.group(1)] = (cname, 1)
+
+    flops = 0.0
+    nbytes = 0.0
+    coll = defaultdict(float)
+    for cname, lines in comps.items():
+        mult = _nesting_multiplier(cname, parent_of)
+        # fusion-internal computations: skip byte accounting (the fusion op
+        # at the callsite accounts the traffic); still count dot flops.
+        is_fused = cname.startswith("fused_") or ".fused" in cname
+        for ln in lines:
+            m = _OP_RE.match(ln)
+            if not m:
+                continue
+            opname = m.group(3)
+            if " dot(" in ln or opname == "dot":
+                flops += mult * _dot_flops(ln, shapes)
+            if is_fused or opname in _SKIP_BYTES_OPS:
+                continue
+            b = _shape_bytes(m.group(2))
+            ops = re.findall(r"\(([^)]*)\)", ln)
+            for ref in (re.findall(r"%([\w\.\-_]+)", ops[0]) if ops else []):
+                b += _shape_bytes(shapes.get(ref, ""))
+            nbytes += mult * b
+            for op in COLLECTIVES:
+                if opname.startswith(op):
+                    if opname.endswith("-done"):
+                        break
+                    coll[op] += mult * _shape_bytes(m.group(2))
+                    break
+    out = {"flops": flops, "bytes": nbytes}
+    out.update({f"coll_{k}": v for k, v in coll.items()})
+    out["coll_total"] = sum(coll.values())
+    return out
+
+
+def collective_bytes(hlo: str) -> Dict[str, int]:
+    """Returns {op_type: total_bytes (loop-expanded)} + {"total": ...}."""
+    comps = _split_computations(hlo)
+    trips = _while_trip_counts(comps)
+    # parent map: computation -> (enclosing computation, trip count)
+    parent_of: Dict[str, Tuple[str, int]] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            mb = re.search(r"body=%?([\w\.\-_]+)", ln)
+            if mb and mb.group(1) in trips:
+                parent_of[mb.group(1)] = (cname, trips[mb.group(1)])
+            # calls/fusions propagate multipliers too
+            mcall = re.search(r"(?:calls|to_apply)=%?([\w\.\-_]+)", ln)
+            if mcall and mcall.group(1) not in parent_of:
+                parent_of[mcall.group(1)] = (cname, 1)
+
+    out: Dict[str, int] = defaultdict(int)
+    for cname, lines in comps.items():
+        mult = _nesting_multiplier(cname, parent_of)
+        for ln in lines:
+            for op in COLLECTIVES:
+                # result-shape precedes "= <shape> op-name(" pattern
+                m = re.search(rf"=\s*([^=]+?)\s+{op}(-start|-done)?\(", ln)
+                if m:
+                    if m.group(2) == "-done":
+                        continue  # counted at -start
+                    nbytes = _shape_bytes(m.group(1))
+                    out[op] += nbytes * mult
+                    break
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)

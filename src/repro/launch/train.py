@@ -1,0 +1,55 @@
+"""Training launcher.
+
+On this CPU container it trains a REDUCED variant end-to-end (real
+optimizer steps); on a TPU slice the same entry point jits the full config
+against the production mesh (the dry-run proves those combinations lower
+and compile — see dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --steps 100 [--full] [--seq 128 --batch 8]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config
+from ..data import synthetic_token_stream
+from ..models import build_model
+from ..train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (TPU slice required)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    print(f"arch={cfg.name} family={cfg.family} layers={cfg.n_layers} "
+          f"d_model={cfg.d_model}")
+
+    tr = Trainer(model, lr=args.lr, total_steps=args.steps)
+    stream = synthetic_token_stream(cfg.vocab_size, args.seq, args.batch)
+    t0 = time.time()
+    tr.fit(stream, steps=args.steps, log_every=args.log_every,
+           callback=lambda i, m: print(
+               f"step {i:5d}  loss {float(m['loss']):.4f}  "
+               f"lr {float(m['lr']):.2e}  {time.time()-t0:.1f}s"))
+    print(f"final loss: {tr.history[-1][1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .api import BaseModel, build_model
+from .common import ArchConfig, ShapeConfig, SHAPES
+
+__all__ = ["BaseModel", "build_model", "ArchConfig", "ShapeConfig", "SHAPES"]

@@ -1,0 +1,88 @@
+"""Uniform model interface used by train/serve/dryrun.
+
+Every family implements:
+  init(rng) -> params
+  loss(params, batch) -> (scalar, metrics)
+  prefill(params, batch) -> (last_logits (B, V), cache)
+  decode(params, cache, batch) -> (logits (B, V), cache)
+  init_cache(batch_size, capacity) -> zeroed cache pytree
+  cache_shapes(batch_size, capacity) -> ShapeDtypeStruct pytree
+  input_shapes(shape_cfg) -> dict[str, ShapeDtypeStruct]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, ShapeConfig, dt
+
+
+class BaseModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- construction ------------------------------------------------------
+    def init(self, rng):
+        raise NotImplementedError
+
+    def param_shapes(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # -- compute -----------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        raise NotImplementedError
+
+    def prefill(self, params, batch, capacity=None):
+        raise NotImplementedError
+
+    def decode(self, params, cache, batch):
+        raise NotImplementedError
+
+    def init_cache(self, batch_size: int, capacity: int):
+        raise NotImplementedError
+
+    def cache_shapes(self, batch_size: int, capacity: int):
+        zeros = jax.eval_shape(lambda: self.init_cache(batch_size, capacity))
+        return zeros
+
+    # -- shapes ------------------------------------------------------------
+    def cache_capacity(self, seq_len: int) -> int:
+        w = self.cfg.sliding_window
+        return min(seq_len, w) if w else seq_len
+
+    def input_shapes(self, sc: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Default token-LM inputs; multimodal families override."""
+        B, S = sc.global_batch, sc.seq_len
+        i32 = jnp.int32
+        f = jax.ShapeDtypeStruct
+        if sc.mode == "train":
+            return {"tokens": f((B, S), i32), "labels": f((B, S), i32)}
+        if sc.mode == "prefill":
+            return {"tokens": f((B, S), i32)}
+        return {"token": f((B, 1), i32)}
+
+    def supports(self, sc: ShapeConfig) -> Tuple[bool, str]:
+        """Whether this (arch, shape) combo is runnable (long_500k gating)."""
+        if sc.name == "long_500k" and self.cfg.family in ("dense", "moe", "vlm", "encdec"):
+            if not self.cfg.sliding_window:
+                return False, "full-attention arch at 500k decode (quadratic KV) — skipped per assignment; use --swa-window variant"
+        return True, ""
+
+
+_REGISTRY = {}
+
+
+def register_family(name: str):
+    def deco(cls):
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def build_model(cfg: ArchConfig) -> BaseModel:
+    from . import dense, encdec, rwkv6, zamba  # noqa: F401  (registration)
+    if cfg.family not in _REGISTRY:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return _REGISTRY[cfg.family](cfg)

@@ -1,0 +1,176 @@
+"""GQA attention: blockwise online-softmax (flash) for train/prefill,
+plain masked attention for single-token decode, sliding-window support,
+and KV-cache plumbing.
+
+TPU adaptation note: instead of porting a CUDA flash-attention kernel we use
+a `jax.lax.scan` over KV chunks with an online-softmax carry — XLA:TPU keeps
+the (Sq x chunk) score tile in VMEM and never materializes the full S x S
+matrix. The chunk size (`cfg.attn_chunk`) is a roofline tuning knob.
+A Pallas flash-decode kernel (repro/kernels/decode_attention.py) covers the
+decode hot path on real TPUs; the code here is also its oracle.
+
+Masking is position-id based throughout: every key slot carries an absolute
+position (-1 = empty), which makes full caches and sliding-window ring
+caches look identical to the attention math.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, H, dh), k: (B, Sk, KV, dh) -> (B, Sq, H, Sk) in f32."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dh)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    return s.reshape(B, Sq, H, Sk)
+
+
+def _gqa_av(p, v):
+    """p: (B, Sq, H, Sk) f32, v: (B, Sk, KV, dh) -> (B, Sq, H, dh) f32."""
+    B, Sq, H, Sk = p.shape
+    KV, dh = v.shape[2], v.shape[3]
+    G = H // KV
+    pg = p.reshape(B, Sq, KV, G, Sk)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", pg, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, dh)
+
+
+def _edge_mask(q_pos, kv_pos, window: int, causal: bool = True):
+    """(Sq, Sk) allowed-edge mask. q_pos: (Sq,), kv_pos: (Sk,) absolute
+    positions; kv_pos == -1 marks an empty cache slot (always masked)."""
+    qp = q_pos[:, None]
+    kp = kv_pos[None, :]
+    m = kp >= 0
+    if causal:
+        m &= kp <= qp
+    if window:
+        m &= kp > qp - window
+    return m
+
+
+def attention(q, k, v, *, q_pos, kv_pos, window: int = 0, chunk: int = 0,
+              causal: bool = True):
+    """Unified GQA attention.
+
+    q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh); q_pos: (Sq,) int32 absolute
+    query positions; kv_pos: (Sk,) int32 absolute key positions (-1 empty).
+    Returns (B, Sq, H, dh) in q.dtype. ``chunk`` selects the blockwise
+    online-softmax path when it tiles Sk.
+    """
+    Sq, Sk = q.shape[1], k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    if chunk and Sq > 1 and Sk > chunk and Sk % chunk == 0:
+        return _flash(q, k, v, q_pos=q_pos, kv_pos=kv_pos, window=window,
+                      chunk=chunk, scale=scale, causal=causal)
+    s = _gqa_scores(q, k) * scale  # (B, Sq, H, Sk)
+    m = _edge_mask(q_pos, kv_pos, window, causal)  # (Sq, Sk)
+    s = jnp.where(m[None, :, None, :], s, NEG_INF)
+    # guard fully-masked rows (empty cache) against NaN
+    p = jax.nn.softmax(s, axis=-1)
+    o = _gqa_av(p, v)
+    return o.astype(q.dtype)
+
+
+def _flash(q, k, v, *, q_pos, kv_pos, window, chunk, scale, causal=True):
+    """Online-softmax scan over KV chunks; never materializes (Sq, Sk)."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    n_chunks = Sk // chunk
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, KV, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, KV, dh), 1, 0)
+    pc = kv_pos.reshape(n_chunks, chunk)
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry
+        kb, vb, pos_b = inp
+        s = _gqa_scores(q, kb) * scale  # (B, Sq, H, chunk) f32
+        msk = _edge_mask(q_pos, pos_b, window, causal)  # (Sq, chunk)
+        s = jnp.where(msk[None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + _gqa_av(p, vb)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((B, Sq, H), NEG_INF, jnp.float32),
+        jnp.zeros((B, Sq, H), jnp.float32),
+        jnp.zeros((B, Sq, H, dh), jnp.float32),
+    )
+    (m_run, l_run, acc), _ = jax.lax.scan(body, init, (kc, vc, pc))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache: dict {k, v, pos, t}
+#   k, v: (B, C, KV, dh) where C = max_len (full) or window (ring)
+#   pos:  (C,) absolute position held in each slot, -1 if empty
+#   t:    () next absolute position to write
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(batch, capacity, n_kv, dh, dtype):
+    return {
+        "k": jnp.zeros((batch, capacity, n_kv, dh), dtype),
+        "v": jnp.zeros((batch, capacity, n_kv, dh), dtype),
+        "pos": jnp.full((capacity,), -1, jnp.int32),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def kv_cache_shapes(batch, capacity, n_kv, dh, dtype):
+    """ShapeDtypeStruct pytree mirroring init_kv_cache (for dry-run)."""
+    f = jax.ShapeDtypeStruct
+    return {
+        "k": f((batch, capacity, n_kv, dh), dtype),
+        "v": f((batch, capacity, n_kv, dh), dtype),
+        "pos": f((capacity,), jnp.int32),
+        "t": f((), jnp.int32),
+    }
+
+
+def cache_prefill(cache, k, v):
+    """Write a full prefill of S tokens (positions 0..S-1) into the cache.
+    If the cache is a ring (capacity < S), keep the last `capacity` tokens."""
+    S = k.shape[1]
+    C = cache["k"].shape[1]
+    if S <= C:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, 0, 0))
+        pos = jnp.where(jnp.arange(C) < S, jnp.arange(C), -1).astype(jnp.int32)
+    else:
+        # ring: keep last C tokens; slot = absolute_pos % C
+        last_k = k[:, S - C:, :, :]
+        last_v = v[:, S - C:, :, :]
+        abs_pos = jnp.arange(S - C, S)
+        slots = abs_pos % C
+        ck = cache["k"].at[:, slots].set(last_k.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, slots].set(last_v.astype(cache["v"].dtype))
+        pos = jnp.zeros((C,), jnp.int32).at[slots].set(abs_pos)
+    return {"k": ck, "v": cv, "pos": pos, "t": jnp.asarray(S, jnp.int32)}
+
+
+def cache_append(cache, k1, v1):
+    """Append one token (k1, v1: (B, 1, KV, dh)); ring-wraps automatically."""
+    C = cache["k"].shape[1]
+    t = cache["t"]
+    slot = t % C
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k1.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v1.astype(cache["v"].dtype), (0, slot, 0, 0))
+    pos = jax.lax.dynamic_update_slice(cache["pos"], t[None], (slot,))
+    return {"k": ck, "v": cv, "pos": pos, "t": t + 1}

@@ -1,0 +1,272 @@
+"""Shared model-zoo building blocks: configs, norms, RoPE, initializers.
+
+Everything is pure JAX (no flax): params are nested dicts of jnp arrays,
+modules are (init_fn, apply_fn) pairs. Layer stacks store params stacked on
+a leading ``L`` axis and are applied with ``jax.lax.scan`` so the HLO stays
+O(1) in depth (critical for 80-layer dry-run compiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "f32": jnp.float32,
+    "bf16": jnp.bfloat16,
+}
+
+
+def dt(name: str):
+    return DTYPES[name]
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """One config describes any architecture family in the zoo."""
+
+    name: str
+    family: str  # dense | moe | rwkv | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_impl: str = "dispatch"  # dispatch | dense
+    # --- attention variants ---
+    sliding_window: int = 0  # 0 = full attention
+    attn_chunk: int = 1024  # KV block for chunked flash attention
+    # --- SSM / RWKV ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    rwkv_lora_dim: int = 32
+    # --- hybrid (zamba-style shared attention) ---
+    attn_every: int = 0  # apply shared attn block after every N core layers
+    # --- encoder-decoder ---
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    enc_seq_len: int = 0  # stub encoder frames (audio)
+    # --- multimodal stub ---
+    n_stub_embeds: int = 0  # patch embeddings prepended (vlm)
+    # --- dtypes / memory policy ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: bool = False
+    train_microbatches: int = 1
+    seq_parallel: bool = False  # shard the seq dim of activations over model
+    # provenance
+    source: str = ""
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 (model axis x lane) so the
+        embedding/unembedding tables shard cleanly. Labels/tokens always
+        stay < vocab_size; pad logits train toward -inf harmlessly."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self, **kw) -> "ArchConfig":
+        """A tiny same-family variant for CPU smoke tests."""
+        small = dict(
+            n_layers=2,
+            d_model=min(self.d_model, 128),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            d_ff=min(self.d_ff, 256),
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=32 if self.head_dim else 0,
+            n_experts=min(self.n_experts, 4),
+            experts_per_token=min(self.experts_per_token, 2),
+            ssm_head_dim=32 if self.ssm_state else 64,
+            ssm_chunk=16,
+            attn_chunk=64,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            attn_every=min(self.attn_every, 2) if self.attn_every else 0,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            n_dec_layers=min(self.n_dec_layers, 2),
+            enc_seq_len=min(self.enc_seq_len, 16) if self.enc_seq_len else 0,
+            n_stub_embeds=min(self.n_stub_embeds, 8) if self.n_stub_embeds else 0,
+            rwkv_lora_dim=8,
+            param_dtype="float32",
+            compute_dtype="float32",
+            remat=False,
+            train_microbatches=1,
+            name=self.name + "-smoke",
+        )
+        # keep GQA ratio valid
+        if small["n_heads"] % max(small["n_kv_heads"], 1):
+            small["n_kv_heads"] = small["n_heads"]
+        small.update(kw)
+        return self.replace(**small)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape (training / prefill / decode)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, in_axis=-2):
+    """LeCun-normal style init on the fan-in axis."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Splits a PRNG key on demand; keeps init code tidy."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def groupnorm_heads(x, scale, eps=1e-5):
+    """GroupNorm over the last dim where x is (..., H, P): normalize each head."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dh: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh), positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean cross-entropy; logits (..., V) any dtype, reduction in f32.
+
+    The gold-logit pick uses an equality-mask contraction instead of
+    take_along_axis: with the vocab dim sharded over the ``model`` axis the
+    masked reduce stays sharded (partial sums + one psum) where a gather
+    would force GSPMD to all-gather the full f32 logits.
+    """
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    onehot = (labels[..., None] == vocab_iota)
+    gold = jnp.sum(jnp.where(onehot, logits.astype(jnp.float32), 0.0),
+                   axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def tree_size(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))

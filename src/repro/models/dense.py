@@ -1,0 +1,259 @@
+"""Decoder-only transformer: dense (llama/qwen-style GQA), MoE (mixtral/
+olmoe), and VLM backbone (stub patch embeddings prepended).
+
+Layers are applied with ``jax.lax.scan`` over stacked params so HLO size is
+O(1) in depth. ``cfg.remat`` wraps the layer body in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .api import BaseModel, register_family
+from .attention import (attention, cache_append, cache_prefill, init_kv_cache)
+from .common import (ArchConfig, KeyGen, apply_rope, dense_init, dt,
+                     embed_init, ones_init, rmsnorm, softmax_xent, zeros_init)
+from .moe import init_moe, moe_ffn
+from ..sharding import shard_act
+
+BATCH = ("pod", "data")
+
+
+def _init_layer(key, cfg: ArchConfig, dtype):
+    kg = KeyGen(key)
+    D, H, KV, dh, F = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh, cfg.d_ff
+    p = {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        "wq": dense_init(kg(), (D, H * dh), dtype),
+        "wk": dense_init(kg(), (D, KV * dh), dtype),
+        "wv": dense_init(kg(), (D, KV * dh), dtype),
+        "wo": dense_init(kg(), (H * dh, D), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((KV * dh,), dtype)
+        p["bv"] = jnp.zeros((KV * dh,), dtype)
+    if cfg.n_experts:
+        p["moe"] = init_moe(kg(), cfg, dtype)
+    else:
+        p["mlp"] = {
+            "w_gate": dense_init(kg(), (D, F), dtype),
+            "w_up": dense_init(kg(), (D, F), dtype),
+            "w_down": dense_init(kg(), (F, D), dtype),
+        }
+    return p
+
+
+def _qkv(h, lp, cfg: ArchConfig, positions):
+    B, S, D = h.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+        k = k + lp["bk"]
+        v = v + lp["bv"]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, KV, dh)
+    v = v.reshape(B, S, KV, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_act(q, (BATCH, None, "model", None))
+    k = shard_act(k, (BATCH, None, "model", None))
+    return q, k, v
+
+
+def _ffn(h, lp, cfg: ArchConfig, dropless: bool = False):
+    if cfg.n_experts:
+        return moe_ffn(lp["moe"], h, cfg, dropless)
+    mp = lp["mlp"]
+    g = jax.nn.silu(h @ mp["w_gate"])
+    u = h @ mp["w_up"]
+    y = (g * u) @ mp["w_down"]
+    return y, jnp.float32(0.0)
+
+
+def _layer_full(x, lp, cfg: ArchConfig, positions):
+    """Full-sequence layer (train / prefill). Returns (x, (k, v), aux)."""
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(h, lp, cfg, positions)
+    o = attention(q, k, v, q_pos=positions, kv_pos=positions,
+                  window=cfg.sliding_window, chunk=cfg.attn_chunk)
+    B, S = x.shape[:2]
+    x = x + (o.reshape(B, S, -1) @ lp["wo"]).astype(x.dtype)
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    y, aux = _ffn(h2, lp, cfg)
+    x = x + y.astype(x.dtype)
+    # sequence parallelism: between TP blocks the residual stream is
+    # sharded along seq over `model` (Korthikanti et al.) — GSPMD turns the
+    # Megatron all-reduces into reduce-scatter + all-gather pairs and the
+    # per-device activation footprint drops by the model-axis size
+    x = shard_act(x, (BATCH, "model" if cfg.seq_parallel else None, None))
+    return x, (k, v), aux
+
+
+def _layer_decode(x, lp, layer_cache, cfg: ArchConfig, pos_scalar):
+    """Single-token layer. layer_cache: {k, v} slices + shared pos/t."""
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k1, v1 = _qkv(h, lp, cfg, pos_scalar[None])
+    new_k, new_v, kv_pos = layer_cache["update"](k1, v1)
+    o = attention(q, new_k, new_v, q_pos=pos_scalar[None], kv_pos=kv_pos,
+                  window=cfg.sliding_window, chunk=0)
+    B = x.shape[0]
+    x = x + (o.reshape(B, 1, -1) @ lp["wo"]).astype(x.dtype)
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    y, _ = _ffn(h2, lp, cfg, dropless=True)
+    return x + y.astype(x.dtype), (new_k, new_v)
+
+
+@register_family("dense")
+@register_family("moe")
+@register_family("vlm")
+class DecoderLM(BaseModel):
+    """Dense / MoE / VLM-backbone decoder-only LM."""
+
+    def init(self, rng):
+        cfg = self.cfg
+        dtype = dt(cfg.param_dtype)
+        kg = KeyGen(rng)
+        keys = jax.random.split(kg(), cfg.n_layers)
+        layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(keys)
+        params = {
+            "embed": embed_init(kg(), (cfg.padded_vocab, cfg.d_model), dtype),
+            "layers": layers,
+            "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = dense_init(
+                kg(), (cfg.d_model, cfg.padded_vocab), dtype)
+        return params
+
+    # ------------------------------------------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(dt(cfg.compute_dtype))
+        if cfg.n_stub_embeds and "stub_embeds" in batch:
+            stub = batch["stub_embeds"].astype(x.dtype)
+            x = jnp.concatenate([stub, x], axis=1)
+        return shard_act(x, (BATCH, "model" if cfg.seq_parallel else None,
+                             None))
+
+    def _unembed(self, params, x):
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["unembed"])
+        return x @ w.astype(x.dtype)
+
+    def _run_layers(self, params, x, positions):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            x, aux = carry
+            x, kv, a = _layer_full(x, lp, cfg, positions)
+            return (x, aux + a), kv
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), kvs = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                     params["layers"])
+        return x, aux, kvs
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        x, aux, _ = self._run_layers(params, x, positions)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        if cfg.n_stub_embeds:  # loss only on text positions
+            x = x[:, cfg.n_stub_embeds:]
+        logits = self._unembed(params, x)
+        ce = softmax_xent(logits, batch["labels"])
+        total = ce + 0.01 * aux / max(cfg.n_layers, 1)
+        return total, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch_size, capacity):
+        cfg = self.cfg
+        c = init_kv_cache(batch_size, capacity, cfg.n_kv_heads, cfg.dh,
+                          dt(cfg.compute_dtype))
+        L = cfg.n_layers
+        return {
+            "k": jnp.zeros((L,) + c["k"].shape, c["k"].dtype),
+            "v": jnp.zeros((L,) + c["v"].shape, c["v"].dtype),
+            "pos": c["pos"],
+            "t": c["t"],
+        }
+
+    def prefill(self, params, batch, capacity=None):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        x, _, kvs = self._run_layers(params, x, positions)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = self._unembed(params, x[:, -1])
+        # build cache from stacked per-layer (k, v)
+        ks, vs = kvs
+        C = capacity or self.cache_capacity(S)
+        base = init_kv_cache(x.shape[0], C, cfg.n_kv_heads, cfg.dh,
+                             dt(cfg.compute_dtype))
+        filled = jax.vmap(lambda k, v: cache_prefill(base, k, v))(ks, vs)
+        cache = {"k": filled["k"], "v": filled["v"],
+                 "pos": filled["pos"][0], "t": filled["t"][0]}
+        return logits, cache
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        x = self._embed(params, {"tokens": batch["token"]})
+        t = cache["t"]
+        C = cache["k"].shape[2]
+        slot = t % C
+
+        def body(x, inp):
+            lp, ck, cv = inp
+
+            def update(k1, v1):
+                nk = jax.lax.dynamic_update_slice(
+                    ck, k1.astype(ck.dtype), (0, slot, 0, 0))
+                nv = jax.lax.dynamic_update_slice(
+                    cv, v1.astype(cv.dtype), (0, slot, 0, 0))
+                kv_pos = jax.lax.dynamic_update_slice(
+                    cache["pos"], t[None], (slot,))
+                return nk, nv, kv_pos
+
+            x, (nk, nv) = _layer_decode(
+                x, lp, {"update": update}, cfg, t)
+            return x, (nk, nv)
+
+        x, (nks, nvs) = jax.lax.scan(body, x,
+                                     (params["layers"], cache["k"], cache["v"]))
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = self._unembed(params, x[:, 0])
+        new_cache = {
+            "k": nks, "v": nvs,
+            "pos": jax.lax.dynamic_update_slice(cache["pos"], t[None], (slot,)),
+            "t": t + 1,
+        }
+        return logits, new_cache
+
+    # ------------------------------------------------------------------
+    def input_shapes(self, sc):
+        cfg = self.cfg
+        if not cfg.n_stub_embeds:
+            return super().input_shapes(sc)
+        B, S = sc.global_batch, sc.seq_len
+        f = jax.ShapeDtypeStruct
+        i32, cdt = jnp.int32, dt(cfg.compute_dtype)
+        stub = f((B, cfg.n_stub_embeds, cfg.d_model), cdt)
+        n_txt = S - cfg.n_stub_embeds
+        if sc.mode == "train":
+            return {"tokens": f((B, n_txt), i32), "labels": f((B, n_txt), i32),
+                    "stub_embeds": stub}
+        if sc.mode == "prefill":
+            return {"tokens": f((B, n_txt), i32), "stub_embeds": stub}
+        return {"token": f((B, 1), i32)}

@@ -1,0 +1,250 @@
+"""Encoder-decoder transformer backbone (Seamless-M4T-v2 style, audio).
+
+The modality frontend (mel-spectrogram + conv feature extractor) is a stub
+per the assignment: ``input_shapes`` supplies precomputed frame embeddings
+(B, enc_seq_len, d_model). The encoder is a bidirectional transformer; the
+decoder is causal with cross-attention. Cross-attention K/V are computed
+once at prefill and cached (enc length is fixed), so decode cost is
+self-attn KV + cross-attn reads.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .api import BaseModel, register_family
+from .attention import attention, cache_prefill, init_kv_cache
+from .common import (ArchConfig, KeyGen, apply_rope, dense_init, dt,
+                     embed_init, rmsnorm, softmax_xent)
+from .dense import _ffn, _qkv
+from ..sharding import shard_act
+
+BATCH = ("pod", "data")
+
+
+def _init_attn(kg, cfg, dtype, cross: bool = False):
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    return {
+        "wq": dense_init(kg(), (D, H * dh), dtype),
+        "wk": dense_init(kg(), (D, KV * dh), dtype),
+        "wv": dense_init(kg(), (D, KV * dh), dtype),
+        "wo": dense_init(kg(), (H * dh, D), dtype),
+    }
+
+
+def _init_enc_layer(key, cfg, dtype):
+    kg = KeyGen(key)
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        "attn": _init_attn(kg, cfg, dtype),
+        "mlp": {
+            "w_gate": dense_init(kg(), (D, F), dtype),
+            "w_up": dense_init(kg(), (D, F), dtype),
+            "w_down": dense_init(kg(), (F, D), dtype),
+        },
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    kg = KeyGen(key)
+    p = _init_enc_layer(key, cfg, dtype)
+    p["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+    p["xattn"] = _init_attn(kg, cfg, dtype, cross=True)
+    return p
+
+
+def _mha(ap, xq, xkv, cfg, *, q_pos, kv_pos, causal, rope_q=True,
+         rope_k=True, chunk=0):
+    B, Sq, D = xq.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = (xq @ ap["wq"]).reshape(B, Sq, H, dh)
+    k = (xkv @ ap["wk"]).reshape(B, xkv.shape[1], KV, dh)
+    v = (xkv @ ap["wv"]).reshape(B, xkv.shape[1], KV, dh)
+    if rope_q:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+    if rope_k:
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+    q = shard_act(q, (BATCH, None, "model", None))
+    o = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                  chunk=chunk)
+    return (o.reshape(B, Sq, H * dh) @ ap["wo"]).astype(xq.dtype), k, v
+
+
+def _enc_layer(x, lp, cfg, positions):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    o, _, _ = _mha(lp["attn"], h, h, cfg, q_pos=positions, kv_pos=positions,
+                   causal=False, chunk=cfg.attn_chunk)
+    x = x + o
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    y, _ = _ffn(h2, lp, cfg)
+    return x + y.astype(x.dtype)
+
+
+def _dec_layer_full(x, enc_out, lp, cfg, positions, enc_positions):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    o, k, v = _mha(lp["attn"], h, h, cfg, q_pos=positions, kv_pos=positions,
+                   causal=True, chunk=cfg.attn_chunk)
+    x = x + o
+    hx = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
+    ox, xk, xv = _mha(lp["xattn"], hx, enc_out, cfg, q_pos=positions,
+                      kv_pos=enc_positions, causal=False, rope_q=False,
+                      rope_k=False, chunk=cfg.attn_chunk)
+    x = x + ox
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    y, _ = _ffn(h2, lp, cfg)
+    return x + y.astype(x.dtype), (k, v, xk, xv)
+
+
+@register_family("encdec")
+class EncDecLM(BaseModel):
+    def init(self, rng):
+        cfg = self.cfg
+        dtype = dt(cfg.param_dtype)
+        kg = KeyGen(rng)
+        ek = jax.random.split(kg(), cfg.n_enc_layers)
+        dk = jax.random.split(kg(), cfg.n_dec_layers)
+        return {
+            "embed": embed_init(kg(), (cfg.padded_vocab, cfg.d_model), dtype),
+            "enc_layers": jax.vmap(
+                lambda k: _init_enc_layer(k, cfg, dtype))(ek),
+            "dec_layers": jax.vmap(
+                lambda k: _init_dec_layer(k, cfg, dtype))(dk),
+            "ln_enc": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+            "unembed": dense_init(kg(), (cfg.d_model, cfg.padded_vocab), dtype),
+        }
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(dt(cfg.compute_dtype))
+        x = shard_act(x, (BATCH, None, None))
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, lp):
+            return _enc_layer(x, lp, cfg, positions), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return rmsnorm(x, params["ln_enc"], cfg.norm_eps)
+
+    def _decode_full(self, params, enc_out, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(dt(cfg.compute_dtype))
+        x = shard_act(x, (BATCH, None, None))
+        positions = jnp.arange(x.shape[1])
+        enc_positions = jnp.arange(enc_out.shape[1])
+
+        def body(x, lp):
+            x, kvs = _dec_layer_full(x, enc_out, lp, cfg, positions,
+                                     enc_positions)
+            return x, kvs
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, kvs = jax.lax.scan(body, x, params["dec_layers"])
+        return rmsnorm(x, params["ln_f"], cfg.norm_eps), kvs
+
+    def loss(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        x, _ = self._decode_full(params, enc_out, batch["tokens"])
+        logits = x @ params["unembed"].astype(x.dtype)
+        ce = softmax_xent(logits, batch["labels"])
+        return ce, {"ce": ce}
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch_size, capacity):
+        cfg = self.cfg
+        L = cfg.n_dec_layers
+        cdt = dt(cfg.compute_dtype)
+        Se = cfg.enc_seq_len
+        KV, dh = cfg.n_kv_heads, cfg.dh
+        return {
+            "k": jnp.zeros((L, batch_size, capacity, KV, dh), cdt),
+            "v": jnp.zeros((L, batch_size, capacity, KV, dh), cdt),
+            "xk": jnp.zeros((L, batch_size, Se, KV, dh), cdt),
+            "xv": jnp.zeros((L, batch_size, Se, KV, dh), cdt),
+            "pos": jnp.full((capacity,), -1, jnp.int32),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def prefill(self, params, batch, capacity=None):
+        cfg = self.cfg
+        B, S = batch["tokens"].shape
+        enc_out = self.encode(params, batch["frames"])
+        x, kvs = self._decode_full(params, enc_out, batch["tokens"])
+        logits = x[:, -1] @ params["unembed"].astype(x.dtype)
+        ks, vs, xks, xvs = kvs
+        C = capacity or self.cache_capacity(S)
+        base = init_kv_cache(B, C, cfg.n_kv_heads, cfg.dh,
+                             dt(cfg.compute_dtype))
+        filled = jax.vmap(lambda k, v: cache_prefill(base, k, v))(ks, vs)
+        cdt = dt(cfg.compute_dtype)
+        cache = {"k": filled["k"], "v": filled["v"],
+                 "xk": xks.astype(cdt), "xv": xvs.astype(cdt),
+                 "pos": filled["pos"][0], "t": filled["t"][0]}
+        return logits, cache
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["token"]].astype(dt(cfg.compute_dtype))
+        t = cache["t"]
+        C = cache["k"].shape[2]
+        slot = t % C
+        new_pos = jax.lax.dynamic_update_slice(cache["pos"], t[None], (slot,))
+        enc_positions = jnp.arange(cfg.enc_seq_len)
+
+        def body(x, inp):
+            lp, ck, cv, xk, xv = inp
+            B = x.shape[0]
+            H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            ap = lp["attn"]
+            q = apply_rope((h @ ap["wq"]).reshape(B, 1, H, dh), t[None],
+                           cfg.rope_theta)
+            k1 = apply_rope((h @ ap["wk"]).reshape(B, 1, KV, dh), t[None],
+                            cfg.rope_theta)
+            v1 = (h @ ap["wv"]).reshape(B, 1, KV, dh)
+            nk = jax.lax.dynamic_update_slice(ck, k1.astype(ck.dtype),
+                                              (0, slot, 0, 0))
+            nv = jax.lax.dynamic_update_slice(cv, v1.astype(cv.dtype),
+                                              (0, slot, 0, 0))
+            o = attention(q, nk, nv, q_pos=t[None], kv_pos=new_pos)
+            x = x + (o.reshape(B, 1, H * dh) @ ap["wo"]).astype(x.dtype)
+            hx = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
+            xp = lp["xattn"]
+            qx = (hx @ xp["wq"]).reshape(B, 1, H, dh)
+            ox = attention(qx, xk, xv, q_pos=t[None], kv_pos=enc_positions,
+                           causal=False)
+            x = x + (ox.reshape(B, 1, H * dh) @ xp["wo"]).astype(x.dtype)
+            h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            y, _ = _ffn(h2, lp, cfg)
+            return x + y.astype(x.dtype), (nk, nv)
+
+        x, (nks, nvs) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = x[:, 0] @ params["unembed"].astype(x.dtype)
+        new_cache = dict(cache)
+        new_cache.update({"k": nks, "v": nvs, "pos": new_pos, "t": t + 1})
+        return logits, new_cache
+
+    # ------------------------------------------------------------------
+    def input_shapes(self, sc):
+        cfg = self.cfg
+        B, S = sc.global_batch, sc.seq_len
+        f = jax.ShapeDtypeStruct
+        i32, cdt = jnp.int32, dt(cfg.compute_dtype)
+        frames = f((B, cfg.enc_seq_len, cfg.d_model), cdt)
+        if sc.mode == "train":
+            return {"frames": frames, "tokens": f((B, S), i32),
+                    "labels": f((B, S), i32)}
+        if sc.mode == "prefill":
+            return {"frames": frames, "tokens": f((B, S), i32)}
+        return {"token": f((B, 1), i32)}

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD) block — chunked state-space duality formulation.
+
+TPU adaptation: the selective scan is computed chunkwise — intra-chunk
+contributions are dense (Q x Q) matmuls on the MXU, inter-chunk state is a
+short ``lax.scan`` over n_chunks carries of (H, N, P). This is the standard
+SSD decomposition (Dao & Gu 2024) mapped to jnp einsums instead of a Triton
+kernel. Single-token decode uses the exact recurrence with a carried
+(B, H, N, P) state and a depthwise-conv ring buffer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, KeyGen, dense_init, groupnorm_heads
+
+G = 1  # B/C projection groups (ngroups=1, standard for mamba2 LMs)
+
+
+def init_mamba_layer(key, cfg: ArchConfig, dtype):
+    kg = KeyGen(key)
+    D, di, H, N, W = (cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state,
+                      cfg.ssm_conv_width)
+    return {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "w_in_z": dense_init(kg(), (D, di), dtype),
+        "w_in_x": dense_init(kg(), (D, di), dtype),
+        "w_B": dense_init(kg(), (D, G * N), dtype),
+        "w_C": dense_init(kg(), (D, G * N), dtype),
+        "w_dt": dense_init(kg(), (D, H), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "conv_x": dense_init(kg(), (W, di), dtype),
+        "conv_B": dense_init(kg(), (W, G * N), dtype),
+        "conv_C": dense_init(kg(), (W, G * N), dtype),
+        "ssm_norm": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(kg(), (di, D), dtype),
+    }
+
+
+def causal_conv(x, w):
+    """Depthwise causal conv: x (B, L, C), w (W, C); y_t = sum_j w[j] x_{t-W+1+j}."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(W):
+        y = y + pad[:, j:j + x.shape[1], :].astype(jnp.float32) * w[j].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def conv_step(window, w):
+    """window: (B, W, C) — last W inputs (current last); w: (W, C)."""
+    return jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(window.dtype)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x:  (B, L, H, P)   inputs (already dt-free; dt applied inside)
+    dt: (B, L, H)      softplus'd step sizes
+    A:  (H,)           negative decay rates
+    Bm, Cm: (B, L, G, N)
+    Returns (y (B, L, H, P), final_state (B, H, N, P)).
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    if L % chunk:  # pad with dt=0 steps (exact identity for the recurrence)
+        pad = chunk - L % chunk
+        padt = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        y, s = ssd_chunked(padt(x), padt(dt), A, padt(Bm), padt(Cm), chunk,
+                           initial_state)
+        return y[:, :L], s
+    nc, Q = L // chunk, chunk
+    hg = H // G  # heads per group
+
+    def r(t, tail):  # reshape (B, L, ...) -> (B, nc, Q, ...)
+        return t.reshape((Bsz, nc, Q) + tail)
+
+    xg = r(x, (G, hg, P))
+    dtg = r(dt, (G, hg))
+    Bc = r(Bm, (G, N))
+    Cc = r(Cm, (G, N))
+    dA = dtg * A.reshape(G, hg)  # (B, nc, Q, G, hg), negative
+    cs = jnp.cumsum(dA, axis=2)  # inclusive within-chunk cumsum
+
+    # ---- intra-chunk (diagonal blocks) ----
+    # scores[b,c,q,r,g] = C_q . B_r
+    scores = jnp.einsum("bcqgn,bcrgn->bcqrg", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    # decay[b,c,q,r,g,h] = exp(cs_q - cs_r) for r <= q else 0
+    gap = cs[:, :, :, None] - cs[:, :, None, :]  # (B,nc,Q,Q,G,hg)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: masked entries have gap > 0 -> exp overflows and the
+    # where() backward turns inf * 0 into NaN gradients
+    gap = jnp.where(tri[None, None, :, :, None, None], gap, -1e30)
+    decay = jnp.exp(gap)
+    w_qr = scores[..., None] * decay * dtg[:, :, None, :, :, :]  # dt at r
+    y_diag = jnp.einsum("bcqrgh,bcrghp->bcqghp", w_qr,
+                        xg.astype(jnp.float32))
+
+    # ---- chunk states ----
+    tail = cs[:, :, -1:, :, :] - cs  # decay from q to chunk end (>=0 exponent? negative)
+    st = jnp.einsum("bcqgh,bcqgn,bcqghp->bcghnp",
+                    jnp.exp(tail) * dtg, Bc.astype(jnp.float32),
+                    xg.astype(jnp.float32))  # (B, nc, G, hg, N, P)
+    total = jnp.exp(cs[:, :, -1, :, :])  # (B, nc, G, hg) chunk total decay
+
+    # ---- inter-chunk scan ----
+    if initial_state is None:
+        s0 = jnp.zeros((Bsz, G, hg, N, P), jnp.float32)
+    else:
+        s0 = initial_state.reshape(Bsz, G, hg, N, P).astype(jnp.float32)
+
+    def body(s_prev, inp):
+        st_c, tot_c = inp  # (B,G,hg,N,P), (B,G,hg)
+        s_new = s_prev * tot_c[..., None, None] + st_c
+        return s_new, s_prev  # emit state *before* this chunk
+
+    (s_fin, s_before) = jax.lax.scan(
+        body, s0, (jnp.moveaxis(st, 1, 0), jnp.moveaxis(total, 1, 0)))
+    s_before = jnp.moveaxis(s_before, 0, 1)  # (B, nc, G, hg, N, P)
+
+    # ---- inter-chunk contribution ----
+    y_off = jnp.einsum("bcqgn,bcghnp,bcqgh->bcqghp",
+                       Cc.astype(jnp.float32), s_before, jnp.exp(cs))
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y.astype(x.dtype), s_fin.reshape(Bsz, H, N, P).astype(x.dtype)
+
+
+def ssd_step(state, x1, dt1, A, B1, C1):
+    """Exact single-step recurrence.
+
+    state: (B, H, N, P); x1: (B, H, P); dt1: (B, H); B1, C1: (B, G, N).
+    """
+    Bsz, H, N, P = state.shape
+    hg = H // G
+    dA = jnp.exp(dt1.astype(jnp.float32) * A)  # (B, H)
+    Bh = jnp.repeat(B1, hg, axis=1).astype(jnp.float32)  # (B, H, N)
+    Ch = jnp.repeat(C1, hg, axis=1).astype(jnp.float32)
+    upd = (dt1.astype(jnp.float32)[..., None, None]
+           * Bh[..., :, None] * x1.astype(jnp.float32)[..., None, :])
+    new = state.astype(jnp.float32) * dA[..., None, None] + upd
+    y = jnp.einsum("bhnp,bhn->bhp", new, Ch)
+    return new.astype(state.dtype), y.astype(x1.dtype)
+
+
+def mamba_seq(lp, x, cfg: ArchConfig, initial_state=None):
+    """Full-sequence Mamba2 mixer on pre-normed input x (B, L, D)."""
+    Bsz, L, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = x @ lp["w_in_z"]
+    xr = causal_conv(x @ lp["w_in_x"], lp["conv_x"])
+    xr = jax.nn.silu(xr)
+    Bm = jax.nn.silu(causal_conv(x @ lp["w_B"], lp["conv_B"]))
+    Cm = jax.nn.silu(causal_conv(x @ lp["w_C"], lp["conv_C"]))
+    dtv = jax.nn.softplus(
+        (x @ lp["w_dt"]).astype(jnp.float32) + lp["dt_bias"])  # (B, L, H)
+    A = -jnp.exp(lp["A_log"])  # (H,)
+    xh = xr.reshape(Bsz, L, H, P)
+    y, s_fin = ssd_chunked(xh, dtv, A, Bm.reshape(Bsz, L, G, N),
+                           Cm.reshape(Bsz, L, G, N), cfg.ssm_chunk,
+                           initial_state)
+    y = y + lp["D_skip"].reshape(H, 1) * xh.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).reshape(Bsz, L, H, P)
+    y = groupnorm_heads(y, lp["ssm_norm"].reshape(H, P))
+    out = y.reshape(Bsz, L, cfg.d_inner) @ lp["w_out"]
+    return out.astype(x.dtype), s_fin
+
+
+def mamba_step(lp, x, state, conv_buf, cfg: ArchConfig):
+    """Single-token Mamba2 mixer.
+
+    x: (B, 1, D); state: (B, H, N, P); conv_buf: dict of last W-1 raw conv
+    inputs for x/B/C. Returns (out (B,1,D), state, conv_buf).
+    """
+    Bsz = x.shape[0]
+    H, P, N, W = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv_width
+    x0 = x[:, 0]
+    z = x0 @ lp["w_in_z"]
+    xi = x0 @ lp["w_in_x"]
+    Bi = x0 @ lp["w_B"]
+    Ci = x0 @ lp["w_C"]
+
+    def roll(buf, new):  # buf (B, W-1, C) -> window (B, W, C), new buf
+        win = jnp.concatenate([buf, new[:, None]], axis=1)
+        return win, win[:, 1:]
+
+    win_x, nb_x = roll(conv_buf["x"], xi)
+    win_B, nb_B = roll(conv_buf["B"], Bi)
+    win_C, nb_C = roll(conv_buf["C"], Ci)
+    xr = jax.nn.silu(conv_step(win_x, lp["conv_x"]))
+    Bm = jax.nn.silu(conv_step(win_B, lp["conv_B"]))
+    Cm = jax.nn.silu(conv_step(win_C, lp["conv_C"]))
+    dtv = jax.nn.softplus(
+        (x0 @ lp["w_dt"]).astype(jnp.float32) + lp["dt_bias"])  # (B, H)
+    A = -jnp.exp(lp["A_log"])
+    new_state, y = ssd_step(state, xr.reshape(Bsz, H, P), dtv, A,
+                            Bm.reshape(Bsz, G, N), Cm.reshape(Bsz, G, N))
+    y = y.astype(jnp.float32) + lp["D_skip"].reshape(H, 1) * xr.reshape(Bsz, H, P).astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).reshape(Bsz, H, P)
+    y = groupnorm_heads(y, lp["ssm_norm"].reshape(H, P))
+    out = (y.reshape(Bsz, cfg.d_inner) @ lp["w_out"]).astype(x.dtype)
+    return out[:, None], new_state, {"x": nb_x, "B": nb_B, "C": nb_C}

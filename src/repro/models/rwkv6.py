@@ -1,0 +1,301 @@
+"""RWKV6 ("Finch") — attention-free RNN LM with data-dependent decay.
+
+Time-mixing uses the WKV6 recurrence per head (P = head size):
+    o_t[j] = sum_i r_t[i] * (S_t[i,j] + u[i] k_t[i] v_t[j])
+    S_{t+1}[i,j] = exp(logw_t[i]) * S_t[i,j] + k_t[i] v_t[j]
+with per-channel decay logw_t = -exp(w0 + lora(x_t)) (data-dependent), and
+ddlerp token-shift mixing for the r/k/v/w/g branches (arXiv:2404.05892).
+
+Two sequence-mode evaluators:
+  * ``wkv_scan``    — exact per-timestep ``lax.scan`` (baseline / oracle)
+  * ``wkv_chunked`` — chunkwise matmul formulation (MXU-friendly; decays
+    accumulated in log space within a chunk, state carried across chunks).
+The chunked path is the TPU adaptation of the CUDA wkv kernel and is the
+subject of the rwkv6 §Perf hillclimb.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .api import BaseModel, register_family
+from .common import (ArchConfig, KeyGen, dense_init, dt, embed_init,
+                     groupnorm_heads, rmsnorm, softmax_xent)
+from ..sharding import shard_act
+
+BATCH = ("pod", "data")
+N_MIX = 5  # r, k, v, w, g ddlerp branches
+
+
+def _init_layer(key, cfg: ArchConfig, dtype):
+    kg = KeyGen(key)
+    D, F, R = cfg.d_model, cfg.d_ff, cfg.rwkv_lora_dim
+    H, P = cfg.n_heads, cfg.dh
+    return {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        # ddlerp token-shift mixing
+        "maa_x": jnp.zeros((D,), jnp.float32),
+        "maa_base": jnp.zeros((N_MIX, D), jnp.float32),
+        "maa_w1": jnp.zeros((D, N_MIX * R), jnp.float32),
+        "maa_w2": dense_init(kg(), (N_MIX, R, D), jnp.float32, in_axis=-2),
+        # data-dependent decay
+        "decay_w0": jnp.full((H, P), -6.0, jnp.float32).reshape(H, P),
+        "decay_lora1": dense_init(kg(), (D, 2 * R), jnp.float32),
+        "decay_lora2": dense_init(kg(), (2 * R, D), jnp.float32),
+        "first_u": jnp.zeros((H, P), jnp.float32),
+        # projections
+        "w_r": dense_init(kg(), (D, D), dtype),
+        "w_kk": dense_init(kg(), (D, D), dtype),
+        "w_vv": dense_init(kg(), (D, D), dtype),
+        "w_g": dense_init(kg(), (D, D), dtype),
+        "w_o2": dense_init(kg(), (D, D), dtype),
+        "g_norm": jnp.ones((D,), jnp.float32),
+        # channel mix
+        "ch_maa_k": jnp.zeros((D,), jnp.float32),
+        "ch_maa_r": jnp.zeros((D,), jnp.float32),
+        "w_ch_k": dense_init(kg(), (D, F), dtype),
+        "w_ch_v": dense_init(kg(), (F, D), dtype),
+        "w_ch_r": dense_init(kg(), (D, D), dtype),
+    }
+
+
+def _shift(x, x_prev):
+    """x: (B, L, D); x_prev: (B, D) state (last token of previous segment)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(lp, x, xs):
+    """Data-dependent lerp producing the 5 mixed branch inputs."""
+    dx = xs - x
+    xxx = (x + dx * lp["maa_x"]).astype(x.dtype)
+    r = lp["maa_w1"].shape[1] // N_MIX
+    lo = jnp.tanh(xxx.astype(jnp.float32) @ lp["maa_w1"])
+    lo = lo.reshape(x.shape[:-1] + (N_MIX, r))
+    mixes = lp["maa_base"] + jnp.einsum("...kr,krd->...kd", lo, lp["maa_w2"])
+    out = x[..., None, :] + dx[..., None, :] * mixes.astype(x.dtype)
+    return [out[..., i, :] for i in range(N_MIX)]  # w, k, v, r, g
+
+
+def wkv_scan(r, k, v, logw, u, initial_state=None):
+    """Exact recurrence. r/k/v/logw: (B, L, H, P); u: (H, P).
+    Returns (o (B, L, H, P) f32, final_state (B, H, P, P) f32)."""
+    B, L, H, P = r.shape
+    s0 = (jnp.zeros((B, H, P, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    rT = jnp.moveaxis(r.astype(jnp.float32), 1, 0)
+    kT = jnp.moveaxis(k.astype(jnp.float32), 1, 0)
+    vT = jnp.moveaxis(v.astype(jnp.float32), 1, 0)
+    wT = jnp.moveaxis(logw.astype(jnp.float32), 1, 0)
+
+    def body(S, inp):
+        rt, kt, vt, wt = inp  # (B, H, P)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, P, P)
+        o = jnp.einsum("bhi,bhij->bhj", rt,
+                       S + (u * kt)[..., :, None] * vt[..., None, :])
+        S = jnp.exp(wt)[..., :, None] * S + kv
+        return S, o
+
+    S, oT = jax.lax.scan(body, s0, (rT, kT, vT, wT))
+    return jnp.moveaxis(oT, 0, 1), S
+
+
+def wkv_step(S, rt, kt, vt, logwt, u):
+    """One decode step. S: (B,H,P,P) f32; rt/kt/vt/logwt: (B,H,P)."""
+    S = S.astype(jnp.float32)
+    rt, kt, vt, wt = (a.astype(jnp.float32) for a in (rt, kt, vt, logwt))
+    kv = kt[..., :, None] * vt[..., None, :]
+    o = jnp.einsum("bhi,bhij->bhj", rt, S + (u * kt)[..., :, None] * vt[..., None, :])
+    S = jnp.exp(wt)[..., :, None] * S + kv
+    return S, o
+
+
+def wkv_chunked(r, k, v, logw, u, initial_state=None, chunk: int = 32):
+    """Chunkwise WKV6: intra-chunk via (Q x Q) matmuls with per-channel
+    log-space decay factored into r'/k', inter-chunk via state carry.
+    Valid because within a short chunk |cumsum(logw)| is moderate; we clamp
+    per-step logw at -8 (exp(-8) ~ 3e-4 decay floor) to bound the exponent
+    spread, matching fla's chunked rwkv6 implementation."""
+    B, L, H, P = r.shape
+    if L % chunk:
+        return wkv_scan(r, k, v, logw, u, initial_state)
+    nc, Q = L // chunk, chunk
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(B, nc, Q, H, P)
+    kc = k.astype(f32).reshape(B, nc, Q, H, P)
+    vc = v.astype(f32).reshape(B, nc, Q, H, P)
+    wc = jnp.clip(logw.astype(f32), -8.0, -1e-6).reshape(B, nc, Q, H, P)
+    cs = jnp.cumsum(wc, axis=2)  # inclusive
+    total = cs[:, :, -1]  # (B, nc, H, P)
+    # decay of state contribution: for output at q, state decayed by
+    # exp(cs[q-1]) = exp(cs[q] - w[q]); define cs_ex = cs - wc (exclusive)
+    cs_ex = cs - wc
+    # intra-chunk: o[q] += sum_{q2<q} (r[q]*exp(cs_ex[q])) . (k[q2]*exp(-cs[q2])) v[q2]
+    # the true pair exponent cs_ex[q] - cs[q2] is always <= 0; the
+    # factorization splits it into one negative and one *positive* half —
+    # shift both by the chunk-midpoint cumsum so each half's magnitude is
+    # bounded by (Q/2)*|w|_max (finite in f32 for Q<=32 with the -8 clamp)
+    mid = cs[:, :, Q // 2:Q // 2 + 1]
+    r_dec = rc * jnp.exp(cs_ex - mid)
+    k_dec = kc * jnp.exp(mid - cs)
+    att = jnp.einsum("bcqhp,bcrhp->bcqrh", r_dec, k_dec)
+    tri = jnp.tril(jnp.ones((Q, Q), bool), k=-1)  # strictly lower
+    att = jnp.where(tri[None, None, :, :, None], att, 0.0)
+    o_intra = jnp.einsum("bcqrh,bcrhp->bcqhp", att, vc)
+    # bonus (current token) term
+    o_bonus = jnp.einsum("bcqhp,bcqhp->bcqh", rc, u * kc)[..., None] * vc
+    # inter-chunk: state before chunk, decayed to q by exp(cs_ex[q])
+    kv_c = jnp.einsum("bcqhp,bcqhj->bchpj", kc * jnp.exp(total[:, :, None] - cs), vc)
+    s0 = (jnp.zeros((B, H, P, P), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def body(S, inp):
+        kv, tot = inp  # (B,H,P,P), (B,H,P)
+        S_new = jnp.exp(tot)[..., None] * S + kv
+        return S_new, S
+
+    S_fin, S_before = jax.lax.scan(
+        body, s0, (jnp.moveaxis(kv_c, 1, 0), jnp.moveaxis(total, 1, 0)))
+    S_before = jnp.moveaxis(S_before, 0, 1)  # (B, nc, H, P, P)
+    o_state = jnp.einsum("bcqhp,bchpj->bcqhj", rc * jnp.exp(cs_ex), S_before)
+    o = (o_intra + o_bonus + o_state).reshape(B, L, H, P)
+    return o, S_fin
+
+
+def time_mix(lp, x, cfg: ArchConfig, x_prev, wkv_state, mode: str):
+    """x: (B, L, D) pre-normed. Returns (out, new_x_prev, new_wkv_state)."""
+    B, L, D = x.shape
+    H, P = cfg.n_heads, cfg.dh
+    xs = _shift(x, x_prev)
+    xw, xk, xv, xr, xg = _ddlerp(lp, x, xs)
+    r = (xr @ lp["w_r"]).reshape(B, L, H, P)
+    k = (xk @ lp["w_kk"]).reshape(B, L, H, P)
+    v = (xv @ lp["w_vv"]).reshape(B, L, H, P)
+    g = jax.nn.silu((xg @ lp["w_g"]).astype(jnp.float32))
+    lo = jnp.tanh(xw.astype(jnp.float32) @ lp["decay_lora1"]) @ lp["decay_lora2"]
+    w_raw = lp["decay_w0"].reshape(D) + lo  # (B, L, D)
+    logw = -jnp.exp(w_raw).reshape(B, L, H, P)
+    r = shard_act(r, (BATCH, None, "model", None))
+    k = shard_act(k, (BATCH, None, "model", None))
+    if mode == "chunked":
+        o, S = wkv_chunked(r, k, v, logw, lp["first_u"], wkv_state,
+                           cfg.ssm_chunk)
+    else:
+        o, S = wkv_scan(r, k, v, logw, lp["first_u"], wkv_state)
+    o = groupnorm_heads(o, jnp.ones((H, P), jnp.float32))
+    o = o.reshape(B, L, D) * lp["g_norm"] * g
+    out = o.astype(x.dtype) @ lp["w_o2"]
+    return out.astype(x.dtype), x[:, -1], S
+
+
+def channel_mix(lp, x, x_prev):
+    xs = _shift(x, x_prev)
+    dx = xs - x
+    xk = (x + dx * lp["ch_maa_k"]).astype(x.dtype)
+    xr = (x + dx * lp["ch_maa_r"]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ lp["w_ch_k"]))
+    out = jax.nn.sigmoid((xr @ lp["w_ch_r"]).astype(jnp.float32)).astype(x.dtype) \
+        * (k @ lp["w_ch_v"])
+    return out, x[:, -1]
+
+
+def _layer(lp, x, cfg, state, mode):
+    """state: dict(S, x_tm, x_cm). Returns (x, new_state)."""
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    o, x_tm, S = time_mix(lp, h, cfg, state["x_tm"], state["S"], mode)
+    x = x + o
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    o2, x_cm = channel_mix(lp, h2, state["x_cm"])
+    x = x + o2
+    x = shard_act(x, (BATCH, None, None))
+    return x, {"S": S, "x_tm": x_tm, "x_cm": x_cm}
+
+
+@register_family("rwkv")
+class RWKV6(BaseModel):
+    seq_mode = "chunked"  # chunked | scan  (hillclimb knob)
+
+    def init(self, rng):
+        cfg = self.cfg
+        dtype = dt(cfg.param_dtype)
+        kg = KeyGen(rng)
+        keys = jax.random.split(kg(), cfg.n_layers)
+        layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(keys)
+        return {
+            "embed": embed_init(kg(), (cfg.padded_vocab, cfg.d_model), dtype),
+            "layers": layers,
+            "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+            "unembed": dense_init(kg(), (cfg.d_model, cfg.padded_vocab), dtype),
+        }
+
+    def _zero_state(self, B):
+        cfg = self.cfg
+        H, P, D = cfg.n_heads, cfg.dh, cfg.d_model
+        cdt = dt(cfg.compute_dtype)
+        return {
+            "S": jnp.zeros((B, H, P, P), jnp.float32),
+            "x_tm": jnp.zeros((B, D), cdt),
+            "x_cm": jnp.zeros((B, D), cdt),
+        }
+
+    def _run(self, params, x, state_stack, mode):
+        cfg = self.cfg
+
+        def body(x, inp):
+            lp, st = inp
+            x, new_st = _layer(lp, x, cfg, st, mode)
+            return x, new_st
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, new_states = jax.lax.scan(body, x, (params["layers"], state_stack))
+        return x, new_states
+
+    def _stack_zero(self, B):
+        z = self._zero_state(B)
+        L = self.cfg.n_layers
+        return jax.tree_util.tree_map(
+            lambda a: jnp.zeros((L,) + a.shape, a.dtype), z)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(dt(cfg.compute_dtype))
+        x = shard_act(x, (BATCH, None, None))
+        x, _ = self._run(params, x, self._stack_zero(x.shape[0]),
+                         self.seq_mode)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = x @ params["unembed"].astype(x.dtype)
+        ce = softmax_xent(logits, batch["labels"])
+        return ce, {"ce": ce}
+
+    # -- serving --------------------------------------------------------
+    def init_cache(self, batch_size, capacity):
+        st = self._stack_zero(batch_size)
+        st["t"] = jnp.zeros((), jnp.int32)
+        return st
+
+    def cache_capacity(self, seq_len):
+        return 1  # constant-size recurrent state
+
+    def prefill(self, params, batch, capacity=None):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(dt(cfg.compute_dtype))
+        x, states = self._run(params, x, self._stack_zero(x.shape[0]),
+                              self.seq_mode)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = x[:, -1] @ params["unembed"].astype(x.dtype)
+        states["t"] = jnp.asarray(batch["tokens"].shape[1], jnp.int32)
+        return logits, states
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        t = cache.get("t", jnp.zeros((), jnp.int32))
+        x = params["embed"][batch["token"]].astype(dt(cfg.compute_dtype))
+        states = {k: v for k, v in cache.items() if k != "t"}
+        x, new_states = self._run(params, x, states, "scan")
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = x[:, 0] @ params["unembed"].astype(x.dtype)
+        new_states["t"] = t + 1
+        return logits, new_states

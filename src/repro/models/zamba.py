@@ -1,0 +1,240 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a *shared* full-attention
+transformer block (attention + MLP, one set of weights) applied after every
+``cfg.attn_every``-th Mamba2 layer (arXiv:2411.15242).
+
+Deviation noted in DESIGN.md: Zamba2's per-invocation LoRA adapters and
+initial-embedding concat are omitted; the shared block is applied to the
+running residual stream with plain weight reuse.
+
+Cache layout (decode): per-layer SSM state + conv ring buffers, plus a
+stacked KV cache with one slot-group per shared-attention application
+(``A = n_layers // attn_every``). Each application keeps its own K/V
+because activations differ even though weights are shared.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .api import BaseModel, register_family
+from .common import (ArchConfig, KeyGen, dense_init, dt, embed_init, rmsnorm,
+                     softmax_xent)
+from .dense import _init_layer as init_attn_layer
+from .dense import _layer_full as attn_layer_full
+from .dense import _qkv
+from .attention import attention, cache_prefill, init_kv_cache
+from .mamba2 import init_mamba_layer, mamba_seq, mamba_step
+from ..sharding import shard_act
+
+BATCH = ("pod", "data")
+
+
+@register_family("hybrid")
+class Zamba2(BaseModel):
+    def _attn_layer_ids(self) -> np.ndarray:
+        cfg = self.cfg
+        if not cfg.attn_every:
+            return np.zeros((0,), np.int32)
+        ids = np.arange(cfg.attn_every - 1, cfg.n_layers, cfg.attn_every)
+        return ids.astype(np.int32)
+
+    @property
+    def n_attn_apps(self) -> int:
+        return len(self._attn_layer_ids())
+
+    def init(self, rng):
+        cfg = self.cfg
+        dtype = dt(cfg.param_dtype)
+        kg = KeyGen(rng)
+        keys = jax.random.split(kg(), cfg.n_layers)
+        layers = jax.vmap(lambda k: init_mamba_layer(k, cfg, dtype))(keys)
+        params = {
+            "embed": embed_init(kg(), (cfg.padded_vocab, cfg.d_model), dtype),
+            "layers": layers,
+            "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+            "unembed": dense_init(kg(), (cfg.d_model, cfg.padded_vocab), dtype),
+        }
+        if self.n_attn_apps:
+            params["shared"] = init_attn_layer(kg(), cfg, dtype)
+        return params
+
+    def _flags(self):
+        f = np.zeros((self.cfg.n_layers,), bool)
+        f[self._attn_layer_ids()] = True
+        return jnp.asarray(f)
+
+    # ------------------------------------------------------------------
+    def _run_full(self, params, x, positions, collect: bool = False):
+        """Train/prefill pass via scan-over-layers.
+
+        With ``collect`` the scan also emits per-layer (k, v, ssm_state,
+        conv tails) for cache construction (zeros at non-attn layers for
+        k/v; the attn rows are selected by static layer ids afterwards).
+        """
+        cfg = self.cfg
+        shared = params.get("shared")
+        W = cfg.ssm_conv_width
+
+        def body(x, inp):
+            lp, flag = inp
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            o, s_fin = mamba_seq(lp, h, cfg)
+            if collect:
+                cx = (h @ lp["w_in_x"])[:, -(W - 1):]
+                cB = (h @ lp["w_B"])[:, -(W - 1):]
+                cC = (h @ lp["w_C"])[:, -(W - 1):]
+            x = x + o
+
+            if shared is not None:
+                def with_attn(x):
+                    y, kv, _aux = attn_layer_full(x, shared, cfg, positions)
+                    return (y,) + kv
+
+                def without(x):
+                    B, S = x.shape[:2]
+                    z = jnp.zeros((B, S, cfg.n_kv_heads, cfg.dh),
+                                  dt(cfg.compute_dtype))
+                    return x, z, z
+
+                x, k, v = jax.lax.cond(flag, with_attn, without, x)
+            else:
+                k = v = jnp.zeros((), dt(cfg.compute_dtype))
+            x = shard_act(x, (BATCH, None, None))
+            ys = (k, v, s_fin, cx, cB, cC) if collect else None
+            return x, ys
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, ys = jax.lax.scan(body, x, (params["layers"], self._flags()))
+        return x, ys
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(dt(cfg.compute_dtype))
+        x = shard_act(x, (BATCH, None, None))
+        positions = jnp.arange(x.shape[1])
+        x, _ = self._run_full(params, x, positions)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = x @ params["unembed"].astype(x.dtype)
+        ce = softmax_xent(logits, batch["labels"])
+        return ce, {"ce": ce}
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch_size, capacity):
+        cfg = self.cfg
+        L, H, N, P = (cfg.n_layers, cfg.ssm_heads, cfg.ssm_state,
+                      cfg.ssm_head_dim)
+        W = cfg.ssm_conv_width
+        cdt = dt(cfg.compute_dtype)
+        cache = {
+            "ssm": jnp.zeros((L, batch_size, H, N, P), cdt),
+            "conv_x": jnp.zeros((L, batch_size, W - 1, cfg.d_inner), cdt),
+            "conv_B": jnp.zeros((L, batch_size, W - 1, N), cdt),
+            "conv_C": jnp.zeros((L, batch_size, W - 1, N), cdt),
+            "t": jnp.zeros((), jnp.int32),
+        }
+        A = self.n_attn_apps
+        if A:
+            cache["attn_k"] = jnp.zeros(
+                (A, batch_size, capacity, cfg.n_kv_heads, cfg.dh), cdt)
+            cache["attn_v"] = jnp.zeros_like(cache["attn_k"])
+            cache["attn_pos"] = jnp.full((capacity,), -1, jnp.int32)
+        return cache
+
+    def prefill(self, params, batch, capacity=None):
+        cfg = self.cfg
+        B, S = batch["tokens"].shape
+        x = params["embed"][batch["tokens"]].astype(dt(cfg.compute_dtype))
+        positions = jnp.arange(S)
+        x, ys = self._run_full(params, x, positions, collect=True)
+        ks, vs, ssm, cx, cB, cC = ys
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = x[:, -1] @ params["unembed"].astype(x.dtype)
+
+        cache = self.init_cache(B, capacity or self.cache_capacity(S))
+        cdt = dt(cfg.compute_dtype)
+        cache.update({"ssm": ssm.astype(cdt), "conv_x": cx.astype(cdt),
+                      "conv_B": cB.astype(cdt), "conv_C": cC.astype(cdt),
+                      "t": jnp.asarray(S, jnp.int32)})
+        ids = self._attn_layer_ids()
+        if len(ids):
+            C = cache["attn_k"].shape[2]
+            base = init_kv_cache(B, C, cfg.n_kv_heads, cfg.dh, cdt)
+            filled = jax.vmap(lambda k, v: cache_prefill(base, k, v))(
+                ks[ids], vs[ids])
+            cache["attn_k"] = filled["k"]
+            cache["attn_v"] = filled["v"]
+            cache["attn_pos"] = filled["pos"][0]
+        return logits, cache
+
+    def decode(self, params, cache, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["token"]].astype(dt(cfg.compute_dtype))
+        t = cache["t"]
+        shared = params.get("shared")
+        A = self.n_attn_apps
+        flags = self._flags()
+        ids = self._attn_layer_ids()
+        app_of_layer = np.zeros((cfg.n_layers,), np.int32)
+        app_of_layer[ids] = np.arange(len(ids))
+        app_idx = jnp.asarray(app_of_layer)
+        C = cache["attn_k"].shape[2] if A else 1
+        slot = t % C if A else jnp.zeros((), jnp.int32)
+        new_pos = (jax.lax.dynamic_update_slice(cache["attn_pos"], t[None],
+                                                (slot,)) if A else None)
+
+        def body(carry, inp):
+            x, ak, av = carry
+            lp, flag, aidx, ssm, cx, cB, cC = inp
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            o, new_ssm, new_conv = mamba_step(
+                lp, h, ssm, {"x": cx, "B": cB, "C": cC}, cfg)
+            x = x + o
+
+            def with_attn(args):
+                x, ak, av = args
+                h2 = rmsnorm(x, shared["ln1"], cfg.norm_eps)
+                q, k1, v1 = _qkv(h2, shared, cfg, t[None])
+                ck = jax.lax.dynamic_index_in_dim(ak, aidx, 0, keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(av, aidx, 0, keepdims=False)
+                nk = jax.lax.dynamic_update_slice(
+                    ck, k1.astype(ck.dtype), (0, slot, 0, 0))
+                nv = jax.lax.dynamic_update_slice(
+                    cv, v1.astype(cv.dtype), (0, slot, 0, 0))
+                o2 = attention(q, nk, nv, q_pos=t[None], kv_pos=new_pos,
+                               window=cfg.sliding_window)
+                Bsz = x.shape[0]
+                x = x + (o2.reshape(Bsz, 1, -1) @ shared["wo"]).astype(x.dtype)
+                h3 = rmsnorm(x, shared["ln2"], cfg.norm_eps)
+                mp = shared["mlp"]
+                y = (jax.nn.silu(h3 @ mp["w_gate"]) * (h3 @ mp["w_up"])) \
+                    @ mp["w_down"]
+                x = x + y.astype(x.dtype)
+                ak = jax.lax.dynamic_update_index_in_dim(ak, nk, aidx, 0)
+                av = jax.lax.dynamic_update_index_in_dim(av, nv, aidx, 0)
+                return x, ak, av
+
+            if A:
+                x, ak, av = jax.lax.cond(flag, with_attn,
+                                         lambda a: a, (x, ak, av))
+            return (x, ak, av), (new_ssm, new_conv["x"], new_conv["B"],
+                                 new_conv["C"])
+
+        ak0 = cache.get("attn_k", jnp.zeros((1,), dt(cfg.compute_dtype)))
+        av0 = cache.get("attn_v", ak0)
+        (x, ak, av), (ssm, cx, cB, cC) = jax.lax.scan(
+            body, (x, ak0, av0),
+            (params["layers"], flags, app_idx, cache["ssm"],
+             cache["conv_x"], cache["conv_B"], cache["conv_C"]))
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = x[:, 0] @ params["unembed"].astype(x.dtype)
+        new_cache = dict(cache)
+        new_cache.update({"ssm": ssm, "conv_x": cx, "conv_B": cB,
+                          "conv_C": cC, "t": t + 1})
+        if A:
+            new_cache.update({"attn_k": ak, "attn_v": av,
+                              "attn_pos": new_pos})
+        return logits, new_cache

@@ -1,0 +1,29 @@
+"""Learning-rate schedules as step -> lr callables (traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def step_decay(base_lr: float, *, decay: float = 0.1, every_steps: int):
+    """The paper's AE/MLP recipe: lr /= 10 every 15 epochs."""
+    def fn(step):
+        n = jnp.floor_divide(step, every_steps).astype(jnp.float32)
+        return jnp.float32(base_lr) * jnp.float32(decay) ** n
+    return fn
+
+
+def cosine_warmup(base_lr: float, *, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = (step - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(base_lr) * jnp.where(step < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,3 @@
+from .engine import ExpertEngine, Request, Response, RoutedServer
+
+__all__ = ["ExpertEngine", "Request", "Response", "RoutedServer"]

@@ -1,0 +1,124 @@
+"""Serving substrate: per-expert engines + the ExpertMatcher-routed server.
+
+ExpertEngine wraps one zoo model with jitted prefill/decode and a KV/state
+cache; RoutedServer is the paper's Fig. 2 pipeline as a serving system:
+
+  payload -> featurize (784) -> ExpertMatcher.route -> per-expert batch
+          -> engine.generate -> responses
+
+Requests are grouped per routed expert and executed as padded batches
+(static shapes for jit); the router itself is a jitted bank scoring —
+the Pallas ``expert_score`` kernel on real TPUs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.matcher import ExpertMatcher
+from ..core.registry import ExpertRegistry
+from ..models.api import BaseModel
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    features: np.ndarray            # (784,) matcher fingerprint
+    prompt: np.ndarray              # (S,) int32 tokens
+    max_new_tokens: int = 8
+
+
+@dataclasses.dataclass
+class Response:
+    uid: int
+    expert: str
+    fine_class: int
+    tokens: np.ndarray
+    coarse_scores: Optional[np.ndarray] = None
+
+
+class ExpertEngine:
+    """One expert model behind the router."""
+
+    def __init__(self, model: BaseModel, params, *, max_len: int = 256):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, capacity=max_len))
+        self._decode = jax.jit(model.decode, donate_argnums=(1,))
+
+    def generate(self, tokens: jnp.ndarray, max_new: int,
+                 extra_inputs: Optional[Dict] = None) -> np.ndarray:
+        """Greedy generation. tokens: (B, S) int32 -> (B, max_new)."""
+        batch = {"tokens": tokens}
+        if extra_inputs:
+            batch.update(extra_inputs)
+        logits, cache = self._prefill(self.params, batch)
+        outs = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        for _ in range(max_new):
+            outs.append(tok)
+            logits, cache = self._decode(self.params, cache, {"token": tok})
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return np.asarray(jnp.concatenate(outs, axis=1))
+
+
+class RoutedServer:
+    """ExpertMatcher in front of a fleet of ExpertEngines."""
+
+    def __init__(self, matcher: ExpertMatcher, registry: ExpertRegistry,
+                 *, max_batch: int = 16):
+        assert len(registry) == matcher.n_experts, "registry/bank mismatch"
+        self.matcher = matcher
+        self.registry = registry
+        self.max_batch = max_batch
+        self._route = jax.jit(matcher.route)
+
+    def serve(self, requests: Sequence[Request]) -> List[Response]:
+        if not requests:
+            return []
+        feats = jnp.asarray(np.stack([r.features for r in requests]))
+        routed = self._route(feats)
+        coarse = np.asarray(routed["coarse"])[:, 0]
+        fine = np.asarray(routed["fine"])
+        scores = np.asarray(routed["coarse_score"])
+
+        responses: List[Response] = [None] * len(requests)  # type: ignore
+        # group by expert, run padded batches
+        for e in range(self.matcher.n_experts):
+            idxs = [i for i, c in enumerate(coarse) if c == e]
+            if not idxs:
+                continue
+            engine = self.registry[e].backend
+            name = self.registry[e].name
+            for lo in range(0, len(idxs), self.max_batch):
+                chunk = idxs[lo:lo + self.max_batch]
+                toks, pad_to = _pad_prompts([requests[i].prompt
+                                             for i in chunk])
+                max_new = max(requests[i].max_new_tokens for i in chunk)
+                if engine is not None:
+                    gen = engine.generate(jnp.asarray(toks), max_new)
+                else:
+                    gen = np.zeros((len(chunk), max_new), np.int32)
+                for row, i in enumerate(chunk):
+                    responses[i] = Response(
+                        uid=requests[i].uid, expert=name,
+                        fine_class=int(fine[i]),
+                        tokens=gen[row, :requests[i].max_new_tokens],
+                        coarse_scores=scores[i])
+        return responses
+
+
+def _pad_prompts(prompts: List[np.ndarray]):
+    """Left-align, zero-pad to a common power-of-two-ish length."""
+    m = max(len(p) for p in prompts)
+    pad_to = max(8, 1 << (m - 1).bit_length())
+    out = np.zeros((len(prompts), pad_to), np.int32)
+    for i, p in enumerate(prompts):
+        out[i, :len(p)] = p
+    return out, pad_to

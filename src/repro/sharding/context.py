@@ -1,0 +1,71 @@
+"""Mesh context + activation sharding constraints.
+
+Models call ``shard_act(x, ("data", None, "model"))`` at key points; when no
+mesh is active (CPU smoke tests) this is a no-op, under a mesh it becomes a
+``with_sharding_constraint`` so GSPMD pins the layout instead of guessing.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        if mesh is not None:
+            with mesh:  # legacy mesh context (enables pjit-style lowering)
+                yield mesh
+        else:
+            yield None
+    finally:
+        _STATE.mesh = prev
+
+
+def axis_size(name: str) -> int:
+    mesh = current_mesh()
+    if mesh is None or name not in mesh.shape:
+        return 1
+    return mesh.shape[name]
+
+
+def _clean_spec(mesh: Mesh, spec: Sequence, shape) -> P:
+    """Drop axes that don't exist in the mesh or don't divide the dim."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if not axes or total == 1 or dim % total:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def shard_act(x, spec: Sequence):
+    """Best-effort activation sharding constraint (no-op without a mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(spec) != x.ndim:
+        return x
+    p = _clean_spec(mesh, spec, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, p))

@@ -1,0 +1,231 @@
+"""Path/name-based parameter PartitionSpec rules.
+
+Given a pytree of param shapes (from ``jax.eval_shape``) and a mesh, produce
+a matching pytree of ``PartitionSpec``. Rules are keyed on the leaf name and
+expressed over the *trailing* dims (layer-stacked params get leading ``None``
+padding automatically). Every sharded dim is checked for divisibility by the
+mesh-axis size; the first valid candidate wins, else the leaf is replicated.
+
+``fsdp=True`` additionally shards the largest replicated dim of every big
+matrix over the ``data`` axis (ZeRO-3 / FSDP style — GSPMD inserts the
+per-layer all-gathers inside the scan-over-layers loop).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf name -> ordered candidates over trailing dims
+_RULES: Dict[str, Sequence[Tuple]] = {
+    # embeddings
+    "embed": [("model", None), (None, "model")],
+    "unembed": [(None, "model"), ("model", None)],
+    "stub_proj": [(None, "model")],
+    # attention
+    "wq": [(None, "model")],
+    "wk": [(None, "model")],
+    "wv": [(None, "model")],
+    "bq": [("model",)],
+    "bk": [("model",)],
+    "bv": [("model",)],
+    "wo": [("model", None)],
+    # dense mlp: trailing (D, F) / (F, D)
+    "w_gate": [(None, "model")],
+    "w_up": [(None, "model")],
+    "w_down": [("model", None)],
+    # moe experts: trailing (E, D, F) / (E, F, D) — expert-parallel over the
+    # model axis when E divides it, else tensor-parallel within experts
+    "moe/w_gate": [("model", None, None), (None, None, "model")],
+    "moe/w_up": [("model", None, None), (None, None, "model")],
+    "moe/w_down": [("model", None, None), (None, "model", None)],
+    "router": [()],
+    # mamba2
+    "w_in_x": [(None, "model")],
+    "w_in_z": [(None, "model")],
+    "w_B": [()],
+    "w_C": [()],
+    "w_dt": [(None, "model")],
+    "conv_x": [(None, "model")],
+    "A_log": [("model",)],
+    "D_skip": [("model",)],
+    "dt_bias": [("model",)],
+    "ssm_norm": [("model",)],
+    "w_out": [("model", None)],
+    # rwkv6
+    "w_r": [(None, "model")],
+    "w_kk": [(None, "model")],
+    "w_vv": [(None, "model")],
+    "w_g": [(None, "model")],
+    "w_o2": [("model", None)],
+    "decay_w0": [("model", None)],
+    "first_u": [("model", None)],
+    "w_ch_k": [(None, "model")],
+    "w_ch_v": [("model", None)],
+    "w_ch_r": [()],
+}
+
+_REPLICATED_SUFFIXES = (
+    "ln", "scale", "bias", "norm", "mu", "lora", "maa", "pos_embed",
+)
+
+
+def divisible(dim: int, axes, mesh_shape: Dict[str, int]) -> bool:
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    total = 1
+    for a in axes:
+        total *= mesh_shape.get(a, 1)
+    return total <= dim and dim % total == 0
+
+
+def _candidate_ok(shape, cand, mesh_shape) -> bool:
+    if len(cand) > len(shape):
+        return False
+    trail = shape[len(shape) - len(cand):]
+    for dim, ax in zip(trail, cand):
+        if ax is not None and not divisible(dim, ax, mesh_shape):
+            return False
+    return True
+
+
+def _apply_fsdp(shape, spec: Tuple, mesh_shape, min_size: int) -> Tuple:
+    """Shard the largest un-sharded dim over 'data' for big params."""
+    if int(np.prod(shape)) < min_size or "data" not in mesh_shape:
+        return spec
+    spec = list(spec)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is None and divisible(shape[i], "data", mesh_shape):
+            spec[i] = "data"
+            return tuple(spec)
+    return tuple(spec)
+
+
+def spec_for_leaf(name: str, shape, mesh_shape: Dict[str, int], *,
+                  fsdp: bool = False, fsdp_min_size: int = 1 << 20) -> P:
+    parts = name.split("/")
+    leaf = parts[-1]
+    qualified = "/".join(parts[-2:]) if len(parts) >= 2 else leaf
+    spec: Optional[Tuple] = None
+    if any(leaf.endswith(sfx) or sfx in leaf for sfx in _REPLICATED_SUFFIXES):
+        spec = (None,) * len(shape)
+    else:
+        cands = _RULES.get(qualified) or _RULES.get(leaf)
+        for cand in (cands or ()):
+            if _candidate_ok(shape, cand, mesh_shape):
+                spec = (None,) * (len(shape) - len(cand)) + tuple(cand)
+                break
+    if spec is None:
+        spec = (None,) * len(shape)
+    if fsdp:
+        spec = _apply_fsdp(shape, spec, mesh_shape, fsdp_min_size)
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_specs(shape_tree: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    """Pytree of PartitionSpec matching ``shape_tree`` (of ShapeDtypeStruct)."""
+    mesh_shape = dict(mesh.shape)
+
+    def leaf(path, x):
+        return spec_for_leaf(_path_str(path), x.shape, mesh_shape, fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(leaf, shape_tree)
+
+
+def batch_spec(shape_tree: Any, mesh: Mesh) -> Any:
+    """Shard the leading (batch) dim over (pod, data); replicate the rest.
+    Scalars and dims not divisible stay replicated."""
+    mesh_shape = dict(mesh.shape)
+    baxes = tuple(a for a in ("pod", "data") if a in mesh_shape)
+
+    def leaf(x):
+        if not x.shape:
+            return P()
+        if baxes and divisible(x.shape[0], baxes, mesh_shape):
+            return P(baxes if len(baxes) > 1 else baxes[0],
+                     *([None] * (len(x.shape) - 1)))
+        # long-context single-sequence caches: shard the seq dim over data
+        if len(x.shape) >= 2 and "data" in mesh_shape and \
+                divisible(x.shape[1], "data", mesh_shape):
+            return P(None, "data", *([None] * (len(x.shape) - 2)))
+        return P(*([None] * len(x.shape)))
+
+    return jax.tree_util.tree_map(leaf, shape_tree)
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), tree_specs)
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache specs (name + shape heuristics per cache family)
+# ---------------------------------------------------------------------------
+
+_CACHE_KV = ("k", "v", "xk", "xv", "attn_k", "attn_v")
+_CACHE_HEADED = ("ssm", "S")  # (L, B, H, ...)
+
+
+def cache_specs(shape_tree, mesh: Mesh, batch_size: int):
+    """PartitionSpecs for decode caches.
+
+    KV caches (L, B, C, KV, dh): batch over (pod, data); KV heads over
+    model when divisible. For batch=1 long-context decode the *sequence*
+    dim is sharded over data instead (sequence-parallel cache).
+    SSM/WKV states (L, B, H, ...): batch over data, heads over model.
+    """
+    mesh_shape = dict(mesh.shape)
+    baxes = tuple(a for a in ("pod", "data") if a in mesh_shape)
+    batch_ok = baxes and divisible(batch_size, baxes, mesh_shape)
+
+    def leaf(path, x):
+        name = _path_str(path).split("/")[-1]
+        nd = len(x.shape)
+        if nd == 0 or name in ("pos", "attn_pos", "t"):
+            return P(*([None] * nd))
+        spec = [None] * nd
+        if name in _CACHE_KV and nd == 5:  # (L, B, C, KV, dh)
+            if batch_ok:
+                spec[1] = baxes if len(baxes) > 1 else baxes[0]
+            elif divisible(x.shape[2], "data", mesh_shape):
+                spec[2] = "data"
+            if divisible(x.shape[3], "model", mesh_shape):
+                spec[3] = "model"
+            elif spec[2] is None and divisible(x.shape[2], "model",
+                                               mesh_shape):
+                # GQA kv-heads don't divide the model axis (e.g. kv=8 on a
+                # 16-way axis): shard the cache *sequence* dim instead —
+                # decode attention becomes a flash-style partial softmax
+                # and only (B, H)-sized score stats cross the axis, vs.
+                # replicating the whole cache per device
+                spec[2] = "model"
+            elif spec[2] == "data" and divisible(
+                    x.shape[2] // mesh_shape.get("data", 1), "model",
+                    mesh_shape):
+                spec[2] = ("data", "model")
+        elif nd >= 3:  # states: (L, B, H, ...), conv: (L, B, W-1, C)
+            if batch_ok:
+                spec[1] = baxes if len(baxes) > 1 else baxes[0]
+            # shard the largest remaining dim over model if divisible
+            rest = sorted(range(2, nd), key=lambda i: -x.shape[i])
+            for i in rest:
+                if divisible(x.shape[i], "model", mesh_shape):
+                    spec[i] = "model"
+                    break
+        elif nd == 2 and batch_ok:  # (B, ...) token buffers
+            if divisible(x.shape[0], baxes, mesh_shape):
+                spec[0] = baxes if len(baxes) > 1 else baxes[0]
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, shape_tree)

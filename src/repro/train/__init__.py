@@ -1,0 +1,5 @@
+from .loop import (Trainer, init_train_state, make_train_step,
+                   train_state_shapes)
+
+__all__ = ["Trainer", "init_train_state", "make_train_step",
+           "train_state_shapes"]

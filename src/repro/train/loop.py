@@ -1,0 +1,107 @@
+"""Distributed LM training substrate.
+
+``make_train_step(model, ...)`` builds the jittable step used both by the
+real trainer (CPU smoke / examples) and by the multi-pod dry-run:
+
+    state, metrics = train_step(state, batch)
+
+with state = {params, opt, step}; gradient microbatching (accumulation via
+``lax.scan`` over microbatch splits) and global-norm clipping included.
+Sharding is applied at the jit boundary (in_shardings from
+repro.sharding.rules); inside, shard_act constraints pin activations.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.api import BaseModel
+from ..optim import adamw_init, adamw_update, cosine_warmup
+
+PyTree = Any
+
+
+def make_train_step(model: BaseModel, *, lr_fn=None, weight_decay: float = 0.0,
+                    clip_norm: Optional[float] = 1.0,
+                    microbatches: Optional[int] = None):
+    lr_fn = lr_fn or cosine_warmup(3e-4, warmup_steps=100, total_steps=10_000)
+    mb = microbatches or model.cfg.train_microbatches or 1
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        bdim = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        if mb > 1 and bdim % mb == 0:
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                batch)
+
+            def micro(carry, mbatch):
+                gsum, lsum = carry
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mbatch)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, grads)
+                return (gsum, lsum + loss), None
+
+            gzero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (gzero, jnp.float32(0)),
+                                           split)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        lr = lr_fn(opt["step"])
+        new_params, new_opt = adamw_update(
+            grads, opt, params, lr, weight_decay=weight_decay,
+            clip_norm=clip_norm)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "lr": lr}
+
+    return train_step
+
+
+def init_train_state(model: BaseModel, rng) -> Dict:
+    params = model.init(rng)
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_shapes(model: BaseModel) -> Dict:
+    return jax.eval_shape(lambda: init_train_state(model,
+                                                   jax.random.PRNGKey(0)))
+
+
+class Trainer:
+    """Single-host convenience trainer (examples / integration tests)."""
+
+    def __init__(self, model: BaseModel, *, lr: float = 3e-4,
+                 total_steps: int = 1000, seed: int = 0, **step_kw):
+        self.model = model
+        lr_fn = cosine_warmup(lr, warmup_steps=min(100, total_steps // 10),
+                              total_steps=total_steps)
+        self.state = init_train_state(model, jax.random.PRNGKey(seed))
+        self._step = jax.jit(make_train_step(model, lr_fn=lr_fn, **step_kw))
+        self.history = []
+
+    def fit(self, stream: Iterator[Dict[str, np.ndarray]], steps: int,
+            log_every: int = 50, callback: Optional[Callable] = None):
+        for i in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+            self.state, metrics = self._step(self.state, batch)
+            if i % log_every == 0 or i == steps - 1:
+                loss = float(metrics["loss"])
+                self.history.append((i, loss))
+                if callback:
+                    callback(i, metrics)
+        return self.history

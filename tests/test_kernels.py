@@ -1,0 +1,126 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.expert_score import pad_to_lane
+
+
+def _bank(K, D, H, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    params = {
+        "w_enc": jax.random.normal(ks[0], (K, D, H)) * 0.03,
+        "b_enc": jax.random.normal(ks[1], (K, H)) * 0.01,
+        "bn_scale": 1.0 + jax.random.normal(ks[2], (K, H)) * 0.1,
+        "bn_bias": jax.random.normal(ks[3], (K, H)) * 0.05,
+        "w_dec": jax.random.normal(ks[4], (K, H, D)) * 0.03,
+        "b_dec": jax.random.normal(ks[5], (K, D)) * 0.01,
+    }
+    states = {"mean": jax.random.normal(ks[6], (K, H)) * 0.1,
+              "var": 1.0 + jax.random.uniform(ks[7], (K, H)),
+              "count": jnp.ones((K,))}
+    return params, states
+
+
+@pytest.mark.parametrize("B,D,H,K", [
+    (32, 784, 128, 6), (64, 784, 128, 2), (128, 512, 64, 10),
+    (16, 100, 32, 3), (256, 784, 128, 6),
+])
+def test_expert_score_shapes(B, D, H, K):
+    params, states = _bank(K, D, H, seed=B + K)
+    x = jax.random.uniform(jax.random.PRNGKey(B), (B, D))
+    got = np.asarray(ops.expert_score(params, x, states))
+    folded = ops.fold_bank(params, states)
+    Dp = pad_to_lane(D)
+    xp = jnp.pad(x, ((0, 0), (0, Dp - D)))
+    want = np.asarray(ref.expert_score_ref(
+        xp, folded["w1"], folded["b1"], folded["w2"], folded["b2"],
+        d_real=D))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+
+
+def test_expert_score_matches_ae_bank_math():
+    """Kernel == the actual matcher scoring path (BN folding is exact)."""
+    from repro.core.autoencoder import bank_scores
+    params, states = _bank(5, 784, 128)
+    x = jax.random.uniform(jax.random.PRNGKey(7), (64, 784))
+    got = np.asarray(ops.expert_score(params, x, states))
+    want = np.asarray(bank_scores(params, states, x))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,M,h", [(32, 10, 128), (64, 3, 64), (16, 17, 32)])
+def test_cosine_scores(B, M, h):
+    z = jax.random.normal(jax.random.PRNGKey(B), (B, h))
+    c = jax.random.normal(jax.random.PRNGKey(M), (M, h))
+    mask = (jnp.arange(M) < max(M - 2, 1)).astype(jnp.float32)
+    got = np.asarray(ops.cosine_scores(z, c, mask))
+    want = np.asarray(ref.cosine_scores_ref(z, c, mask))
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-5, atol=1e-6)
+    assert (np.isinf(got) == np.isinf(want)).all()
+
+
+@pytest.mark.parametrize("B,H,KV,dh,S,win,dtype", [
+    (4, 8, 2, 64, 1024, 0, jnp.float32),
+    (2, 4, 4, 64, 512, 0, jnp.float32),
+    (4, 8, 2, 64, 1024, 256, jnp.float32),
+    (1, 16, 2, 128, 2048, 0, jnp.float32),
+    (2, 8, 2, 64, 1024, 0, jnp.bfloat16),
+])
+def test_decode_attention(B, H, KV, dh, S, win, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 3)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, dh), dtype)
+    t = S - S // 3
+    q_pos = jnp.asarray(t, jnp.int32)
+    kv_pos = jnp.where(jnp.arange(S) <= t, jnp.arange(S), -1).astype(jnp.int32)
+    got = np.asarray(ops.decode_attention(q, k, v, q_pos, kv_pos,
+                                          window=win, block_s=256),
+                     np.float32)
+    want = np.asarray(ref.decode_attention_ref(q, k, v, q_pos, kv_pos,
+                                               window=win), np.float32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_decode_attention_ring_cache_semantics():
+    """Scrambled (ring) slot order must not change the result."""
+    B, H, KV, dh, S = 2, 4, 2, 32, 256
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, S, KV, dh))
+    v = jax.random.normal(ks[2], (B, S, KV, dh))
+    q_pos = jnp.asarray(300, jnp.int32)
+    kv_pos = jnp.arange(S) + 300 - S + 1  # ring holding last S positions
+    perm = np.random.default_rng(0).permutation(S)
+    got1 = np.asarray(ops.decode_attention(q, k, v, q_pos,
+                                           kv_pos.astype(jnp.int32),
+                                           window=128, block_s=64))
+    got2 = np.asarray(ops.decode_attention(
+        q, k[:, perm], v[:, perm], q_pos,
+        kv_pos[perm].astype(jnp.int32), window=128, block_s=64))
+    np.testing.assert_allclose(got1, got2, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,H,P", [(2, 4, 32), (1, 8, 64), (4, 2, 16)])
+def test_wkv_decode_step(B, H, P):
+    from repro.kernels.wkv_step import wkv_step_pallas
+    from repro.models.rwkv6 import wkv_step as wkv_oracle
+    ks = jax.random.split(jax.random.PRNGKey(B * P), 6)
+    r = jax.random.normal(ks[0], (B, H, P))
+    k = jax.random.normal(ks[1], (B, H, P))
+    v = jax.random.normal(ks[2], (B, H, P))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, P)) * 0.5)
+    u = jax.random.normal(ks[4], (H, P)) * 0.2
+    S = jax.random.normal(ks[5], (B, H, P, P))
+    o_k, S_k = wkv_step_pallas(r, k, v, logw, u, S)
+    S_ref, o_ref = wkv_oracle(S, r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(S_k), np.asarray(S_ref),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,162 @@
+"""End-to-end system tests: the paper's pipeline as a serving system,
+plus training-loop integration (loss goes down) and attention invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import (ExpertRegistry, MatcherConfig, build_matcher,
+                        train_bank)
+from repro.data import load_benchmark, synthetic_token_stream
+from repro.models import build_model
+from repro.models.attention import attention
+from repro.serve import ExpertEngine, Request, RoutedServer
+from repro.train import Trainer
+
+
+@pytest.fixture(scope="module")
+def small_bench():
+    return load_benchmark(names=["mnist", "har", "reuters"],
+                          n_per_dataset=1200, seed=0)
+
+
+@pytest.fixture(scope="module")
+def small_matcher(small_bench):
+    names = list(small_bench)
+    aes, _ = train_bank([(n, small_bench[n]["server"][0]) for n in names],
+                        epochs=40, batch_size=64)
+    cents = [(small_bench[n]["server"][0], small_bench[n]["server"][1])
+             for n in names]
+    return build_matcher(aes, names, cents), names
+
+
+def test_coarse_assignment_accuracy(small_matcher, small_bench):
+    """The paper's core claim (Table 3): CA via min-MSE is near-perfect."""
+    m, names = small_matcher
+    for client in ("client_a", "client_b"):
+        accs = []
+        for i, n in enumerate(names):
+            x, _ = small_bench[n][client]
+            pred = np.asarray(m.assign_coarse(jnp.asarray(x)))
+            accs.append((pred == i).mean())
+        assert np.mean(accs) > 0.9, (client, accs)
+
+
+def test_fine_assignment_beats_chance(small_matcher, small_bench):
+    m, names = small_matcher
+    i = names.index("mnist")
+    x, y = small_bench["mnist"]["client_a"]
+    fine = np.asarray(m.assign_fine(jnp.asarray(x),
+                                    jnp.full(len(x), i)))
+    n_cls = int(y.max()) + 1
+    assert (fine == y).mean() > 2.0 / n_cls
+
+
+def test_routed_server_end_to_end(small_matcher, small_bench):
+    """Fig. 2 as a serving system: requests route to the right expert
+    engine and produce generated tokens."""
+    m, names = small_matcher
+    reg = ExpertRegistry()
+    for n in names:
+        cfg = get_config("smollm-135m").reduced(name=f"expert-{n}")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(hash(n) % 2**31))
+        reg.add(n, ExpertEngine(model, params, max_len=64))
+    server = RoutedServer(m, reg, max_batch=4)
+    reqs = []
+    uid = 0
+    rng = np.random.default_rng(0)
+    for n in names:
+        x, _ = small_bench[n]["client_a"]
+        for j in range(3):
+            reqs.append(Request(
+                uid=uid, features=x[j],
+                prompt=rng.integers(0, 100, size=rng.integers(4, 12)),
+                max_new_tokens=4))
+            uid += 1
+    resps = server.serve(reqs)
+    assert len(resps) == len(reqs)
+    correct = sum(r.expert == names[i // 3] for i, r in enumerate(resps))
+    assert correct / len(resps) > 0.8
+    for r in resps:
+        assert r.tokens.shape == (4,)
+        assert r.fine_class >= 0
+
+
+def test_trainer_reduces_loss():
+    cfg = get_config("llama3.2-1b").reduced(n_layers=2, d_model=64,
+                                            vocab_size=256)
+    model = build_model(cfg)
+    tr = Trainer(model, lr=3e-3, total_steps=60)
+    stream = synthetic_token_stream(cfg.vocab_size, 32, 8, seed=0)
+    hist = tr.fit(stream, steps=60, log_every=10)
+    first, last = hist[0][1], hist[-1][1]
+    assert last < first - 0.25, f"loss did not decrease: {first} -> {last}"
+
+
+def test_trainer_microbatch_equivalence():
+    """Gradient accumulation == full-batch step (same loss trajectory)."""
+    cfg = get_config("llama3.2-1b").reduced(n_layers=2, d_model=64,
+                                            vocab_size=128)
+    stream = synthetic_token_stream(cfg.vocab_size, 16, 8, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+    from repro.optim import constant_lr
+    from repro.train.loop import init_train_state, make_train_step
+    model = build_model(cfg)
+    s0 = init_train_state(model, jax.random.PRNGKey(0))
+    step1 = jax.jit(make_train_step(model, lr_fn=constant_lr(1e-3),
+                                    microbatches=1))
+    step4 = jax.jit(make_train_step(model, lr_fn=constant_lr(1e-3),
+                                    microbatches=4))
+    s1, m1 = step1(s0, batch)
+    s4, m4 = step4(s0, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-4)
+    l1 = jax.tree_util.tree_leaves(s1["params"])
+    l4 = jax.tree_util.tree_leaves(s4["params"])
+    for a, b in zip(l1, l4):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-4)
+
+
+# -- attention invariants (hypothesis) --------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([64, 128]),
+       st.sampled_from([0, 32]), st.booleans())
+def test_flash_equals_plain_attention(b, s, window, causal):
+    """Blockwise online-softmax == plain masked softmax for any
+    (batch, seq, window, causality)."""
+    ks = jax.random.split(jax.random.PRNGKey(b * s + window), 3)
+    H, KV, dh = 4, 2, 16
+    q = jax.random.normal(ks[0], (b, s, H, dh))
+    k = jax.random.normal(ks[1], (b, s, KV, dh))
+    v = jax.random.normal(ks[2], (b, s, KV, dh))
+    pos = jnp.arange(s)
+    plain = attention(q, k, v, q_pos=pos, kv_pos=pos, window=window,
+                      chunk=0, causal=causal)
+    flash = attention(q, k, v, q_pos=pos, kv_pos=pos, window=window,
+                      chunk=16, causal=causal)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(flash),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_attention_ignores_empty_slots(seed):
+    """kv_pos == -1 slots must contribute nothing, whatever their values."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    B, S, H, KV, dh = 1, 32, 2, 2, 8
+    q = jax.random.normal(ks[0], (B, 1, H, dh))
+    k = jax.random.normal(ks[1], (B, S, KV, dh))
+    v = jax.random.normal(ks[2], (B, S, KV, dh))
+    kv_pos = jnp.where(jnp.arange(S) < 20, jnp.arange(S), -1)
+    o1 = attention(q, k, v, q_pos=jnp.asarray([25]), kv_pos=kv_pos)
+    garbage = jax.random.normal(ks[3], (B, S, KV, dh)) * 100
+    k2 = jnp.where((kv_pos == -1)[None, :, None, None], garbage, k)
+    v2 = jnp.where((kv_pos == -1)[None, :, None, None], garbage, v)
+    o2 = attention(q, k2, v2, q_pos=jnp.asarray([25]), kv_pos=kv_pos)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
