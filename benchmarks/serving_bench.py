@@ -1,0 +1,167 @@
+"""Serving benchmark: throughput + latency percentiles under Poisson
+traffic against the continuous-batching RoutedServer.
+
+Arrivals are *virtual-time* Poisson processes; service is real measured
+compute. The event loop submits every request whose arrival time has
+passed, runs one scheduler step, charges its wall-clock duration to the
+virtual clock, and records per-request latency = completion - arrival.
+When the system is idle the clock jumps to the next arrival, so offered
+load (not Python sleep jitter) determines queueing.
+
+Three traffic scenarios (the ISSUE's acceptance matrix):
+  uniform  — requests spread evenly over all experts
+  skewed   — 80% of traffic hammers one expert (hot-expert queueing)
+  bursty   — on/off arrivals: idle gaps, then bursts at 10x rate
+
+  PYTHONPATH=src python benchmarks/serving_bench.py [--requests 60]
+
+Output: one CSV-ish line per scenario,
+  scenario,n,throughput_rps,p50_ms,p99_ms,batches,prefill_compiles
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import ExpertRegistry, build_matcher, train_bank
+from repro.data import load_benchmark
+from repro.models import build_model
+from repro.serve import ExpertEngine, Request, RoutedServer
+
+DATASETS = ["mnist", "har", "reuters"]
+
+
+def build_server(n_per_dataset: int, epochs: int, max_batch: int):
+    bench = load_benchmark(names=DATASETS, n_per_dataset=n_per_dataset,
+                           seed=0)
+    names = list(bench)
+    aes, _ = train_bank([(n, bench[n]["server"][0]) for n in names],
+                        epochs=epochs, batch_size=64)
+    cents = [(bench[n]["server"][0], bench[n]["server"][1]) for n in names]
+    matcher = build_matcher(aes, names, cents)
+    registry = ExpertRegistry()
+    for i, n in enumerate(names):
+        cfg = get_config("smollm-135m").reduced(name=f"expert-{n}")
+        model = build_model(cfg)
+        registry.add(n, ExpertEngine(
+            model, model.init(jax.random.PRNGKey(i)), max_len=64))
+    return RoutedServer(matcher, registry, max_batch=max_batch), bench, names
+
+
+def arrivals_for(scenario: str, n: int, rate: float,
+                 rng: np.random.Generator) -> np.ndarray:
+    """Arrival timestamps (seconds, sorted) for ``n`` requests."""
+    if scenario == "bursty":
+        # on/off: bursts of ~n/6 requests at 10x rate, gaps of 3/rate
+        ts, t = [], 0.0
+        while len(ts) < n:
+            for _ in range(min(int(np.ceil(n / 6)), n - len(ts))):
+                t += float(rng.exponential(1.0 / (10 * rate)))
+                ts.append(t)
+            t += 3.0 / rate
+        return np.asarray(ts[:n])
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def expert_mix(scenario: str, n: int, n_experts: int,
+               rng: np.random.Generator) -> np.ndarray:
+    if scenario == "skewed":
+        p = np.full(n_experts, 0.2 / max(n_experts - 1, 1))
+        p[0] = 0.8
+        return rng.choice(n_experts, size=n, p=p)
+    return rng.integers(0, n_experts, size=n)
+
+
+def run_scenario(scenario: str, server: RoutedServer, bench, names,
+                 n: int, rate: float, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    t_arr = arrivals_for(scenario, n, rate, rng)
+    which = expert_mix(scenario, n, len(names), rng)
+    reqs = []
+    for uid in range(n):
+        x, _ = bench[names[which[uid]]]["client_a"]
+        reqs.append(Request(
+            uid=uid, features=x[int(rng.integers(len(x)))],
+            prompt=rng.integers(0, 100,
+                                size=int(rng.integers(3, 48))),
+            max_new_tokens=int(rng.integers(2, 12))))
+
+    now, i, done_at = 0.0, 0, {}
+    sched = server.scheduler
+    batches0 = sched.stats["batches"]
+    compiles0 = sum(e.prefill_compiles
+                    for e in server.stats["engines"].values())
+    while i < n or sched.has_work:
+        while i < n and t_arr[i] <= now:
+            got = sched.submit([reqs[i]])
+            if not got:    # queue full: let the scheduler make room
+                break
+            i += got
+        if not sched.has_work:
+            now = max(now, t_arr[i])  # idle: jump to next arrival
+            continue
+        t0 = time.perf_counter()
+        resps = sched.step()
+        now += time.perf_counter() - t0
+        for r in resps:  # completed during this step
+            done_at[r.uid] = now
+    lat = np.asarray([done_at[u] - t_arr[u] for u in range(n)])
+    return {"scenario": scenario, "n": n,
+            "throughput_rps": n / max(now, 1e-9),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "batches": sched.stats["batches"] - batches0,
+            "prefill_compiles": sum(
+                e.prefill_compiles
+                for e in server.stats["engines"].values()) - compiles0}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=60)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="mean arrival rate, req/s of virtual time")
+    ap.add_argument("--n-per-dataset", type=int, default=600)
+    ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.requests < 1:
+        ap.error("--requests must be >= 1")
+    if args.rate <= 0:
+        ap.error("--rate must be > 0")
+
+    t0 = time.time()
+    server, bench, names = build_server(args.n_per_dataset, args.epochs,
+                                        args.max_batch)
+    print(f"# server up in {time.time()-t0:.1f}s "
+          f"({len(names)} experts)", flush=True)
+
+    # warmup: populate jit caches so scenario 1 isn't charged compiles
+    rng = np.random.default_rng(1)
+    warm = [Request(uid=-(k + 1),
+                    features=bench[names[k % len(names)]]["client_a"][0][k],
+                    prompt=rng.integers(0, 100, size=40),
+                    max_new_tokens=4) for k in range(len(names))]
+    server.serve(warm)
+    print("# warmup done", flush=True)
+
+    print("scenario,n,throughput_rps,p50_ms,p99_ms,batches,"
+          "prefill_compiles")
+    for scenario in ("uniform", "skewed", "bursty"):
+        r = run_scenario(scenario, server, bench, names,
+                         args.requests, args.rate, args.seed)
+        print(f"{r['scenario']},{r['n']},{r['throughput_rps']:.1f},"
+              f"{r['p50_ms']:.1f},{r['p99_ms']:.1f},{r['batches']},"
+              f"{r['prefill_compiles']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

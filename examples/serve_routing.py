@@ -77,6 +77,25 @@ def main():
         print(f"  req {r.uid}: -> {r.expert} (fine class {r.fine_class}) "
               f"tokens {r.tokens.tolist()}")
 
+    # continuous-batching internals: compile counts stay bucket-bounded
+    st = server.stats
+    print(f"scheduler: {st['scheduler']['batches']} micro-batches, "
+          f"{st['router']['cache_hits']} route-cache hits")
+    for name, es in st["engines"].items():
+        print(f"  {name}: {es.prefill_calls} prefills, "
+              f"{es.decode_steps} decode ticks, "
+              f"{es.jit_cache_entries} compiled executables")
+
+    # second wave with repeated fingerprints rides the routing LRU and
+    # the already-compiled bucket executables
+    t2 = time.time()
+    server.serve([Request(uid=10_000 + r.uid, features=reqs[i].features,
+                          prompt=reqs[i].prompt,
+                          max_new_tokens=reqs[i].max_new_tokens)
+                  for i, r in enumerate(resps)])
+    print(f"repeat wave: {len(resps)} reqs in {time.time()-t2:.2f}s "
+          f"(route-cache hits now {server.stats['router']['cache_hits']})")
+
 
 if __name__ == "__main__":
     main()

@@ -61,7 +61,7 @@ class ExpertMatcher:
         """(B, K) matching score; LOWER is better (MSE convention)."""
         if self.config.use_kernel:
             from ..kernels import ops as kops
-            return kops.expert_score(self.bank_params, x)
+            return kops.expert_score(self.bank_params, x, self.bank_states)
         if self.config.metric == "cosine":
             z = ae.bank_encode(self.bank_params, self.bank_states, x)
             xhat = jax.vmap(ae.decode)(self.bank_params, z)  # (K, B, D)

@@ -21,19 +21,29 @@ HW = {
 }
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` across JAX versions.
+
+    ``jax.sharding.AxisType`` only exists from JAX 0.5; the pinned 0.4.37
+    predates it (all axes are implicitly Auto there, so omitting
+    ``axis_types`` is semantically identical).
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1x1 mesh for CPU smoke runs (everything replicated)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 def mesh_devices_required(multi_pod: bool) -> int:

@@ -1,3 +1,16 @@
-from .engine import ExpertEngine, Request, Response, RoutedServer
+"""Serving subsystem: router -> scheduler -> per-expert engines.
 
-__all__ = ["ExpertEngine", "Request", "Response", "RoutedServer"]
+``RoutedServer`` keeps the seed one-shot API (``serve(requests)``);
+``Scheduler.submit``/``step`` expose the continuous-batching path. See
+README.md in this directory for the design.
+"""
+from .engine import EngineStats, ExpertEngine, bucket_for, make_buckets
+from .router import Router, RouteResult
+from .scheduler import (Request, Response, RoutedServer, Scheduler,
+                        SchedulerConfig)
+
+__all__ = [
+    "ExpertEngine", "EngineStats", "bucket_for", "make_buckets",
+    "Router", "RouteResult",
+    "Request", "Response", "RoutedServer", "Scheduler", "SchedulerConfig",
+]

@@ -1,124 +1,213 @@
-"""Serving substrate: per-expert engines + the ExpertMatcher-routed server.
+"""ExpertEngine: one expert model behind the router, continuous-batching
+style.
 
-ExpertEngine wraps one zoo model with jitted prefill/decode and a KV/state
-cache; RoutedServer is the paper's Fig. 2 pipeline as a serving system:
+The seed engine re-ran a blocking prefill+decode loop per ``serve`` call
+and let ``jax.jit`` compile a fresh executable for every (batch, pad
+length) combination a traffic mix produced. This engine instead:
 
-  payload -> featurize (784) -> ExpertMatcher.route -> per-expert batch
-          -> engine.generate -> responses
+  * admits work as *groups* (``admit``) whose shapes are snapped to a
+    small fixed set of (batch, prompt-length) buckets, so the number of
+    distinct XLA executables is bounded by ``len(batch_buckets) *
+    len(len_buckets)`` prefills + ``len(batch_buckets)`` decode steps
+    for the engine's whole lifetime;
+  * keeps admitted groups resident (KV cache + last token) and advances
+    every active group exactly one token per ``tick`` — the scheduler
+    interleaves ticks across engines, so a long generation on one expert
+    never blocks admission or progress elsewhere;
+  * donates the decode cache on every step, so XLA reuses the same KV
+    buffers in place instead of allocating per token;
+  * emits per-row results as soon as a row has its ``max_new_tokens``,
+    not when its whole group retires.
 
-Requests are grouped per routed expert and executed as padded batches
-(static shapes for jit); the router itself is a jitted bank scoring —
-the Pallas ``expert_score`` kernel on real TPUs.
+Decode executables are shared across prompt buckets because prefill
+always builds the cache at ``capacity=max_len``; only the batch bucket
+shows up in the decode shape signature.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.matcher import ExpertMatcher
-from ..core.registry import ExpertRegistry
 from ..models.api import BaseModel
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    features: np.ndarray            # (784,) matcher fingerprint
-    prompt: np.ndarray              # (S,) int32 tokens
-    max_new_tokens: int = 8
+def make_buckets(lo: int, hi: int) -> Tuple[int, ...]:
+    """Power-of-two ladder covering [lo, hi] (hi always included)."""
+    out = []
+    b = lo
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(hi)
+    return tuple(out)
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n, clamped to the largest bucket."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
 
 
 @dataclasses.dataclass
-class Response:
-    uid: int
-    expert: str
-    fine_class: int
-    tokens: np.ndarray
-    coarse_scores: Optional[np.ndarray] = None
+class EngineStats:
+    prefill_compiles: int = 0
+    decode_compiles: int = 0
+    prefill_calls: int = 0
+    decode_steps: int = 0
+    rows_served: int = 0
+    rows_padded: int = 0
+    tokens_generated: int = 0
+
+    @property
+    def jit_cache_entries(self) -> int:
+        return self.prefill_compiles + self.decode_compiles
+
+
+@dataclasses.dataclass
+class _Group:
+    """One admitted micro-batch resident in the engine."""
+    uids: List[int]
+    per_row_new: List[int]
+    cache: Any
+    tok: jnp.ndarray               # (Bb, 1) last emitted token
+    emitted: List[np.ndarray]      # one (Bb,) column per generated step
+    steps_left: int                # decode steps still to run
+    done_rows: List[bool]
 
 
 class ExpertEngine:
-    """One expert model behind the router."""
+    """One expert model with bucketed jit caches and resident groups."""
 
-    def __init__(self, model: BaseModel, params, *, max_len: int = 256):
+    def __init__(self, model: BaseModel, params, *, max_len: int = 256,
+                 min_len_bucket: int = 8,
+                 batch_buckets: Optional[Sequence[int]] = None):
         self.model = model
         self.params = params
         self.max_len = max_len
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, capacity=max_len))
-        self._decode = jax.jit(model.decode, donate_argnums=(1,))
+        self.len_buckets = make_buckets(min_len_bucket, max_len)
+        self.batch_buckets = tuple(batch_buckets or make_buckets(1, 16))
+        self.stats = EngineStats()
+        self._active: List[_Group] = []
+        self._finished: List[Tuple[int, np.ndarray]] = []
+        # shape-keyed executables; dict size == XLA compile count
+        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+        self._decode_fns: Dict[int, Any] = {}
 
-    def generate(self, tokens: jnp.ndarray, max_new: int,
+    # -- bucketed executables -------------------------------------------
+    def _prefill_fn(self, Bb: int, Sb: int):
+        key = (Bb, Sb)
+        if key not in self._prefill_fns:
+            self._prefill_fns[key] = jax.jit(
+                lambda p, b: self.model.prefill(p, b, capacity=self.max_len))
+            self.stats.prefill_compiles += 1
+        return self._prefill_fns[key]
+
+    def _decode_fn(self, Bb: int):
+        if Bb not in self._decode_fns:
+            self._decode_fns[Bb] = jax.jit(self.model.decode,
+                                           donate_argnums=(1,))
+            self.stats.decode_compiles += 1
+        return self._decode_fns[Bb]
+
+    # -- admission -------------------------------------------------------
+    def pad_shape(self, n_rows: int, prompt_len: int) -> Tuple[int, int]:
+        """(batch bucket, length bucket) this admission would snap to."""
+        return (bucket_for(n_rows, self.batch_buckets),
+                bucket_for(prompt_len, self.len_buckets))
+
+    def admit(self, uids: Sequence[int], prompts: Sequence[np.ndarray],
+              max_new: Sequence[int]) -> None:
+        """Prefill a micro-batch and keep it resident for ticking.
+
+        Prompts are right-truncated to the largest length bucket (keeping
+        the most recent tokens) and zero-padded up to their bucket; the
+        batch dim is zero-padded to its bucket. Decoding past cache
+        capacity is safe: the cache is a position-tracked ring, so the
+        oldest context is evicted rather than corrupted.
+        """
+        assert len(uids) == len(prompts) == len(max_new)
+        if len(prompts) > self.batch_buckets[-1]:
+            raise ValueError(
+                f"micro-batch of {len(prompts)} rows exceeds the largest "
+                f"batch bucket {self.batch_buckets[-1]}; split it or "
+                f"construct the engine with larger batch_buckets")
+        Bb, Sb = self.pad_shape(len(prompts),
+                                max(len(p) for p in prompts))
+        toks = np.zeros((Bb, Sb), np.int32)
+        for i, p in enumerate(prompts):
+            p = np.asarray(p, np.int32)[-Sb:]
+            toks[i, :len(p)] = p
+        per_row = [max(1, int(m)) for m in max_new]
+        logits, cache = self._prefill_fn(Bb, Sb)(
+            self.params, {"tokens": jnp.asarray(toks)})
+        self.stats.prefill_calls += 1
+        self.stats.rows_served += len(uids)
+        self.stats.rows_padded += Bb - len(uids)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        g = _Group(uids=list(uids), per_row_new=per_row, cache=cache,
+                   tok=tok, emitted=[np.asarray(tok)[:, 0]],
+                   steps_left=max(per_row) - 1,
+                   done_rows=[False] * len(uids))
+        self._active.append(g)
+        self._harvest(g)
+        if g.steps_left <= 0 and all(g.done_rows):
+            self._active.remove(g)
+
+    # -- decoding --------------------------------------------------------
+    def tick(self) -> int:
+        """Advance every active group one decode step. Returns the number
+        of groups advanced (0 == engine idle)."""
+        advanced = 0
+        for g in list(self._active):
+            if g.steps_left > 0:
+                Bb = g.tok.shape[0]
+                logits, g.cache = self._decode_fn(Bb)(
+                    self.params, g.cache, {"token": g.tok})
+                g.tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+                g.emitted.append(np.asarray(g.tok)[:, 0])
+                g.steps_left -= 1
+                self.stats.decode_steps += 1
+                advanced += 1
+            self._harvest(g)
+            if g.steps_left <= 0 and all(g.done_rows):
+                self._active.remove(g)
+        return advanced
+
+    def _harvest(self, g: _Group) -> None:
+        """Emit rows whose max_new tokens are all available."""
+        have = len(g.emitted)
+        for i, uid in enumerate(g.uids):
+            if not g.done_rows[i] and g.per_row_new[i] <= have:
+                seq = np.asarray([col[i] for col in
+                                  g.emitted[:g.per_row_new[i]]], np.int32)
+                self._finished.append((uid, seq))
+                self.stats.tokens_generated += len(seq)
+                g.done_rows[i] = True
+
+    def poll(self) -> List[Tuple[int, np.ndarray]]:
+        """Drain finished (uid, tokens) pairs."""
+        out, self._finished = self._finished, []
+        return out
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    # -- blocking convenience (seed-API compatible) ----------------------
+    def generate(self, tokens, max_new: int,
                  extra_inputs: Optional[Dict] = None) -> np.ndarray:
         """Greedy generation. tokens: (B, S) int32 -> (B, max_new)."""
-        batch = {"tokens": tokens}
-        if extra_inputs:
-            batch.update(extra_inputs)
-        logits, cache = self._prefill(self.params, batch)
-        outs = []
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        for _ in range(max_new):
-            outs.append(tok)
-            logits, cache = self._decode(self.params, cache, {"token": tok})
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return np.asarray(jnp.concatenate(outs, axis=1))
-
-
-class RoutedServer:
-    """ExpertMatcher in front of a fleet of ExpertEngines."""
-
-    def __init__(self, matcher: ExpertMatcher, registry: ExpertRegistry,
-                 *, max_batch: int = 16):
-        assert len(registry) == matcher.n_experts, "registry/bank mismatch"
-        self.matcher = matcher
-        self.registry = registry
-        self.max_batch = max_batch
-        self._route = jax.jit(matcher.route)
-
-    def serve(self, requests: Sequence[Request]) -> List[Response]:
-        if not requests:
-            return []
-        feats = jnp.asarray(np.stack([r.features for r in requests]))
-        routed = self._route(feats)
-        coarse = np.asarray(routed["coarse"])[:, 0]
-        fine = np.asarray(routed["fine"])
-        scores = np.asarray(routed["coarse_score"])
-
-        responses: List[Response] = [None] * len(requests)  # type: ignore
-        # group by expert, run padded batches
-        for e in range(self.matcher.n_experts):
-            idxs = [i for i, c in enumerate(coarse) if c == e]
-            if not idxs:
-                continue
-            engine = self.registry[e].backend
-            name = self.registry[e].name
-            for lo in range(0, len(idxs), self.max_batch):
-                chunk = idxs[lo:lo + self.max_batch]
-                toks, pad_to = _pad_prompts([requests[i].prompt
-                                             for i in chunk])
-                max_new = max(requests[i].max_new_tokens for i in chunk)
-                if engine is not None:
-                    gen = engine.generate(jnp.asarray(toks), max_new)
-                else:
-                    gen = np.zeros((len(chunk), max_new), np.int32)
-                for row, i in enumerate(chunk):
-                    responses[i] = Response(
-                        uid=requests[i].uid, expert=name,
-                        fine_class=int(fine[i]),
-                        tokens=gen[row, :requests[i].max_new_tokens],
-                        coarse_scores=scores[i])
-        return responses
-
-
-def _pad_prompts(prompts: List[np.ndarray]):
-    """Left-align, zero-pad to a common power-of-two-ish length."""
-    m = max(len(p) for p in prompts)
-    pad_to = max(8, 1 << (m - 1).bit_length())
-    out = np.zeros((len(prompts), pad_to), np.int32)
-    for i, p in enumerate(prompts):
-        out[i, :len(p)] = p
-    return out, pad_to
+        del extra_inputs  # stub-embed models are not served token-only
+        toks = np.asarray(tokens)
+        uids = list(range(len(toks)))
+        self.admit(uids, list(toks), [max_new] * len(toks))
+        while self.n_active:
+            self.tick()
+        rows = dict(self.poll())
+        return np.stack([rows[u] for u in uids])

@@ -1,0 +1,148 @@
+"""Routing front-end: ExpertMatcher + Pallas kernels + fingerprint cache.
+
+The seed server jitted ``matcher.route`` wholesale, which (a) re-encoded
+every sample under *all* K expert AEs for fine assignment and (b) left
+the Pallas ``cosine_scores`` kernel dead. This front-end:
+
+  * snaps routing batches to power-of-two row buckets, so the jit cache
+    of the scoring functions stays bounded under arbitrary traffic;
+  * runs fine assignment per routed-expert *group* — each sample is
+    encoded only under its own expert, and the group's (z, centroids,
+    mask) triple goes through the fused ``cosine_scores`` kernel
+    (interpret mode on CPU, Mosaic on TPU);
+  * memoizes routing decisions per client fingerprint in an LRU: clients
+    in the paper's setting re-query with the same dataset fingerprint,
+    so repeat routes cost a dict lookup instead of K AE forwards.
+
+The coarse metric honours ``MatcherConfig``: ``use_kernel=True`` scores
+through the fused Pallas expert-score kernel (with real BN statistics —
+see ``ExpertMatcher.coarse_scores``), otherwise the vmapped reference.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import autoencoder as ae
+from ..core.matcher import ExpertMatcher
+from .engine import bucket_for, make_buckets
+
+
+@dataclasses.dataclass
+class RouteResult:
+    coarse: np.ndarray        # (B, top_k) expert indices, best first
+    coarse_score: np.ndarray  # (B, top_k) scores (lower = better)
+    fine: np.ndarray          # (B,) class index within the top-1 expert
+    cache_hits: int = 0
+
+
+class Router:
+    """Batch router with bounded jit shapes and a fingerprint LRU."""
+
+    def __init__(self, matcher: ExpertMatcher, *, cache_size: int = 4096,
+                 use_fine_kernel: bool = True, max_rows: int = 256,
+                 interpret: bool = True):
+        self.matcher = matcher
+        self.use_fine_kernel = use_fine_kernel and \
+            matcher.centroids is not None
+        self.interpret = interpret
+        self.row_buckets = make_buckets(1, max_rows)
+        self._lru: "collections.OrderedDict[bytes, tuple]" = \
+            collections.OrderedDict()
+        self.cache_size = cache_size
+        self.stats = {"routed": 0, "cache_hits": 0, "score_calls": 0}
+        self._coarse = jax.jit(matcher.assign_coarse_topk)
+        self._fine_ref = jax.jit(matcher.assign_fine)
+        # encode a group under ONE expert's AE (params sliced by index)
+        self._encode_at = jax.jit(self._encode_at_impl)
+
+    def _encode_at_impl(self, x, e):
+        params = jax.tree_util.tree_map(lambda a: a[e],
+                                        self.matcher.bank_params)
+        state = jax.tree_util.tree_map(lambda a: a[e],
+                                       self.matcher.bank_states)
+        z, _ = ae.encode(params, state, x, train=False)
+        return z
+
+    # ------------------------------------------------------------------
+    def _pad_rows(self, x: np.ndarray) -> Tuple[jnp.ndarray, int]:
+        n = len(x)
+        nb = bucket_for(n, self.row_buckets)
+        if nb > n:
+            x = np.concatenate([x, np.zeros((nb - n,) + x.shape[1:],
+                                            x.dtype)])
+        return jnp.asarray(x), n
+
+    def _fine_grouped(self, x: np.ndarray,
+                      coarse_top1: np.ndarray) -> np.ndarray:
+        """Per-expert-group fine assignment through the cosine kernel."""
+        from ..kernels import ops as kops
+        m = self.matcher
+        fine = np.zeros(len(x), np.int64)
+        for e in np.unique(coarse_top1):
+            rows = np.nonzero(coarse_top1 == e)[0]
+            xg, n = self._pad_rows(x[rows])
+            z = self._encode_at(xg, jnp.int32(e))
+            sim = kops.cosine_scores(z, m.centroids[int(e)],
+                                     m.centroid_mask[int(e)],
+                                     interpret=self.interpret)
+            fine[rows] = np.asarray(jnp.argmax(sim, axis=-1))[:n]
+            self.stats["score_calls"] += 1
+        return fine
+
+    # ------------------------------------------------------------------
+    def route(self, feats: np.ndarray) -> RouteResult:
+        """feats: (B, 784) float32 fingerprints -> routing decisions."""
+        feats = np.asarray(feats, np.float32)
+        B = len(feats)
+        top_k = self.matcher.config.top_k
+        coarse = np.zeros((B, top_k), np.int64)
+        score = np.zeros((B, top_k), np.float32)
+        fine = np.zeros(B, np.int64)
+
+        keys = [f.tobytes() for f in feats]
+        miss = []
+        hits = 0
+        for i, k in enumerate(keys):
+            got = self._lru.get(k)
+            if got is not None:
+                coarse[i], score[i], fine[i] = got
+                self._lru.move_to_end(k)
+                hits += 1
+            else:
+                miss.append(i)
+
+        # chunk misses to the largest row bucket so batches beyond it
+        # can't mint fresh executable shapes
+        step = self.row_buckets[-1]
+        for lo in range(0, len(miss), step):
+            chunk = miss[lo:lo + step]
+            xm = feats[chunk]
+            xp, n = self._pad_rows(xm)
+            c, s = self._coarse(xp)
+            c = np.asarray(c)[:n]
+            s = np.asarray(s)[:n]
+            if self.use_fine_kernel:
+                f = self._fine_grouped(xm, c[:, 0])
+            elif self.matcher.centroids is not None:
+                f = np.asarray(self._fine_ref(xp, jnp.asarray(
+                    np.pad(c[:, 0], (0, len(xp) - n)))))[:n]
+            else:
+                f = np.zeros(n, np.int64)
+            for j, i in enumerate(chunk):
+                coarse[i], score[i], fine[i] = c[j], s[j], f[j]
+                self._remember(keys[i], (c[j], s[j], f[j]))
+
+        self.stats["routed"] += B
+        self.stats["cache_hits"] += hits
+        return RouteResult(coarse, score, fine, cache_hits=hits)
+
+    def _remember(self, key: bytes, value) -> None:
+        self._lru[key] = value
+        if len(self._lru) > self.cache_size:
+            self._lru.popitem(last=False)

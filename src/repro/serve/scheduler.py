@@ -1,0 +1,249 @@
+"""Admission queue + continuous micro-batching scheduler (Fig. 2 as a
+serving system).
+
+Life of a request:
+
+  submit() -> Router.route (fingerprint LRU + Pallas scoring)
+           -> per-expert FIFO queue, sub-bucketed by prompt-length bucket
+  step()   -> admission: per expert, pop the fullest length bucket into
+              one micro-batch (up to ``max_batch``) and prefill it into
+              the expert's engine
+           -> decode: every engine with resident groups advances one
+              token (one ``tick``)
+           -> harvest: finished rows become Responses immediately
+  drain()  -> step() until all queues and engines are empty
+
+Because queues persist across calls, requests submitted in *different*
+``submit`` calls coalesce into the same micro-batch — the continuous
+part — and because shapes are snapped to the engine's buckets, a mixed
+traffic stream compiles a bounded set of executables no matter how many
+distinct (prompt length, batch, max_new) combinations arrive.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.matcher import ExpertMatcher
+from ..core.registry import ExpertRegistry
+from .engine import ExpertEngine, bucket_for
+from .router import Router
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    features: np.ndarray            # (784,) matcher fingerprint
+    prompt: np.ndarray              # (S,) int32 tokens
+    max_new_tokens: int = 8
+
+
+@dataclasses.dataclass
+class Response:
+    uid: int
+    expert: str
+    fine_class: int
+    tokens: np.ndarray
+    coarse_scores: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch: int = 16             # micro-batch row cap
+    max_queue: int = 4096           # admission queue cap (backpressure)
+
+
+@dataclasses.dataclass
+class _Pending:
+    req: Request
+    fine: int
+    scores: np.ndarray
+
+
+class Scheduler:
+    """Routes, queues, batches and ticks a fleet of ExpertEngines."""
+
+    def __init__(self, router: Router, registry: ExpertRegistry,
+                 config: Optional[SchedulerConfig] = None):
+        self.router = router
+        self.registry = registry
+        self.config = config or SchedulerConfig()
+        # queues[expert][len_bucket] -> FIFO of _Pending
+        self.queues: Dict[int, Dict[int, collections.deque]] = \
+            collections.defaultdict(lambda: collections.defaultdict(
+                collections.deque))
+        self.n_queued = 0
+        self.stats = {"submitted": 0, "rejected": 0, "batches": 0,
+                      "ticks": 0, "responses": 0}
+        self._done: List[Response] = []
+        self._meta: Dict[int, _Pending] = {}   # uid -> routing info
+
+    # -- admission -------------------------------------------------------
+    def submit(self, requests: Sequence[Request]) -> int:
+        """Route and enqueue; returns how many were admitted — always a
+        prefix of ``requests``, so callers can resubmit the tail later.
+        Requests beyond the queue cap are rejected unrouted
+        (backpressure). uids must be unique among in-flight requests —
+        they key response demultiplexing."""
+        if not requests:
+            return 0
+        seen = set(self._meta)
+        for r in requests:
+            if r.uid in seen:
+                raise ValueError(f"duplicate in-flight uid {r.uid}")
+            seen.add(r.uid)
+        room = max(self.config.max_queue - self.n_queued, 0)
+        self.stats["rejected"] += len(requests) - min(len(requests), room)
+        requests = requests[:room]
+        if not requests:
+            return 0
+        routed = self.router.route(
+            np.stack([r.features for r in requests]))
+        admitted = 0
+        for i, r in enumerate(requests):
+            e = int(routed.coarse[i, 0])
+            engine = self.registry[e].backend
+            sb = (engine.pad_shape(1, len(r.prompt))[1]
+                  if isinstance(engine, ExpertEngine) else len(r.prompt))
+            p = _Pending(r, int(routed.fine[i]), routed.coarse_score[i])
+            self.queues[e][sb].append(p)
+            self._meta[r.uid] = p
+            self.n_queued += 1
+            admitted += 1
+        self.stats["submitted"] += admitted
+        return admitted
+
+    # -- one scheduling round -------------------------------------------
+    def step(self) -> List[Response]:
+        self._admit_batches()
+        self._tick_engines()
+        self._harvest()
+        out, self._done = self._done, []
+        self.stats["responses"] += len(out)
+        return out
+
+    def drain(self) -> List[Response]:
+        out: List[Response] = []
+        while self.has_work:
+            out.extend(self.step())
+        return out
+
+    @property
+    def has_work(self) -> bool:
+        if self.n_queued:
+            return True
+        return any(isinstance(self.registry[e].backend, ExpertEngine)
+                   and self.registry[e].backend.n_active
+                   for e in range(len(self.registry)))
+
+    # -- internals -------------------------------------------------------
+    def _admit_batches(self) -> None:
+        for e, by_len in self.queues.items():
+            if not any(by_len.values()):
+                continue
+            engine = self.registry[e].backend
+            name = self.registry[e].name
+            # fullest length bucket first: best padding efficiency
+            sb = max(by_len, key=lambda b: len(by_len[b]))
+            q = by_len[sb]
+            if not q:
+                continue
+            cap = self.config.max_batch
+            if isinstance(engine, ExpertEngine):
+                cap = min(cap, engine.batch_buckets[-1])
+            take = [q.popleft() for _ in range(min(len(q), cap))]
+            self.n_queued -= len(take)
+            self.stats["batches"] += 1
+            if isinstance(engine, ExpertEngine):
+                engine.admit([p.req.uid for p in take],
+                             [p.req.prompt for p in take],
+                             [p.req.max_new_tokens for p in take])
+            elif engine is None:
+                for p in take:
+                    self._meta.pop(p.req.uid, None)
+                    self._done.append(self._response(
+                        p, name, np.zeros(p.req.max_new_tokens, np.int32)))
+            else:
+                # legacy blocking engines: one padded batch call
+                m = max(len(p.req.prompt) for p in take)
+                toks = np.zeros((len(take), m), np.int32)
+                for i, p in enumerate(take):
+                    toks[i, :len(p.req.prompt)] = p.req.prompt
+                gen = np.asarray(engine.generate(
+                    toks, max(p.req.max_new_tokens for p in take)))
+                for i, p in enumerate(take):
+                    self._meta.pop(p.req.uid, None)
+                    self._done.append(self._response(
+                        p, name, gen[i, :p.req.max_new_tokens]))
+
+    def _tick_engines(self) -> None:
+        for e in range(len(self.registry)):
+            engine = self.registry[e].backend
+            if isinstance(engine, ExpertEngine) and engine.n_active:
+                engine.tick()
+                self.stats["ticks"] += 1
+
+    def _harvest(self) -> None:
+        for e in range(len(self.registry)):
+            engine = self.registry[e].backend
+            if not isinstance(engine, ExpertEngine):
+                continue
+            for uid, toks in engine.poll():
+                p = self._meta.pop(uid)
+                self._done.append(self._response(
+                    p, self.registry[e].name,
+                    toks[:p.req.max_new_tokens]))
+
+    def _response(self, p: _Pending, name: str,
+                  tokens: np.ndarray) -> Response:
+        return Response(uid=p.req.uid, expert=name, fine_class=p.fine,
+                        tokens=tokens, coarse_scores=p.scores)
+
+
+class RoutedServer:
+    """ExpertMatcher in front of a fleet of ExpertEngines.
+
+    Seed-compatible façade over Router + Scheduler: ``serve`` is
+    submit-then-drain, returning responses in request order. Incremental
+    users call ``submit``/``step`` directly for continuous batching.
+    """
+
+    def __init__(self, matcher: ExpertMatcher, registry: ExpertRegistry,
+                 *, max_batch: int = 16, route_cache_size: int = 4096,
+                 use_fine_kernel: bool = True):
+        assert len(registry) == matcher.n_experts, "registry/bank mismatch"
+        self.matcher = matcher
+        self.registry = registry
+        self.router = Router(matcher, cache_size=route_cache_size,
+                             use_fine_kernel=use_fine_kernel)
+        self.scheduler = Scheduler(self.router, registry,
+                                   SchedulerConfig(max_batch=max_batch))
+
+    def submit(self, requests: Sequence[Request]) -> int:
+        return self.scheduler.submit(requests)
+
+    def step(self) -> List[Response]:
+        return self.scheduler.step()
+
+    def serve(self, requests: Sequence[Request]) -> List[Response]:
+        if not requests:
+            return []
+        got: Dict[int, Response] = {}
+        todo = list(requests)
+        while todo or self.scheduler.has_work:
+            if todo:
+                todo = todo[self.scheduler.submit(todo):]
+            for r in self.scheduler.step():
+                got[r.uid] = r
+        return [got[r.uid] for r in requests]
+
+    @property
+    def stats(self) -> Dict:
+        engines = {self.registry[e].name: self.registry[e].backend.stats
+                   for e in range(len(self.registry))
+                   if isinstance(self.registry[e].backend, ExpertEngine)}
+        return {"scheduler": self.scheduler.stats,
+                "router": self.router.stats, "engines": engines}

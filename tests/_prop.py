@@ -1,0 +1,85 @@
+"""Minimal deterministic fallback for ``hypothesis`` property tests.
+
+The container image does not ship ``hypothesis`` (and the assignment
+forbids installing new packages), but the property tests are too valuable
+to skip wholesale. This module implements the tiny subset of the
+hypothesis API the suite uses — ``given``, ``settings`` and the
+``integers`` / ``floats`` / ``booleans`` / ``sampled_from`` strategies —
+by materialising a fixed, seeded sample of examples per test and running
+the test body once per example. When the real hypothesis is available the
+test modules import it instead (see their guarded imports), so this file
+only defines behaviour for the degraded environment.
+
+Not supported (not needed by this suite): shrinking, ``assume``,
+composite strategies, stateful testing.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+_FALLBACK_EXAMPLES = 12  # examples per test when hypothesis is absent
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng: np.random.Generator):
+        return self._sampler(rng)
+
+
+class strategies:  # mirrors ``hypothesis.strategies`` as a namespace
+    @staticmethod
+    def integers(min_value, max_value):
+        lo, hi = int(min_value), int(max_value)
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng):
+            v = float(rng.uniform(lo, hi))
+            return v if math.isfinite(v) else lo
+        return _Strategy(draw)
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+
+def settings(max_examples=None, **_kw):
+    """Stand-in for ``hypothesis.settings``: honours ``max_examples``
+    (capped at the fallback budget — each example typically jit-compiles
+    a fresh shape, so examples are much pricier here than under real
+    hypothesis); everything else is ignored."""
+    def deco(fn):
+        if max_examples is not None:
+            fn._max_examples = min(int(max_examples), _FALLBACK_EXAMPLES)
+        return fn
+    return deco
+
+
+def given(*strats):
+    """Run the wrapped test over a fixed seeded grid of examples."""
+    def deco(fn):
+        # NB: deliberately no functools.wraps — pytest must see the
+        # zero-arg wrapper signature, not the original one, or it treats
+        # the strategy-filled parameters as missing fixtures.
+        def wrapper():
+            rng = np.random.default_rng(0xE7)
+            n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+            for _ in range(n):
+                drawn = tuple(s.sample(rng) for s in strats)
+                fn(*drawn)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -25,9 +25,11 @@ def _bank(K, D, H, seed=0):
     return params, states
 
 
+# interpret-mode sizes are capped for tier-1 runtime: the multi-tile
+# grid case (B=256 > block_m) uses the small-D bank, not the 784-dim one
 @pytest.mark.parametrize("B,D,H,K", [
-    (32, 784, 128, 6), (64, 784, 128, 2), (128, 512, 64, 10),
-    (16, 100, 32, 3), (256, 784, 128, 6),
+    (32, 784, 128, 6), (128, 512, 64, 10),
+    (16, 100, 32, 3), (256, 100, 32, 3),
 ])
 def test_expert_score_shapes(B, D, H, K):
     params, states = _bank(K, D, H, seed=B + K)
@@ -68,8 +70,8 @@ def test_cosine_scores(B, M, h):
     (4, 8, 2, 64, 1024, 0, jnp.float32),
     (2, 4, 4, 64, 512, 0, jnp.float32),
     (4, 8, 2, 64, 1024, 256, jnp.float32),
-    (1, 16, 2, 128, 2048, 0, jnp.float32),
-    (2, 8, 2, 64, 1024, 0, jnp.bfloat16),
+    (1, 16, 2, 128, 1024, 0, jnp.float32),
+    (2, 8, 2, 64, 512, 0, jnp.bfloat16),
 ])
 def test_decode_attention(B, H, KV, dh, S, win, dtype):
     ks = jax.random.split(jax.random.PRNGKey(S + H), 3)

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: seeded fallback grid
+    from _prop import given, settings, strategies as st
 
 from repro.core import (MatcherConfig, build_matcher, init_ae, recon_mse,
                         stack_bank, train_ae)
@@ -95,7 +99,7 @@ def test_trained_bank_separates_two_distributions():
 # ---------------------------------------------------------------------------
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=8, deadline=None)
 @given(st.integers(1, 16), st.integers(2, 6),
        st.floats(0.1, 10.0, allow_nan=False))
 def test_mse_scale_property(b, k, scale):
@@ -110,7 +114,7 @@ def test_mse_scale_property(b, k, scale):
     assert np.isfinite(s).all() and (s >= 0).all()
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=6, deadline=None)
 @given(st.integers(2, 8), st.integers(2, 10))
 def test_route_consistency_property(b, k):
     """route() must agree with its components for any bank size."""
@@ -127,7 +131,7 @@ def test_route_consistency_property(b, k):
     assert (fine >= 0).all() and (fine < 12).all()
 
 
-@settings(max_examples=30, deadline=None)
+@settings(max_examples=8, deadline=None)
 @given(st.integers(1, 5), st.integers(1, 7))
 def test_cosine_bounds_property(b, m_):
     a = jax.random.normal(jax.random.PRNGKey(b), (b, 16))

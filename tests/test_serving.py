@@ -1,0 +1,282 @@
+"""Serving subsystem tests: scheduler/engine/router behaviour under
+mixed-shape traffic, plus kernel-vs-reference routing parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (ExpertRegistry, MatcherConfig, build_matcher,
+                        train_bank)
+from repro.core.autoencoder import bank_scores
+from repro.data import load_benchmark
+from repro.models import build_model
+from repro.serve import (ExpertEngine, Request, Response, RoutedServer,
+                         bucket_for, make_buckets)
+from repro.serve.router import Router
+
+
+@pytest.fixture(scope="module")
+def bench():
+    return load_benchmark(names=["mnist", "har"], n_per_dataset=400, seed=0)
+
+
+@pytest.fixture(scope="module")
+def matcher(bench):
+    names = list(bench)
+    aes, _ = train_bank([(n, bench[n]["server"][0]) for n in names],
+                        epochs=12, batch_size=64)
+    cents = [(bench[n]["server"][0], bench[n]["server"][1]) for n in names]
+    return build_matcher(aes, names, cents), names
+
+
+def _engine(seed=0, max_len=64):
+    cfg = get_config("smollm-135m").reduced(name=f"eng-{seed}")
+    model = build_model(cfg)
+    return ExpertEngine(model, model.init(jax.random.PRNGKey(seed)),
+                        max_len=max_len)
+
+
+def _server(matcher, max_batch=4):
+    m, names = matcher
+    reg = ExpertRegistry()
+    for i, n in enumerate(names):
+        reg.add(n, _engine(seed=i))
+    return RoutedServer(m, reg, max_batch=max_batch), names
+
+
+# -- buckets ----------------------------------------------------------------
+
+
+def test_bucket_ladder():
+    assert make_buckets(8, 64) == (8, 16, 32, 64)
+    assert make_buckets(1, 12) == (1, 2, 4, 8, 12)
+    assert bucket_for(3, (4, 8)) == 4
+    assert bucket_for(9, (4, 8)) == 8  # clamps to largest
+
+
+# -- engine -----------------------------------------------------------------
+
+
+def test_engine_rows_finish_independently():
+    """A row with small max_new is harvested before its group retires."""
+    eng = _engine()
+    rng = np.random.default_rng(0)
+    eng.admit([7, 8], [rng.integers(0, 50, 5), rng.integers(0, 50, 5)],
+              max_new=[1, 6])
+    early = dict(eng.poll())
+    assert 7 in early and early[7].shape == (1,)   # done at prefill
+    assert 8 not in early
+    while eng.n_active:
+        eng.tick()
+    late = dict(eng.poll())
+    assert late[8].shape == (6,)
+
+
+def test_engine_generate_matches_seed_contract():
+    eng = _engine()
+    toks = np.random.default_rng(1).integers(0, 50, size=(3, 9))
+    out = eng.generate(toks, 5)
+    assert out.shape == (3, 5)
+    assert out.dtype == np.int32
+
+
+# -- routed server end to end ----------------------------------------------
+
+
+def test_uid_mapping_out_of_order(matcher, bench):
+    """Responses must map to the right uid even though execution order is
+    grouped per expert / length bucket, not arrival order."""
+    srv, names = _server(matcher)
+    rng = np.random.default_rng(2)
+    reqs, truth = [], {}
+    # interleave experts and shapes so per-expert grouping reorders rows
+    for uid in range(24):
+        n = names[uid % 2]
+        x, _ = bench[n]["client_a"]
+        reqs.append(Request(
+            uid=uid, features=x[uid],
+            prompt=rng.integers(0, 100, size=int(rng.integers(2, 40))),
+            max_new_tokens=int(rng.integers(1, 9))))
+        truth[uid] = n
+    resps = srv.serve(reqs)
+    assert [r.uid for r in resps] == [q.uid for q in reqs]
+    acc = np.mean([r.expert == truth[r.uid] for r in resps])
+    assert acc > 0.8
+    for r, q in zip(resps, reqs):
+        assert r.tokens.shape == (q.max_new_tokens,)
+        assert r.fine_class >= 0
+        assert r.coarse_scores is not None
+
+
+def test_jit_cache_bounded_across_50_mixed_shape_requests(matcher, bench):
+    """50 requests with ~unique (prompt len, max_new) combos must compile
+    a bounded executable set: buckets, not request shapes, key the cache."""
+    srv, names = _server(matcher)
+    rng = np.random.default_rng(3)
+    reqs = []
+    for uid in range(50):
+        n = names[uid % 2]
+        x, _ = bench[n]["client_a"]
+        reqs.append(Request(
+            uid=uid, features=x[uid % 100],
+            prompt=rng.integers(0, 100, size=1 + (uid * 7) % 60),
+            max_new_tokens=1 + uid % 12))
+    resps = srv.serve(reqs)
+    assert len(resps) == 50
+    for e in range(len(srv.registry)):
+        st = srv.registry[e].backend.stats
+        n_len = len(srv.registry[e].backend.len_buckets)
+        n_bat = len(srv.registry[e].backend.batch_buckets)
+        assert st.prefill_compiles <= n_len * n_bat
+        assert st.decode_compiles <= n_bat
+        # the practical bound the ISSUE cares about: far fewer distinct
+        # executables than distinct request shapes
+        assert st.jit_cache_entries <= 20, st
+    # and replaying the identical traffic compiles nothing new
+    before = [srv.registry[e].backend.stats.jit_cache_entries
+              for e in range(len(srv.registry))]
+    srv.serve(reqs)
+    after = [srv.registry[e].backend.stats.jit_cache_entries
+             for e in range(len(srv.registry))]
+    assert before == after
+
+
+def test_continuous_batching_coalesces_across_submits(matcher, bench):
+    """Requests from separate submit() calls join one micro-batch."""
+    srv, names = _server(matcher, max_batch=8)
+    x, _ = bench[names[0]]["client_a"]
+    rng = np.random.default_rng(4)
+    mk = lambda uid: Request(uid=uid, features=x[0],
+                             prompt=rng.integers(0, 100, size=10),
+                             max_new_tokens=2)
+    srv.submit([mk(0), mk(1)])
+    srv.submit([mk(2), mk(3)])          # second call, same expert+bucket
+    while srv.scheduler.has_work:
+        srv.step()
+    eng = srv.registry[0].backend
+    assert eng.stats.prefill_calls == 1  # one coalesced micro-batch
+    assert eng.stats.rows_served == 4
+
+
+def test_backpressure_prefix_admission(matcher, bench):
+    srv, names = _server(matcher)
+    srv.scheduler.config.max_queue = 3
+    x, _ = bench[names[0]]["client_a"]
+    reqs = [Request(uid=u, features=x[u], prompt=np.arange(5),
+                    max_new_tokens=1) for u in range(6)]
+    assert srv.submit(reqs) == 3         # prefix admitted, tail rejected
+    assert srv.scheduler.stats["rejected"] == 3
+    got, todo = {}, reqs[3:]             # resubmit only the rejected tail
+    while todo or srv.scheduler.has_work:
+        if todo:
+            todo = todo[srv.scheduler.submit(todo):]
+        for r in srv.step():
+            got[r.uid] = r
+    assert sorted(got) == list(range(6))
+
+
+# -- router -----------------------------------------------------------------
+
+
+def test_router_fingerprint_cache_consistency(matcher, bench):
+    m, names = matcher
+    router = Router(m)
+    x, _ = bench[names[0]]["client_a"]
+    r1 = router.route(x[:16])
+    assert r1.cache_hits == 0
+    r2 = router.route(x[:16])
+    assert r2.cache_hits == 16
+    np.testing.assert_array_equal(r1.coarse, r2.coarse)
+    np.testing.assert_array_equal(r1.fine, r2.fine)
+    np.testing.assert_allclose(r1.coarse_score, r2.coarse_score)
+
+
+def test_max_batch_above_engine_bucket_is_capped(matcher, bench):
+    """Scheduler max_batch larger than the engine's biggest batch bucket
+    must split micro-batches instead of crashing admit()."""
+    srv, names = _server(matcher, max_batch=32)
+    x, _ = bench[names[0]]["client_a"]
+    reqs = [Request(uid=u, features=x[0], prompt=np.arange(6),
+                    max_new_tokens=1) for u in range(20)]
+    resps = srv.serve(reqs)
+    assert len(resps) == 20
+    assert srv.registry[0].backend.stats.prefill_calls >= 2  # split
+
+
+def test_none_backend_completes_and_uid_is_reusable(matcher, bench):
+    m, names = matcher
+    from repro.core import ExpertRegistry
+    reg = ExpertRegistry()
+    for n in names:
+        reg.add(n, None)  # no engines at all
+    srv = RoutedServer(m, reg)
+    x, _ = bench[names[0]]["client_a"]
+    req = Request(uid=1, features=x[0], prompt=np.arange(4),
+                  max_new_tokens=3)
+    r1 = srv.serve([req])
+    assert r1[0].tokens.shape == (3,) and not r1[0].tokens.any()
+    r2 = srv.serve([req])  # uid free again after completion
+    assert r2[0].uid == 1
+    assert not srv.scheduler._meta  # no in-flight leak
+
+
+def test_router_chunks_oversized_batches(matcher, bench):
+    """Batches beyond the largest row bucket are routed in chunks and
+    still produce reference-identical decisions."""
+    m, names = matcher
+    small = Router(m, max_rows=16)
+    ref = Router(m)
+    x = bench[names[0]]["client_a"][0][:40]   # 40 rows > max_rows=16
+    got = small.route(x)
+    want = ref.route(x)
+    np.testing.assert_array_equal(got.coarse, want.coarse)
+    np.testing.assert_array_equal(got.fine, want.fine)
+
+
+def test_router_lru_eviction(matcher, bench):
+    m, names = matcher
+    router = Router(m, cache_size=8)
+    x, _ = bench[names[0]]["client_a"]
+    router.route(x[:32])
+    assert len(router._lru) == 8
+
+
+# -- kernel vs reference parity --------------------------------------------
+
+
+def test_coarse_kernel_parity_with_trained_bn_state(matcher, bench):
+    """use_kernel=True must score with the real BatchNorm statistics:
+    on a trained AE bank (non-trivial BN state) the Pallas path and the
+    reference bank_scores must agree (regression for the dropped
+    bank_states bug)."""
+    m, names = matcher
+    st = np.asarray(m.bank_states["mean"])
+    assert np.abs(st).max() > 1e-3, "BN state is trivial; test is vacuous"
+    x, _ = bench[names[0]]["client_a"]
+    x = jnp.asarray(x[:64])
+    from repro.core.matcher import ExpertMatcher
+    km = ExpertMatcher(m.bank_params, m.bank_states, names, m.centroids,
+                       m.centroid_mask, MatcherConfig(use_kernel=True))
+    got = np.asarray(km.coarse_scores(x))
+    want = np.asarray(bank_scores(m.bank_params, m.bank_states, x))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+    # and the routing decision is identical
+    np.testing.assert_array_equal(np.asarray(km.assign_coarse(x)),
+                                  np.asarray(m.assign_coarse(x)))
+
+
+def test_fine_kernel_parity_with_reference(matcher, bench):
+    """Router's grouped Pallas cosine path == matcher.assign_fine."""
+    m, names = matcher
+    router = Router(m, use_fine_kernel=True)
+    ref_router = Router(m, use_fine_kernel=False)
+    xs = np.concatenate([bench[n]["client_a"][0][:20] for n in names])
+    got = router.route(xs)
+    want = ref_router.route(xs)
+    np.testing.assert_array_equal(got.coarse, want.coarse)
+    np.testing.assert_array_equal(got.fine, want.fine)
+    # cross-check against the matcher's own fine path
+    direct = np.asarray(m.assign_fine(
+        jnp.asarray(xs), jnp.asarray(got.coarse[:, 0])))
+    np.testing.assert_array_equal(got.fine, direct)

@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: seeded fallback grid
+    from _prop import given, settings, strategies as st
 
 from repro.data import (adaptive_avg_pool_1d, load_benchmark, generate,
                         server_client_split, synthetic_token_stream, to_784)
@@ -83,7 +87,7 @@ def test_generators_shapes_and_classes(name):
     assert np.isfinite(x784).all()
 
 
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=8, deadline=None)
 @given(st.integers(2, 50), st.integers(784, 3000))
 def test_adaptive_pool_preserves_mean(n, d):
     x = np.random.default_rng(n).normal(size=(n, d)).astype(np.float32)
@@ -147,9 +151,9 @@ def test_param_rules_divisibility_fallback():
 def test_cache_specs_long_context_sequence_sharding():
     from jax.sharding import PartitionSpec as P
     import jax as _jax
+    from repro.launch.mesh import make_host_mesh
     from repro.sharding.rules import cache_specs
-    mesh = _jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh()
     tree = {"k": _jax.ShapeDtypeStruct((16, 1, 4096, 8, 128), jnp.bfloat16),
             "t": _jax.ShapeDtypeStruct((), jnp.int32)}
     specs = cache_specs(tree, mesh, batch_size=1)
@@ -180,7 +184,7 @@ def test_module_cost_expands_scan_loops():
     assert fs == pytest.approx(fu, rel=0.01)
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=6, deadline=None)
 @given(st.integers(0, 100))
 def test_checkpoint_roundtrip_property(seed):
     """Random pytree shapes/dtypes survive save/load byte-exact."""

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: seeded fallback grid
+    from _prop import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core import (ExpertRegistry, MatcherConfig, build_matcher,
@@ -124,7 +128,7 @@ def test_trainer_microbatch_equivalence():
 # -- attention invariants (hypothesis) --------------------------------------
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=8, deadline=None)
 @given(st.integers(1, 3), st.sampled_from([64, 128]),
        st.sampled_from([0, 32]), st.booleans())
 def test_flash_equals_plain_attention(b, s, window, causal):
