@@ -13,32 +13,43 @@ Three traffic scenarios (the ISSUE's acceptance matrix):
   skewed   — 80% of traffic hammers one expert (hot-expert queueing)
   bursty   — on/off arrivals: idle gaps, then bursts at 10x rate
 
-  PYTHONPATH=src python benchmarks/serving_bench.py [--requests 60]
+crossed with two placement columns:
+  per-device — PR 1's path: one independent ExpertEngine per expert
+  banked     — plan_placement banks homogeneous experts into one
+               vmapped/sharded dispatch over a mesh ``expert`` axis
+               (``--devices N`` forces N host CPU devices so the mesh
+               path runs on a laptop/CI box)
+
+  PYTHONPATH=src python benchmarks/serving_bench.py [--requests 60] \
+      [--placement {per-device,banked}] [--devices 8]
 
 Output: one CSV-ish line per scenario,
-  scenario,n,throughput_rps,p50_ms,p99_ms,batches,prefill_compiles
+  scenario,placement,n,throughput_rps,p50_ms,p99_ms,batches,prefill_compiles
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
 sys.path.insert(0, "src")
 
-import jax
 import numpy as np
-
-from repro.configs import get_config
-from repro.core import ExpertRegistry, build_matcher, train_bank
-from repro.data import load_benchmark
-from repro.models import build_model
-from repro.serve import ExpertEngine, Request, RoutedServer
 
 DATASETS = ["mnist", "har", "reuters"]
 
 
-def build_server(n_per_dataset: int, epochs: int, max_batch: int):
+def build_server(n_per_dataset: int, epochs: int, max_batch: int,
+                 placement: str):
+    import jax
+    from repro.configs import get_config
+    from repro.core import ExpertRegistry, build_matcher, train_bank
+    from repro.data import load_benchmark
+    from repro.launch.mesh import make_expert_mesh
+    from repro.models import build_model
+    from repro.serve import ExpertEngine, RoutedServer, plan_placement
+
     bench = load_benchmark(names=DATASETS, n_per_dataset=n_per_dataset,
                            seed=0)
     names = list(bench)
@@ -52,7 +63,25 @@ def build_server(n_per_dataset: int, epochs: int, max_batch: int):
         model = build_model(cfg)
         registry.add(n, ExpertEngine(
             model, model.init(jax.random.PRNGKey(i)), max_len=64))
-    return RoutedServer(matcher, registry, max_batch=max_batch), bench, names
+    plan = None
+    if placement == "banked":
+        mesh = make_expert_mesh()
+        plan = plan_placement(registry, mesh=mesh)
+        print(f"# placement over {len(jax.devices())} device(s):",
+              flush=True)
+        for line in plan.describe(registry.names).splitlines():
+            print(f"#   {line}", flush=True)
+    server = RoutedServer(matcher, registry, max_batch=max_batch,
+                          placement=plan)
+    return server, bench, names
+
+
+def total_prefill_compiles(server) -> int:
+    st = server.stats
+    # engine stats are per ExpertEngine; bank stats are per bank (each
+    # bank serves several experts but counts its executables once)
+    return (sum(e.prefill_compiles for e in st["engines"].values())
+            + sum(b.prefill_compiles for b in st["banks"].values()))
 
 
 def arrivals_for(scenario: str, n: int, rate: float,
@@ -79,8 +108,9 @@ def expert_mix(scenario: str, n: int, n_experts: int,
     return rng.integers(0, n_experts, size=n)
 
 
-def run_scenario(scenario: str, server: RoutedServer, bench, names,
+def run_scenario(scenario: str, server, bench, names,
                  n: int, rate: float, seed: int) -> dict:
+    from repro.serve import Request
     rng = np.random.default_rng(seed)
     t_arr = arrivals_for(scenario, n, rate, rng)
     which = expert_mix(scenario, n, len(names), rng)
@@ -96,8 +126,7 @@ def run_scenario(scenario: str, server: RoutedServer, bench, names,
     now, i, done_at = 0.0, 0, {}
     sched = server.scheduler
     batches0 = sched.stats["batches"]
-    compiles0 = sum(e.prefill_compiles
-                    for e in server.stats["engines"].values())
+    compiles0 = total_prefill_compiles(server)
     while i < n or sched.has_work:
         while i < n and t_arr[i] <= now:
             got = sched.submit([reqs[i]])
@@ -118,9 +147,7 @@ def run_scenario(scenario: str, server: RoutedServer, bench, names,
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
             "batches": sched.stats["batches"] - batches0,
-            "prefill_compiles": sum(
-                e.prefill_compiles
-                for e in server.stats["engines"].values()) - compiles0}
+            "prefill_compiles": total_prefill_compiles(server) - compiles0}
 
 
 def main():
@@ -132,17 +159,34 @@ def main():
     ap.add_argument("--epochs", type=int, default=10)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--placement", choices=("per-device", "banked"),
+                    default="per-device",
+                    help="per-device: one ExpertEngine per expert (PR 1); "
+                         "banked: plan_placement over a mesh expert axis")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host CPU devices (multi-device dry-run "
+                         "for the banked placement path); 0 = leave the "
+                         "platform's real device count")
     args = ap.parse_args()
     if args.requests < 1:
         ap.error("--requests must be >= 1")
     if args.rate <= 0:
         ap.error("--rate must be > 0")
+    if args.devices:
+        # must land before jax initialises its backend (first computation
+        # happens inside build_server, so this is early enough)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+
+    from repro.serve import Request
 
     t0 = time.time()
     server, bench, names = build_server(args.n_per_dataset, args.epochs,
-                                        args.max_batch)
+                                        args.max_batch, args.placement)
     print(f"# server up in {time.time()-t0:.1f}s "
-          f"({len(names)} experts)", flush=True)
+          f"({len(names)} experts, placement={args.placement})",
+          flush=True)
 
     # warmup: populate jit caches so scenario 1 isn't charged compiles
     rng = np.random.default_rng(1)
@@ -153,14 +197,17 @@ def main():
     server.serve(warm)
     print("# warmup done", flush=True)
 
-    print("scenario,n,throughput_rps,p50_ms,p99_ms,batches,"
+    print("scenario,placement,n,throughput_rps,p50_ms,p99_ms,batches,"
           "prefill_compiles")
     for scenario in ("uniform", "skewed", "bursty"):
         r = run_scenario(scenario, server, bench, names,
                          args.requests, args.rate, args.seed)
-        print(f"{r['scenario']},{r['n']},{r['throughput_rps']:.1f},"
+        print(f"{r['scenario']},{args.placement},{r['n']},"
+              f"{r['throughput_rps']:.1f},"
               f"{r['p50_ms']:.1f},{r['p99_ms']:.1f},{r['batches']},"
               f"{r['prefill_compiles']}", flush=True)
+    print(f"# total prefill compiles (warmup + scenarios): "
+          f"{total_prefill_compiles(server)}", flush=True)
 
 
 if __name__ == "__main__":

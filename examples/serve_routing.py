@@ -5,7 +5,13 @@ zoo architectures as expert backends (dense llama, attention-free RWKV6,
 MoE mixtral — reduced variants), and serves batched client requests:
 featurize -> coarse route -> fine route -> per-expert batched generation.
 
-  PYTHONPATH=src python examples/serve_routing.py [--requests 48]
+With ``--banked`` the placement planner banks each bankable
+architecture's two experts into one vmapped dispatch group (optionally
+sharded over a mesh ``expert`` axis when more than one device is
+visible); capacity-dispatch MoE experts (mixtral) stay singleton shards
+because their outputs depend on batch padding.
+
+  PYTHONPATH=src python examples/serve_routing.py [--requests 48] [--banked]
 """
 import argparse
 import sys
@@ -19,14 +25,18 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import ExpertRegistry, build_matcher, train_bank
 from repro.data import load_benchmark
+from repro.launch.mesh import make_expert_mesh
 from repro.models import build_model
-from repro.serve import ExpertEngine, Request, RoutedServer
+from repro.serve import (ExpertEngine, Request, RoutedServer,
+                         plan_placement)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--n-per-dataset", type=int, default=2000)
+    ap.add_argument("--banked", action="store_true",
+                    help="bank homogeneous experts via plan_placement")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -53,7 +63,14 @@ def main():
     print(f"[{time.time()-t0:5.1f}s] {len(registry)} expert engines up "
           f"(families: dense, rwkv, moe)")
 
-    server = RoutedServer(matcher, registry, max_batch=8)
+    plan = None
+    if args.banked:
+        plan = plan_placement(registry, mesh=make_expert_mesh())
+        print(f"[{time.time()-t0:5.1f}s] placement "
+              f"({len(jax.devices())} device(s)):")
+        for line in plan.describe(registry.names).splitlines():
+            print(f"    {line}")
+    server = RoutedServer(matcher, registry, max_batch=8, placement=plan)
     rng = np.random.default_rng(0)
     reqs, truth = [], []
     for uid in range(args.requests):
@@ -81,7 +98,7 @@ def main():
     st = server.stats
     print(f"scheduler: {st['scheduler']['batches']} micro-batches, "
           f"{st['router']['cache_hits']} route-cache hits")
-    for name, es in st["engines"].items():
+    for name, es in {**st["engines"], **st["banks"]}.items():
         print(f"  {name}: {es.prefill_calls} prefills, "
               f"{es.decode_steps} decode ticks, "
               f"{es.jit_cache_entries} compiled executables")

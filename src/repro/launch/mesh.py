@@ -46,5 +46,19 @@ def make_host_mesh():
     return compat_make_mesh((1, 1), ("data", "model"))
 
 
+def make_expert_mesh():
+    """1-D mesh over an ``expert`` axis spanning all visible devices.
+
+    Used by ``serve.placement``: banked expert engines shard their
+    stacked params/caches along this axis so co-located experts run on
+    their own devices under one dispatch. On a laptop/CI box drive it
+    with a forced host device count (set *before* jax initialises its
+    backend, e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    with ``JAX_PLATFORMS=cpu``); on a TPU slice the real chips show up
+    here instead.
+    """
+    return compat_make_mesh((len(jax.devices()),), ("expert",))
+
+
 def mesh_devices_required(multi_pod: bool) -> int:
     return 512 if multi_pod else 256

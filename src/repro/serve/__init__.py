@@ -1,16 +1,22 @@
-"""Serving subsystem: router -> scheduler -> per-expert engines.
+"""Serving subsystem: router -> scheduler -> expert shards.
 
 ``RoutedServer`` keeps the seed one-shot API (``serve(requests)``);
-``Scheduler.submit``/``step`` expose the continuous-batching path. See
-README.md in this directory for the design.
+``Scheduler.submit``/``step`` expose the continuous-batching path.
+``plan_placement`` + ``BankedEngine`` map homogeneous experts onto a
+mesh ``expert`` axis so one dispatch serves every co-located expert.
+See README.md in this directory for the design.
 """
 from .engine import EngineStats, ExpertEngine, bucket_for, make_buckets
+from .placement import (BankMember, BankedEngine, PlacementPlan, Shard,
+                        plan_placement)
 from .router import Router, RouteResult
 from .scheduler import (Request, Response, RoutedServer, Scheduler,
                         SchedulerConfig)
 
 __all__ = [
     "ExpertEngine", "EngineStats", "bucket_for", "make_buckets",
+    "BankedEngine", "BankMember", "PlacementPlan", "Shard",
+    "plan_placement",
     "Router", "RouteResult",
     "Request", "Response", "RoutedServer", "Scheduler", "SchedulerConfig",
 ]

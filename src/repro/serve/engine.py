@@ -36,7 +36,17 @@ from ..models.api import BaseModel
 
 
 def make_buckets(lo: int, hi: int) -> Tuple[int, ...]:
-    """Power-of-two ladder covering [lo, hi] (hi always included)."""
+    """Power-of-two ladder covering [lo, hi] (hi always included).
+
+    Raises instead of silently returning ``(hi,)`` when ``lo > hi`` —
+    that shape used to make ``ExpertEngine(max_len=4, min_len_bucket=8)``
+    build a ladder that ignored ``min_len_bucket`` entirely.
+    """
+    lo, hi = int(lo), int(hi)
+    if lo < 1:
+        raise ValueError(f"make_buckets: lo must be >= 1, got {lo}")
+    if lo > hi:
+        raise ValueError(f"make_buckets: lo {lo} > hi {hi}")
     out = []
     b = lo
     while b < hi:
@@ -72,7 +82,7 @@ class EngineStats:
 @dataclasses.dataclass
 class _Group:
     """One admitted micro-batch resident in the engine."""
-    uids: List[int]
+    uids: List[Any]                # caller ints or generate() tuples
     per_row_new: List[int]
     cache: Any
     tok: jnp.ndarray               # (Bb, 1) last emitted token
@@ -95,6 +105,7 @@ class ExpertEngine:
         self.stats = EngineStats()
         self._active: List[_Group] = []
         self._finished: List[Tuple[int, np.ndarray]] = []
+        self._gen_serial = 0           # private generate() uid namespace
         # shape-keyed executables; dict size == XLA compile count
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
         self._decode_fns: Dict[int, Any] = {}
@@ -199,15 +210,49 @@ class ExpertEngine:
     def n_active(self) -> int:
         return len(self._active)
 
+    @property
+    def has_pending(self) -> bool:
+        """Still decoding, or holding finished rows not yet polled —
+        the latter matters when an interleaved ``generate`` call ticked
+        another owner's group to completion and re-queued its rows."""
+        return bool(self._active or self._finished)
+
     # -- blocking convenience (seed-API compatible) ----------------------
     def generate(self, tokens, max_new: int,
                  extra_inputs: Optional[Dict] = None) -> np.ndarray:
-        """Greedy generation. tokens: (B, S) int32 -> (B, max_new)."""
+        """Greedy generation. tokens: (B, S) int32 -> (B, max_new).
+
+        Safe to interleave with scheduler-owned ``admit``/``tick``/
+        ``poll`` traffic: rows are admitted under a private uid
+        namespace (tuples can never collide with caller-issued int
+        uids), and only *this call's* rows are consumed from ``poll`` —
+        any other engine's finished rows drained along the way are put
+        back for their owner.
+        """
         del extra_inputs  # stub-embed models are not served token-only
         toks = np.asarray(tokens)
-        uids = list(range(len(toks)))
+        self._gen_serial += 1
+        uids = [("__generate__", self._gen_serial, i)
+                for i in range(len(toks))]
         self.admit(uids, list(toks), [max_new] * len(toks))
-        while self.n_active:
-            self.tick()
-        rows = dict(self.poll())
+        want = set(uids)
+        rows: Dict[Any, np.ndarray] = {}
+        stash: List[Tuple[Any, np.ndarray]] = []
+
+        def drain():
+            for uid, seq in self.poll():
+                if uid in want:
+                    rows[uid] = seq
+                else:
+                    stash.append((uid, seq))
+
+        try:
+            drain()
+            while len(rows) < len(uids):
+                self.tick()
+                drain()
+        finally:
+            # hand foreign rows back even if a tick raised, or their
+            # owners would never see them (has_pending goes false)
+            self._finished.extend(stash)
         return np.stack([rows[u] for u in uids])

@@ -1,0 +1,401 @@
+"""Sharded expert placement: banked multi-expert engines on a mesh.
+
+PR 1's serving stack instantiates one independent ``ExpertEngine`` per
+expert on a single implicit device: K experts mean K separate jit
+caches (K x ``len(batch_buckets) * len(len_buckets)`` executables), K
+serial prefill dispatches per scheduler step, and no use of the mesh
+machinery at all. This module makes placement first-class:
+
+  * ``plan_placement`` walks an ``ExpertRegistry``, groups *homogeneous*
+    experts (same architecture config and bucket ladders) and rebinds
+    each group to one ``BankedEngine``; heterogeneous or legacy backends
+    keep their own singleton shard. The result is a ``PlacementPlan``
+    the scheduler and router consume (shard ids ride through
+    ``RouteResult`` / ``Response``).
+  * ``BankedEngine`` stacks the params of its member experts along a
+    leading ``expert`` axis and serves *every* member's micro-batch with
+    a single jitted dispatch: ``vmap`` over the expert axis, optionally
+    partitioned across devices by GSPMD via a 1-D ``expert`` mesh
+    (``launch.mesh.make_expert_mesh``). Because the bank reuses one
+    bucket ladder, the executable count is bounded at
+    ``len(batch_buckets) * len(len_buckets)`` prefills +
+    ``len(batch_buckets)`` decode steps *total* — not per expert.
+
+On CPU the expert mesh is driven by a forced host device count
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before backend
+init); on a TPU slice the same code places banks across real chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..sharding import leading_sharding
+from .engine import EngineStats, ExpertEngine, bucket_for, make_buckets
+
+
+# ---------------------------------------------------------------------------
+# Banked engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _BankGroup:
+    """One admitted (E, Bb) micro-batch wave resident in the bank."""
+    uids: Dict[int, List[Any]]          # local expert -> row uids
+    per_row_new: Dict[int, List[int]]
+    done: Dict[int, List[bool]]
+    cache: Any
+    tok: jnp.ndarray                    # (E, Bb, 1) last emitted token
+    emitted: List[np.ndarray]           # one (E, Bb) plane per step
+    steps_left: int
+
+
+class BankedEngine:
+    """E homogeneous experts served by one vmapped/sharded dispatch.
+
+    Params are stacked on a leading expert axis; prefill/decode are
+    ``vmap`` over that axis, jitted once per (batch bucket, len bucket)
+    for the *whole bank*. With ``mesh`` (1-D over ``"expert"``, size
+    dividing ``n_experts``) the stacked params, caches and token planes
+    are sharded over devices, so each device runs only its resident
+    experts' slices of the single executable.
+    """
+
+    def __init__(self, model, params_list: Sequence[Any], *,
+                 max_len: int = 256, min_len_bucket: int = 8,
+                 len_buckets: Optional[Sequence[int]] = None,
+                 batch_buckets: Optional[Sequence[int]] = None,
+                 mesh: Optional[Mesh] = None):
+        if not params_list:
+            raise ValueError("BankedEngine needs at least one expert")
+        self.model = model
+        self.n_experts = len(params_list)
+        self.max_len = max_len
+        self.len_buckets = tuple(len_buckets) if len_buckets else \
+            make_buckets(min_len_bucket, max_len)
+        self.batch_buckets = tuple(batch_buckets or make_buckets(1, 16))
+        if mesh is not None and (
+                "expert" not in mesh.shape
+                or self.n_experts % mesh.shape["expert"]):
+            raise ValueError(
+                f"mesh expert axis {dict(mesh.shape)} must divide the "
+                f"bank's {self.n_experts} experts")
+        self.mesh = mesh if (mesh is not None
+                             and mesh.shape.get("expert", 1) > 1) else None
+        self.stats = EngineStats()
+        self._active: List[_BankGroup] = []
+        self._finished: List[Tuple[int, Any, np.ndarray]] = []
+        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+        self._decode_fns: Dict[int, Any] = {}
+        params = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                        *params_list)
+        if self.mesh is not None:
+            sh = leading_sharding(params, "expert", self.mesh)
+            params = jax.device_put(params, sh)
+        self.params = params
+
+    # -- sharded/bucketed executables -----------------------------------
+    def _bank_sharding(self):
+        """Prefix sharding for any expert-leading pytree (or None)."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P("expert"))
+
+    def _prefill_fn(self, Bb: int, Sb: int):
+        key = (Bb, Sb)
+        if key not in self._prefill_fns:
+            fn = jax.vmap(lambda p, b: self.model.prefill(
+                p, b, capacity=self.max_len))
+            s = self._bank_sharding()
+            if s is not None:
+                jitted = jax.jit(fn, in_shardings=(s, s),
+                                 out_shardings=(s, s))
+            else:
+                jitted = jax.jit(fn)
+            self._prefill_fns[key] = jitted
+            self.stats.prefill_compiles += 1
+        return self._prefill_fns[key]
+
+    def _decode_fn(self, Bb: int):
+        if Bb not in self._decode_fns:
+            fn = jax.vmap(self.model.decode)
+            s = self._bank_sharding()
+            if s is not None:
+                jitted = jax.jit(fn, in_shardings=(s, s, s),
+                                 out_shardings=(s, s), donate_argnums=(1,))
+            else:
+                jitted = jax.jit(fn, donate_argnums=(1,))
+            self._decode_fns[Bb] = jitted
+            self.stats.decode_compiles += 1
+        return self._decode_fns[Bb]
+
+    # -- admission -------------------------------------------------------
+    def pad_shape(self, n_rows: int, prompt_len: int) -> Tuple[int, int]:
+        """(batch bucket, length bucket) this admission would snap to."""
+        return (bucket_for(n_rows, self.batch_buckets),
+                bucket_for(prompt_len, self.len_buckets))
+
+    def admit(self, groups: Mapping[int, Tuple[Sequence[Any],
+                                               Sequence[np.ndarray],
+                                               Sequence[int]]]) -> None:
+        """Prefill one (E, Bb, Sb) wave: every member expert's micro-batch
+        in a single dispatch.
+
+        ``groups`` maps local expert index -> (uids, prompts, max_new);
+        experts without traffic this wave ride along as zero rows. Row
+        padding follows ``ExpertEngine.admit``: prompts right-truncated
+        to the largest length bucket, zero-padded to the common bucket.
+        """
+        rows_max, len_max = 0, 1
+        for local, (uids, prompts, max_new) in groups.items():
+            if not 0 <= local < self.n_experts:
+                raise ValueError(f"local expert {local} out of range")
+            if len(uids) != len(prompts) or len(uids) != len(max_new):
+                raise ValueError("uids/prompts/max_new length mismatch")
+            if len(prompts) > self.batch_buckets[-1]:
+                raise ValueError(
+                    f"micro-batch of {len(prompts)} rows exceeds the "
+                    f"largest batch bucket {self.batch_buckets[-1]}")
+            rows_max = max(rows_max, len(prompts))
+            len_max = max(len_max, max((len(p) for p in prompts),
+                                       default=1))
+        if rows_max == 0:
+            return
+        groups = {l: g for l, g in groups.items() if g[0]}
+        Bb = bucket_for(rows_max, self.batch_buckets)
+        Sb = bucket_for(len_max, self.len_buckets)
+        E = self.n_experts
+        toks = np.zeros((E, Bb, Sb), np.int32)
+        uids: Dict[int, List[Any]] = {}
+        per_row: Dict[int, List[int]] = {}
+        done: Dict[int, List[bool]] = {}
+        n_rows = 0
+        for local, (u, prompts, max_new) in groups.items():
+            for i, p in enumerate(prompts):
+                p = np.asarray(p, np.int32)[-Sb:]
+                toks[local, i, :len(p)] = p
+            uids[local] = list(u)
+            per_row[local] = [max(1, int(m)) for m in max_new]
+            done[local] = [False] * len(u)
+            n_rows += len(u)
+        logits, cache = self._prefill_fn(Bb, Sb)(
+            self.params, {"tokens": jnp.asarray(toks)})
+        self.stats.prefill_calls += 1
+        self.stats.rows_served += n_rows
+        self.stats.rows_padded += E * Bb - n_rows
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[..., None]
+        g = _BankGroup(uids=uids, per_row_new=per_row, done=done,
+                       cache=cache, tok=tok,
+                       emitted=[np.asarray(tok)[..., 0]],
+                       steps_left=max(m for ms in per_row.values()
+                                      for m in ms) - 1)
+        self._active.append(g)
+        self._harvest(g)
+        if g.steps_left <= 0 and self._retired(g):
+            self._active.remove(g)
+
+    # -- decoding --------------------------------------------------------
+    def tick(self) -> int:
+        """Advance every active wave one decode step — one dispatch per
+        wave covers all member experts. Returns waves advanced."""
+        advanced = 0
+        for g in list(self._active):
+            if g.steps_left > 0:
+                Bb = g.tok.shape[1]
+                logits, g.cache = self._decode_fn(Bb)(
+                    self.params, g.cache, {"token": g.tok})
+                g.tok = jnp.argmax(logits, axis=-1).astype(
+                    jnp.int32)[..., None]
+                g.emitted.append(np.asarray(g.tok)[..., 0])
+                g.steps_left -= 1
+                self.stats.decode_steps += 1
+                advanced += 1
+            self._harvest(g)
+            if g.steps_left <= 0 and self._retired(g):
+                self._active.remove(g)
+        return advanced
+
+    @staticmethod
+    def _retired(g: _BankGroup) -> bool:
+        """Every row harvested — same retirement rule as ExpertEngine
+        (today implied by steps_left == 0, kept explicit so the banked
+        and per-engine residency paths cannot silently diverge)."""
+        return all(all(d) for d in g.done.values())
+
+    def _harvest(self, g: _BankGroup) -> None:
+        have = len(g.emitted)
+        for local, row_uids in g.uids.items():
+            for i, uid in enumerate(row_uids):
+                if g.done[local][i] or g.per_row_new[local][i] > have:
+                    continue
+                seq = np.asarray(
+                    [plane[local, i] for plane in
+                     g.emitted[:g.per_row_new[local][i]]], np.int32)
+                self._finished.append((local, uid, seq))
+                self.stats.tokens_generated += len(seq)
+                g.done[local][i] = True
+
+    def poll(self) -> List[Tuple[int, Any, np.ndarray]]:
+        """Drain finished (local expert, uid, tokens) triples."""
+        out, self._finished = self._finished, []
+        return out
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def has_pending(self) -> bool:
+        """Active waves or finished rows not yet polled."""
+        return bool(self._active or self._finished)
+
+
+@dataclasses.dataclass
+class BankMember:
+    """Registry-facing handle: one expert's slot inside a BankedEngine."""
+    bank: BankedEngine
+    local: int
+
+    def pad_shape(self, n_rows: int, prompt_len: int) -> Tuple[int, int]:
+        return self.bank.pad_shape(n_rows, prompt_len)
+
+    @property
+    def batch_buckets(self) -> Tuple[int, ...]:
+        return self.bank.batch_buckets
+
+    @property
+    def stats(self) -> EngineStats:
+        return self.bank.stats
+
+
+# ---------------------------------------------------------------------------
+# Placement planning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Shard:
+    """One dispatch group: either a bank of co-located experts or a
+    singleton wrapping whatever backend the registry already had."""
+    sid: int
+    experts: Tuple[int, ...]            # global registry indices
+    bank: Optional[BankedEngine] = None
+    devices: Tuple[Any, ...] = ()
+
+    @property
+    def banked(self) -> bool:
+        return self.bank is not None
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    shards: List[Shard]
+    shard_of: Dict[int, int]            # expert index -> shard id
+    mesh: Optional[Mesh] = None
+
+    def describe(self, names: Optional[Sequence[str]] = None) -> str:
+        lines = []
+        for s in self.shards:
+            label = ", ".join(names[e] if names else str(e)
+                              for e in s.experts)
+            dev = (f" on {len(s.devices)} device(s)" if s.devices else "")
+            kind = "bank" if s.banked else "solo"
+            lines.append(f"shard {s.sid} [{kind}]{dev}: {label}")
+        return "\n".join(lines)
+
+
+def _bankable(engine: ExpertEngine) -> bool:
+    """Banking is only sound for models whose per-row outputs don't
+    depend on batch padding: capacity-dispatch MoE computes its expert
+    capacity from the *total* (padded) token count and padding rows
+    consume capacity slots, so padding one member's micro-batch to the
+    wave-wide batch bucket could change a real row's tokens vs the
+    per-engine path. Those experts keep singleton shards."""
+    cfg = engine.model.cfg
+    return not (cfg.n_experts and cfg.moe_impl == "dispatch")
+
+
+def _bank_signature(engine: ExpertEngine):
+    """Experts are bankable iff they share arch config (minus name) and
+    bucket ladders — identical shapes, identical executables."""
+    cfg = engine.model.cfg.replace(name="")
+    return (cfg, engine.max_len, engine.len_buckets, engine.batch_buckets)
+
+
+def _bank_submesh(n_experts: int, mesh: Optional[Mesh], offset: int = 0):
+    """Largest-divisor slice of the expert mesh this bank can shard over.
+
+    ``offset`` rotates the device pool so successive banks land on
+    *disjoint* slices (wrapping once the pool is exhausted) instead of
+    all piling onto the mesh's first devices.
+    """
+    if mesh is None or "expert" not in mesh.shape:
+        return None, ()
+    devs = np.roll(np.asarray(mesh.devices).reshape(-1),
+                   -(offset % max(mesh.shape["expert"], 1)))
+    for d in range(min(len(devs), n_experts), 0, -1):
+        if n_experts % d == 0:
+            if d == 1:
+                return None, ()   # unsharded: params stay wherever jax
+                #                   puts them, claim no device
+            sub = Mesh(devs[:d], axis_names=("expert",))
+            return sub, tuple(devs[:d])
+    return None, ()
+
+
+def plan_placement(registry, *, mesh: Optional[Mesh] = None,
+                   min_bank: int = 2) -> PlacementPlan:
+    """Group homogeneous ``ExpertEngine`` backends into ``BankedEngine``s
+    and lay the shards out over ``mesh`` (1-D ``expert`` axis, see
+    ``launch.mesh.make_expert_mesh``).
+
+    Mutates ``registry`` in place: banked entries' backends become
+    ``BankMember`` handles (the per-expert engines they replace are
+    dropped, their params moving into the stacked bank). Groups smaller
+    than ``min_bank`` and non-``ExpertEngine`` backends keep singleton
+    shards. Returns the ``PlacementPlan`` the scheduler/router consume.
+    """
+    by_sig: Dict[Any, List[int]] = {}
+    for e in range(len(registry)):
+        backend = registry[e].backend
+        if isinstance(backend, BankMember):
+            raise ValueError(
+                f"expert {registry[e].name!r} is already bank-placed; "
+                "plan_placement rebinds backends in place and cannot "
+                "re-plan a planned registry — rebuild it from engines")
+        if isinstance(backend, ExpertEngine) and _bankable(backend):
+            by_sig.setdefault(_bank_signature(backend), []).append(e)
+
+    shards: List[Shard] = []
+    shard_of: Dict[int, int] = {}
+    cursor = 0                      # rotates banks onto disjoint devices
+    for experts in by_sig.values():
+        if len(experts) < min_bank:
+            continue
+        engines = [registry[e].backend for e in experts]
+        submesh, devices = _bank_submesh(len(experts), mesh, cursor)
+        cursor += len(devices)
+        bank = BankedEngine(
+            engines[0].model, [eng.params for eng in engines],
+            max_len=engines[0].max_len,
+            len_buckets=engines[0].len_buckets,
+            batch_buckets=engines[0].batch_buckets, mesh=submesh)
+        sid = len(shards)
+        shards.append(Shard(sid=sid, experts=tuple(experts), bank=bank,
+                            devices=devices))
+        for local, e in enumerate(experts):
+            registry[e].backend = BankMember(bank, local)
+            shard_of[e] = sid
+    for e in range(len(registry)):
+        if e in shard_of:
+            continue
+        sid = len(shards)
+        shards.append(Shard(sid=sid, experts=(e,)))
+        shard_of[e] = sid
+    return PlacementPlan(shards=shards, shard_of=shard_of, mesh=mesh)

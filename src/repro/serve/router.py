@@ -38,16 +38,26 @@ class RouteResult:
     coarse: np.ndarray        # (B, top_k) expert indices, best first
     coarse_score: np.ndarray  # (B, top_k) scores (lower = better)
     fine: np.ndarray          # (B,) class index within the top-1 expert
+    shard: Optional[np.ndarray] = None  # (B,) placement shard ids
     cache_hits: int = 0
 
 
 class Router:
-    """Batch router with bounded jit shapes and a fingerprint LRU."""
+    """Batch router with bounded jit shapes and a fingerprint LRU.
+
+    ``shard_of`` (expert index -> shard id, from a ``PlacementPlan``)
+    makes every ``RouteResult`` carry the shard serving each row, so the
+    scheduler can plan per-shard dispatch groups and responses demux
+    back through the right bank. Shard ids are derived from the top-1
+    expert *after* the LRU, so cached decisions stay placement-agnostic.
+    """
 
     def __init__(self, matcher: ExpertMatcher, *, cache_size: int = 4096,
                  use_fine_kernel: bool = True, max_rows: int = 256,
-                 interpret: bool = True):
+                 interpret: bool = True,
+                 shard_of: Optional[Dict[int, int]] = None):
         self.matcher = matcher
+        self.shard_of = dict(shard_of) if shard_of is not None else None
         self.use_fine_kernel = use_fine_kernel and \
             matcher.centroids is not None
         self.interpret = interpret
@@ -140,9 +150,19 @@ class Router:
 
         self.stats["routed"] += B
         self.stats["cache_hits"] += hits
-        return RouteResult(coarse, score, fine, cache_hits=hits)
+        shard = None
+        if self.shard_of is not None:
+            shard = np.asarray([self.shard_of.get(int(e), -1)
+                                for e in coarse[:, 0]], np.int64)
+        return RouteResult(coarse, score, fine, shard=shard,
+                           cache_hits=hits)
 
     def _remember(self, key: bytes, value) -> None:
-        self._lru[key] = value
+        # copy: the (c, s) rows arrive as views into a whole routed
+        # chunk's (rows, top_k) arrays — caching the views would pin
+        # every chunk's full arrays in the LRU for their lifetime
+        c, s, f = value
+        self._lru[key] = (np.array(c, np.int64), np.array(s, np.float32),
+                          int(f))
         if len(self._lru) > self.cache_size:
             self._lru.popitem(last=False)

@@ -3,14 +3,19 @@ serving system).
 
 Life of a request:
 
-  submit() -> Router.route (fingerprint LRU + Pallas scoring)
+  submit() -> Router.route (fingerprint LRU + Pallas scoring, shard ids
+              from the placement plan)
            -> per-expert FIFO queue, sub-bucketed by prompt-length bucket
-  step()   -> admission: per expert, pop the fullest length bucket into
-              one micro-batch (up to ``max_batch``) and prefill it into
-              the expert's engine
-           -> decode: every engine with resident groups advances one
-              token (one ``tick``)
-           -> harvest: finished rows become Responses immediately
+  step()   -> admission: per *shard*, pick one length bucket (fullest
+              wins, with age-based promotion so sparse buckets can't
+              starve) and admit one dispatch group — a banked shard
+              prefills every member expert's micro-batch in a single
+              call, a singleton shard behaves like PR 1's per-engine
+              path
+           -> decode: every shard with resident groups advances one
+              token (one ``tick`` per bank, not per expert)
+           -> harvest: finished rows become Responses immediately,
+              demuxed through the shard's expert list
   drain()  -> step() until all queues and engines are empty
 
 Because queues persist across calls, requests submitted in *different*
@@ -23,13 +28,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.matcher import ExpertMatcher
 from ..core.registry import ExpertRegistry
-from .engine import ExpertEngine, bucket_for
+from .engine import ExpertEngine
+from .placement import BankMember, PlacementPlan, Shard
 from .router import Router
 
 
@@ -48,12 +54,15 @@ class Response:
     fine_class: int
     tokens: np.ndarray
     coarse_scores: Optional[np.ndarray] = None
+    shard: int = -1                 # placement shard that served the row
 
 
 @dataclasses.dataclass
 class SchedulerConfig:
-    max_batch: int = 16             # micro-batch row cap
+    max_batch: int = 16             # micro-batch row cap (per expert)
     max_queue: int = 4096           # admission queue cap (backpressure)
+    promote_after: int = 4          # rounds a waiting bucket may be
+    #                                 skipped before it wins admission
 
 
 @dataclasses.dataclass
@@ -61,23 +70,66 @@ class _Pending:
     req: Request
     fine: int
     scores: np.ndarray
+    shard: int = -1
+    seq: int = 0                    # submit order, for age promotion
 
 
 class Scheduler:
-    """Routes, queues, batches and ticks a fleet of ExpertEngines."""
+    """Routes, queues, batches and ticks a fleet of expert shards."""
 
     def __init__(self, router: Router, registry: ExpertRegistry,
-                 config: Optional[SchedulerConfig] = None):
+                 config: Optional[SchedulerConfig] = None,
+                 placement: Optional[PlacementPlan] = None):
         self.router = router
         self.registry = registry
         self.config = config or SchedulerConfig()
+        self.placement = placement
+        if placement is not None:
+            # the plan must describe THIS registry: plan_placement
+            # rebound each banked expert's backend to a BankMember of
+            # its shard's bank — a stale plan for another registry
+            # would silently serve with the wrong experts' params
+            missing = set(range(len(registry))) - set(placement.shard_of)
+            if missing:
+                raise ValueError(
+                    f"placement plan does not cover experts "
+                    f"{sorted(missing)} (registry grown after "
+                    f"plan_placement?); re-plan on this registry")
+            for shard in placement.shards:
+                if not shard.banked:
+                    continue
+                for local, e in enumerate(shard.experts):
+                    be = registry[e].backend if e < len(registry) else None
+                    if not (isinstance(be, BankMember)
+                            and be.bank is shard.bank
+                            and be.local == local):
+                        raise ValueError(
+                            f"placement plan does not match registry at "
+                            f"expert {e}; re-plan with plan_placement "
+                            f"on this registry")
+            self.shards = list(placement.shards)
+        else:  # PR 1 behaviour: every expert is its own dispatch group
+            for e in range(len(registry)):
+                if isinstance(registry[e].backend, BankMember):
+                    raise ValueError(
+                        f"expert {registry[e].name!r} is bank-placed "
+                        "(plan_placement rebound its backend to a "
+                        "BankMember); pass that PlacementPlan via "
+                        "placement=")
+            self.shards = [Shard(sid=e, experts=(e,))
+                           for e in range(len(registry))]
+        self._shard_of = {e: s.sid for s in self.shards for e in s.experts}
         # queues[expert][len_bucket] -> FIFO of _Pending
         self.queues: Dict[int, Dict[int, collections.deque]] = \
             collections.defaultdict(lambda: collections.defaultdict(
                 collections.deque))
         self.n_queued = 0
+        self._seq = 0
+        self._skips: Dict[Tuple[int, int], int] = \
+            collections.defaultdict(int)   # (shard, bucket) skip rounds
         self.stats = {"submitted": 0, "rejected": 0, "batches": 0,
-                      "ticks": 0, "responses": 0}
+                      "ticks": 0, "responses": 0, "promotions": 0,
+                      "orphaned": 0}
         self._done: List[Response] = []
         self._meta: Dict[int, _Pending] = {}   # uid -> routing info
 
@@ -90,11 +142,11 @@ class Scheduler:
         they key response demultiplexing."""
         if not requests:
             return 0
-        seen = set(self._meta)
+        batch_seen = set()
         for r in requests:
-            if r.uid in seen:
+            if r.uid in self._meta or r.uid in batch_seen:
                 raise ValueError(f"duplicate in-flight uid {r.uid}")
-            seen.add(r.uid)
+            batch_seen.add(r.uid)
         room = max(self.config.max_queue - self.n_queued, 0)
         self.stats["rejected"] += len(requests) - min(len(requests), room)
         requests = requests[:room]
@@ -107,8 +159,15 @@ class Scheduler:
             e = int(routed.coarse[i, 0])
             engine = self.registry[e].backend
             sb = (engine.pad_shape(1, len(r.prompt))[1]
-                  if isinstance(engine, ExpertEngine) else len(r.prompt))
-            p = _Pending(r, int(routed.fine[i]), routed.coarse_score[i])
+                  if hasattr(engine, "pad_shape") else len(r.prompt))
+            # routed.shard is the placement-aware router's demux contract
+            # (identical to _shard_of when both come from one plan); the
+            # local map covers routers wired without a placement
+            sid = (int(routed.shard[i]) if routed.shard is not None
+                   else self._shard_of.get(e, -1))
+            self._seq += 1
+            p = _Pending(r, int(routed.fine[i]), routed.coarse_score[i],
+                         shard=sid, seq=self._seq)
             self.queues[e][sb].append(p)
             self._meta[r.uid] = p
             self.n_queued += 1
@@ -135,92 +194,192 @@ class Scheduler:
     def has_work(self) -> bool:
         if self.n_queued:
             return True
-        return any(isinstance(self.registry[e].backend, ExpertEngine)
-                   and self.registry[e].backend.n_active
-                   for e in range(len(self.registry)))
+        # has_pending, not n_active: an interleaved generate() call may
+        # tick a scheduler group to completion and park its rows in the
+        # engine's finished buffer — they still need a harvest step
+        return any(eng is not None and eng.has_pending
+                   for eng in map(self._shard_engine, self.shards))
 
     # -- internals -------------------------------------------------------
+    def _shard_engine(self, shard: Shard):
+        """The tickable engine behind a shard (bank or ExpertEngine);
+        None for stub/legacy backends that complete at admission."""
+        if shard.banked:
+            return shard.bank
+        engine = self.registry[shard.experts[0]].backend
+        return engine if isinstance(engine, ExpertEngine) else None
+
+    def _pick_bucket(self, shard: Shard) -> Optional[int]:
+        """Length bucket this shard admits this round.
+
+        Fullest bucket (summed over member experts) wins — best padding
+        efficiency — unless a non-empty bucket has been skipped
+        ``promote_after`` rounds in a row: then the starving bucket with
+        the oldest waiting head wins. Without promotion, sustained
+        traffic concentrated in one bucket starves sparse buckets
+        indefinitely (the fullest-first rule never lets them drain).
+        """
+        counts: Dict[int, int] = collections.defaultdict(int)
+        oldest: Dict[int, int] = {}
+        for e in shard.experts:
+            for sb, q in self.queues[e].items():
+                if q:
+                    counts[sb] += len(q)
+                    oldest[sb] = min(oldest.get(sb, q[0].seq), q[0].seq)
+        # prune drained buckets' counters: legacy backends key queues by
+        # raw prompt length, so without pruning _skips would grow one
+        # permanent entry per distinct length for the server's lifetime
+        for key in [k for k in self._skips if k[0] == shard.sid
+                    and k[1] not in counts]:
+            del self._skips[key]
+        if not counts:
+            return None
+        starving = [sb for sb in counts
+                    if self._skips[(shard.sid, sb)]
+                    >= self.config.promote_after]
+        if starving:
+            sb = min(starving, key=lambda b: oldest[b])
+            self.stats["promotions"] += 1
+        else:
+            sb = max(counts, key=lambda b: (counts[b], -oldest[b]))
+        for other in counts:
+            if other != sb:
+                self._skips[(shard.sid, other)] += 1
+        self._skips.pop((shard.sid, sb), None)
+        return sb
+
+    def _pop(self, e: int, sb: int, cap: int) -> List[_Pending]:
+        q = self.queues[e][sb]
+        take = [q.popleft() for _ in range(min(len(q), cap))]
+        self.n_queued -= len(take)
+        if not q:
+            # drop drained buckets: legacy backends key them by raw
+            # prompt length, so keeping empties would grow the dict (and
+            # _pick_bucket's scan) for the server's lifetime
+            del self.queues[e][sb]
+        return take
+
     def _admit_batches(self) -> None:
-        for e, by_len in self.queues.items():
-            if not any(by_len.values()):
+        for shard in self.shards:
+            sb = self._pick_bucket(shard)
+            if sb is None:
                 continue
-            engine = self.registry[e].backend
-            name = self.registry[e].name
-            # fullest length bucket first: best padding efficiency
-            sb = max(by_len, key=lambda b: len(by_len[b]))
-            q = by_len[sb]
-            if not q:
-                continue
-            cap = self.config.max_batch
-            if isinstance(engine, ExpertEngine):
-                cap = min(cap, engine.batch_buckets[-1])
-            take = [q.popleft() for _ in range(min(len(q), cap))]
-            self.n_queued -= len(take)
-            self.stats["batches"] += 1
-            if isinstance(engine, ExpertEngine):
-                engine.admit([p.req.uid for p in take],
-                             [p.req.prompt for p in take],
-                             [p.req.max_new_tokens for p in take])
-            elif engine is None:
-                for p in take:
-                    self._meta.pop(p.req.uid, None)
-                    self._done.append(self._response(
-                        p, name, np.zeros(p.req.max_new_tokens, np.int32)))
+            if shard.banked:
+                self._admit_banked(shard, sb)
             else:
-                # legacy blocking engines: one padded batch call
-                m = max(len(p.req.prompt) for p in take)
-                toks = np.zeros((len(take), m), np.int32)
-                for i, p in enumerate(take):
-                    toks[i, :len(p.req.prompt)] = p.req.prompt
-                gen = np.asarray(engine.generate(
-                    toks, max(p.req.max_new_tokens for p in take)))
-                for i, p in enumerate(take):
-                    self._meta.pop(p.req.uid, None)
-                    self._done.append(self._response(
-                        p, name, gen[i, :p.req.max_new_tokens]))
+                self._admit_single(shard.experts[0], sb)
+
+    def _admit_banked(self, shard: Shard, sb: int) -> None:
+        """One dispatch group: every member expert's micro-batch from the
+        chosen bucket rides a single BankedEngine prefill."""
+        bank = shard.bank
+        cap = min(self.config.max_batch, bank.batch_buckets[-1])
+        groups = {}
+        for local, e in enumerate(shard.experts):
+            take = self._pop(e, sb, cap)
+            if take:
+                groups[local] = ([p.req.uid for p in take],
+                                 [p.req.prompt for p in take],
+                                 [p.req.max_new_tokens for p in take])
+        if groups:
+            bank.admit(groups)
+            self.stats["batches"] += 1
+
+    def _admit_single(self, e: int, sb: int) -> None:
+        engine = self.registry[e].backend
+        name = self.registry[e].name
+        cap = self.config.max_batch
+        if isinstance(engine, ExpertEngine):
+            cap = min(cap, engine.batch_buckets[-1])
+        take = self._pop(e, sb, cap)
+        if not take:
+            return
+        self.stats["batches"] += 1
+        if isinstance(engine, ExpertEngine):
+            engine.admit([p.req.uid for p in take],
+                         [p.req.prompt for p in take],
+                         [p.req.max_new_tokens for p in take])
+        elif engine is None:
+            for p in take:
+                self._meta.pop(p.req.uid, None)
+                self._done.append(self._response(
+                    p, name, np.zeros(p.req.max_new_tokens, np.int32)))
+        else:
+            # legacy blocking engines: one padded batch call
+            m = max(len(p.req.prompt) for p in take)
+            toks = np.zeros((len(take), m), np.int32)
+            for i, p in enumerate(take):
+                toks[i, :len(p.req.prompt)] = p.req.prompt
+            gen = np.asarray(engine.generate(
+                toks, max(p.req.max_new_tokens for p in take)))
+            for i, p in enumerate(take):
+                self._meta.pop(p.req.uid, None)
+                self._done.append(self._response(
+                    p, name, gen[i, :p.req.max_new_tokens]))
 
     def _tick_engines(self) -> None:
-        for e in range(len(self.registry)):
-            engine = self.registry[e].backend
-            if isinstance(engine, ExpertEngine) and engine.n_active:
-                engine.tick()
+        for shard in self.shards:
+            eng = self._shard_engine(shard)
+            if eng is not None and eng.n_active:
+                eng.tick()
                 self.stats["ticks"] += 1
 
     def _harvest(self) -> None:
-        for e in range(len(self.registry)):
-            engine = self.registry[e].backend
-            if not isinstance(engine, ExpertEngine):
+        for shard in self.shards:
+            eng = self._shard_engine(shard)
+            if eng is None:
                 continue
-            for uid, toks in engine.poll():
+            for item in eng.poll():
+                if shard.banked:
+                    local, uid, toks = item
+                    name = self.registry[shard.experts[local]].name
+                else:
+                    uid, toks = item
+                    name = self.registry[shard.experts[0]].name
+                if uid not in self._meta and isinstance(uid, tuple):
+                    # generate()'s private tuple namespace: a call that
+                    # raised mid-flight leaves its group resident, and
+                    # its rows eventually surface here with no owner —
+                    # drop them (with a stat). Unknown *int* uids stay
+                    # a loud KeyError: that's a demux bug, not litter.
+                    self.stats["orphaned"] += 1
+                    continue
                 p = self._meta.pop(uid)
                 self._done.append(self._response(
-                    p, self.registry[e].name,
-                    toks[:p.req.max_new_tokens]))
+                    p, name, toks[:p.req.max_new_tokens]))
 
     def _response(self, p: _Pending, name: str,
                   tokens: np.ndarray) -> Response:
         return Response(uid=p.req.uid, expert=name, fine_class=p.fine,
-                        tokens=tokens, coarse_scores=p.scores)
+                        tokens=tokens, coarse_scores=p.scores,
+                        shard=p.shard)
 
 
 class RoutedServer:
-    """ExpertMatcher in front of a fleet of ExpertEngines.
+    """ExpertMatcher in front of a fleet of expert shards.
 
     Seed-compatible façade over Router + Scheduler: ``serve`` is
     submit-then-drain, returning responses in request order. Incremental
     users call ``submit``/``step`` directly for continuous batching.
+    Pass ``placement`` (from ``serve.placement.plan_placement``) to
+    serve banked multi-expert shards instead of one engine per expert.
     """
 
     def __init__(self, matcher: ExpertMatcher, registry: ExpertRegistry,
                  *, max_batch: int = 16, route_cache_size: int = 4096,
-                 use_fine_kernel: bool = True):
+                 use_fine_kernel: bool = True,
+                 placement: Optional[PlacementPlan] = None):
         assert len(registry) == matcher.n_experts, "registry/bank mismatch"
         self.matcher = matcher
         self.registry = registry
-        self.router = Router(matcher, cache_size=route_cache_size,
-                             use_fine_kernel=use_fine_kernel)
+        self.placement = placement
+        self.router = Router(
+            matcher, cache_size=route_cache_size,
+            use_fine_kernel=use_fine_kernel,
+            shard_of=placement.shard_of if placement else None)
         self.scheduler = Scheduler(self.router, registry,
-                                   SchedulerConfig(max_batch=max_batch))
+                                   SchedulerConfig(max_batch=max_batch),
+                                   placement=placement)
 
     def submit(self, requests: Sequence[Request]) -> int:
         return self.scheduler.submit(requests)
@@ -245,5 +404,12 @@ class RoutedServer:
         engines = {self.registry[e].name: self.registry[e].backend.stats
                    for e in range(len(self.registry))
                    if isinstance(self.registry[e].backend, ExpertEngine)}
+        banks = {}
+        for shard in self.scheduler.shards:
+            if shard.banked:
+                label = "bank%d(%s)" % (shard.sid, ",".join(
+                    self.registry[e].name for e in shard.experts))
+                banks[label] = shard.bank.stats
         return {"scheduler": self.scheduler.stats,
-                "router": self.router.stats, "engines": engines}
+                "router": self.router.stats, "engines": engines,
+                "banks": banks}

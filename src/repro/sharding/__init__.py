@@ -1,9 +1,11 @@
-from .context import axis_size, current_mesh, mesh_context, shard_act
+from .context import (axis_size, current_mesh, leading_sharding, mesh_context,
+                      shard_act)
 from .rules import param_specs, batch_spec, divisible
 
 __all__ = [
     "axis_size",
     "current_mesh",
+    "leading_sharding",
     "mesh_context",
     "shard_act",
     "param_specs",

@@ -69,3 +69,26 @@ def shard_act(x, spec: Sequence):
         return x
     p = _clean_spec(mesh, spec, x.shape)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, p))
+
+
+def leading_sharding(tree, axis: str, mesh: Optional[Mesh] = None):
+    """Pytree of NamedShardings that split every leaf's *leading* dim over
+    ``axis`` (replicating leaves the axis size does not divide).
+
+    This is the layout contract of banked expert serving: expert-stacked
+    params / caches / token buffers all carry the expert index as dim 0,
+    so one spec pytree places the whole bank. Returns ``None`` when there
+    is no usable mesh, so callers can fall back to unsharded jit.
+    """
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None or axis not in mesh.shape or mesh.shape[axis] == 1:
+        return None
+    n = mesh.shape[axis]
+
+    def leaf(x):
+        shape = getattr(x, "shape", ())
+        if len(shape) >= 1 and shape[0] % n == 0:
+            return NamedSharding(mesh, jax.sharding.PartitionSpec(axis))
+        return NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    return jax.tree_util.tree_map(leaf, tree)

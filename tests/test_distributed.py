@@ -87,3 +87,62 @@ def test_sharded_train_step_matches_single_device():
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert abs(res["ref_loss"] - res["sh_loss"]) < 1e-4, res
     assert res["max_param_diff"] < 5e-4, res
+
+
+PLACEMENT_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import json
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_expert_mesh
+from repro.models import build_model
+from repro.serve import BankedEngine
+
+assert len(jax.devices()) == 8, jax.devices()
+cfg = get_config("smollm-135m").reduced(name="placed")
+model = build_model(cfg)
+params = [model.init(jax.random.PRNGKey(i)) for i in range(4)]
+rng = np.random.default_rng(0)
+groups = {i: ([i], [rng.integers(0, 50, 5 + 3 * i)], [4])
+          for i in range(4)}
+
+def run(mesh):
+    bank = BankedEngine(model, params, max_len=32, mesh=mesh)
+    bank.admit(groups)
+    while bank.n_active:
+        bank.tick()
+    return {(l, u): t.tolist() for l, u, t in bank.poll()}
+
+mesh = make_expert_mesh()  # (expert=8) -> bank submesh below
+from repro.serve.placement import _bank_submesh
+sub, devs = _bank_submesh(4, mesh)
+assert sub is not None and dict(sub.shape) == {"expert": 4}, sub
+sharded = run(sub)
+single = run(None)
+match = all(single[k] == sharded[k] for k in single)
+print(json.dumps({"n_devices": len(jax.devices()),
+                  "bank_devices": len(devs), "match": match}))
+"""
+
+
+@pytest.mark.slow
+def test_banked_placement_sharded_matches_single_device():
+    """A 4-expert bank sharded over 4 of 8 host devices must emit the
+    same tokens as the unsharded bank (GSPMD numerics check for the
+    serving placement path)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", PLACEMENT_SCRIPT], capture_output=True,
+        text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_devices"] == 8 and res["bank_devices"] == 4, res
+    assert res["match"], res

@@ -1,5 +1,6 @@
 """Serving subsystem tests: scheduler/engine/router behaviour under
-mixed-shape traffic, plus kernel-vs-reference routing parity."""
+mixed-shape traffic, banked placement equivalence, plus
+kernel-vs-reference routing parity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,9 +12,15 @@ from repro.core import (ExpertRegistry, MatcherConfig, build_matcher,
 from repro.core.autoencoder import bank_scores
 from repro.data import load_benchmark
 from repro.models import build_model
-from repro.serve import (ExpertEngine, Request, Response, RoutedServer,
-                         bucket_for, make_buckets)
+from repro.serve import (BankMember, BankedEngine, ExpertEngine, Request,
+                         Response, RoutedServer, bucket_for, make_buckets,
+                         plan_placement)
 from repro.serve.router import Router
+
+# deterministic grid strategies (always the fallback module: the
+# equivalence test samples explicitly via .sample(rng), which the real
+# hypothesis API does not expose)
+from _prop import strategies as grid_st
 
 
 @pytest.fixture(scope="module")
@@ -55,6 +62,25 @@ def test_bucket_ladder():
     assert bucket_for(9, (4, 8)) == 8  # clamps to largest
 
 
+def test_make_buckets_validates_inputs():
+    """lo > hi used to silently return (hi,), so ExpertEngine(max_len=4,
+    min_len_bucket=8) built a ladder that ignored min_len_bucket."""
+    assert make_buckets(8, 8) == (8,)
+    assert make_buckets(3, 3) == (3,)
+    with pytest.raises(ValueError):
+        make_buckets(8, 4)
+    with pytest.raises(ValueError):
+        make_buckets(0, 4)
+    with pytest.raises(ValueError):
+        make_buckets(-2, -1)
+    cfg = get_config("smollm-135m").reduced(name="buckets-smoke")
+    model = build_model(cfg)
+    with pytest.raises(ValueError):
+        ExpertEngine(model, None, max_len=4, min_len_bucket=8)
+    assert bucket_for(1, (4, 8)) == 4
+    assert bucket_for(8, (4, 8)) == 8  # exact hit picks its own bucket
+
+
 # -- engine -----------------------------------------------------------------
 
 
@@ -79,6 +105,61 @@ def test_engine_generate_matches_seed_contract():
     out = eng.generate(toks, 5)
     assert out.shape == (3, 5)
     assert out.dtype == np.int32
+
+
+def test_generate_does_not_steal_scheduler_rows():
+    """Regression: generate() used to admit rows under uids 0..B-1 and
+    drain poll() wholesale — colliding with scheduler-owned uids and
+    silently consuming their finished rows."""
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 50, 6), rng.integers(0, 50, 4)]
+    gen_toks = rng.integers(0, 50, size=(2, 5))
+
+    # reference: the scheduler-owned rows served on a pristine engine
+    ref = _engine(seed=3)
+    ref.admit([0, 1], prompts, max_new=[3, 4])
+    while ref.n_active:
+        ref.tick()
+    want = dict(ref.poll())
+
+    # same engine params, but generate() interleaves with the admitted
+    # group mid-flight — scheduler uids 0..1 overlap generate's rows
+    eng = _engine(seed=3)
+    eng.admit([0, 1], prompts, max_new=[3, 4])
+    eng.tick()
+    out = eng.generate(gen_toks, 2)
+    assert out.shape == (2, 2)
+    while eng.n_active:
+        eng.tick()
+    got = dict(eng.poll())
+    assert set(got) == {0, 1}, "scheduler rows were stolen by generate()"
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+    # and generate()'s own output matches a non-interleaved call
+    ref2 = _engine(seed=3)
+    np.testing.assert_array_equal(out, ref2.generate(gen_toks, 2))
+
+
+def test_drain_delivers_rows_finished_during_generate(matcher, bench):
+    """Regression: generate() interleaved mid-decode can tick a
+    scheduler group to completion and re-queue its rows; has_work must
+    then still report pending output or drain() strands the response."""
+    srv, names = _server(matcher)
+    x, _ = bench[names[0]]["client_a"]
+    srv.submit([Request(uid=7, features=x[0], prompt=np.arange(5),
+                        max_new_tokens=3)])
+    srv.step()                      # admitted, still decoding
+    # find the engine serving uid 7 and run a long generate() on it
+    sched = srv.scheduler
+    eng = next(srv.registry[e].backend for e in range(len(srv.registry))
+               if srv.registry[e].backend.n_active)
+    eng.generate(np.arange(4)[None, :], 8)
+    assert sched.has_work, "finished-but-unpolled rows must keep work"
+    got = sched.drain()
+    assert [r.uid for r in got] == [7]
+    assert got[0].tokens.shape == (3,)
+    assert not sched._meta
 
 
 # -- routed server end to end ----------------------------------------------
@@ -176,6 +257,39 @@ def test_backpressure_prefix_admission(matcher, bench):
     assert sorted(got) == list(range(6))
 
 
+def test_sparse_bucket_age_promotion_prevents_starvation(matcher, bench):
+    """Regression: admission always popped the fullest length bucket, so
+    under sustained traffic concentrated in one bucket a request parked
+    in a sparse bucket starved until the flood ended."""
+    srv, names = _server(matcher, max_batch=4)
+    srv.scheduler.config.promote_after = 2
+    x, _ = bench[names[0]]["client_a"]
+    rng = np.random.default_rng(6)
+    # one long-prompt request lands alone in the 32-bucket...
+    srv.submit([Request(uid=0, features=x[0],
+                        prompt=rng.integers(0, 100, size=30),
+                        max_new_tokens=1)])
+    # ...while a sustained flood keeps the 8-bucket the fullest forever
+    done_during_flood = set()
+    uid = 1
+    for _ in range(10):
+        srv.submit([Request(uid=uid + k, features=x[0],
+                            prompt=rng.integers(0, 100, size=7),
+                            max_new_tokens=1) for k in range(4)])
+        uid += 4
+        for r in srv.step():
+            done_during_flood.add(r.uid)
+    assert 0 in done_during_flood, \
+        "sparse-bucket request starved through 10 flooded rounds"
+    assert srv.scheduler.stats["promotions"] >= 1
+    # drain the rest; nothing is lost or duplicated
+    rest = {r.uid for r in srv.scheduler.drain()}
+    assert done_during_flood | rest == set(range(uid))
+    # skip counters are pruned once their buckets drain (no lifetime
+    # growth, which matters for legacy backends keyed by raw lengths)
+    assert not srv.scheduler._skips
+
+
 # -- router -----------------------------------------------------------------
 
 
@@ -240,6 +354,184 @@ def test_router_lru_eviction(matcher, bench):
     x, _ = bench[names[0]]["client_a"]
     router.route(x[:32])
     assert len(router._lru) == 8
+
+
+def test_router_lru_stores_copies_not_chunk_views(matcher, bench):
+    """Regression: cached (coarse, score) rows were *views* into each
+    routed chunk's full (rows, top_k) arrays, pinning every chunk in
+    memory for the LRU entry's lifetime. A full cache must hold only
+    O(top_k)-sized owned values."""
+    m, names = matcher
+    router = Router(m, cache_size=64)
+    xs = np.concatenate([bench[n]["client_a"][0][:24] for n in names])
+    router.route(xs)
+    assert len(router._lru) > 0
+    top_k = m.config.top_k
+    for c, s, f in router._lru.values():
+        assert c.base is None and s.base is None, \
+            "LRU entry is a view pinning its whole routed chunk"
+        assert c.nbytes <= top_k * 8 and s.nbytes <= top_k * 8
+        assert isinstance(f, int)
+    # cached decisions still replay exactly
+    r1 = router.route(xs[:8])
+    assert r1.cache_hits == 8
+
+
+# -- sharded expert placement ------------------------------------------------
+
+
+def _registries(matcher, seeds=(0, 1), max_len=64):
+    """Two registries with *identical* engine params: one left per-engine,
+    one to be banked by plan_placement."""
+    m, names = matcher
+    cfg = get_config("smollm-135m").reduced(name="placed")
+    model = build_model(cfg)
+    params = [model.init(jax.random.PRNGKey(s)) for s in seeds]
+    regs = []
+    for _ in range(2):
+        reg = ExpertRegistry()
+        for n, p in zip(names, params):
+            reg.add(n, ExpertEngine(model, p, max_len=max_len))
+        regs.append(reg)
+    return regs
+
+
+def test_plan_placement_banks_homogeneous_experts(matcher):
+    m, names = matcher
+    _, reg = _registries(matcher)
+    # add a heterogeneous third entry: must stay a singleton shard
+    cfg = get_config("smollm-135m").reduced(name="odd", d_model=64)
+    odd = build_model(cfg)
+    reg.add("odd", ExpertEngine(odd, odd.init(jax.random.PRNGKey(9)),
+                                max_len=64))
+    plan = plan_placement(reg)
+    banked = [s for s in plan.shards if s.banked]
+    solo = [s for s in plan.shards if not s.banked]
+    assert len(banked) == 1 and banked[0].experts == (0, 1)
+    assert len(solo) == 1 and solo[0].experts == (2,)
+    assert plan.shard_of == {0: banked[0].sid, 1: banked[0].sid,
+                             2: solo[0].sid}
+    # registry entries were rebound to BankMember handles
+    for e in (0, 1):
+        be = reg[e].backend
+        assert isinstance(be, BankMember)
+        assert be.pad_shape(3, 9) == (4, 16)
+    assert isinstance(reg[2].backend, ExpertEngine)
+    bank = banked[0].bank
+    assert isinstance(bank, BankedEngine) and bank.n_experts == 2
+
+
+def test_dispatch_moe_experts_stay_singleton(matcher):
+    """Capacity-dispatch MoE outputs depend on the padded batch size
+    (capacity ~ total tokens), so banking them would break the
+    token-identical contract — the planner must leave them solo."""
+    _, reg = _registries(matcher)
+    cfg = get_config("mixtral-8x22b").reduced(name="moe-pair")
+    assert cfg.n_experts and cfg.moe_impl == "dispatch"
+    moe = build_model(cfg)
+    for i in (0, 1):
+        reg.add(f"moe{i}", ExpertEngine(
+            moe, moe.init(jax.random.PRNGKey(20 + i)), max_len=64))
+    plan = plan_placement(reg)
+    banked = [s for s in plan.shards if s.banked]
+    assert len(banked) == 1 and banked[0].experts == (0, 1)
+    solo_experts = {s.experts[0] for s in plan.shards if not s.banked}
+    assert solo_experts == {2, 3}
+    assert isinstance(reg[2].backend, ExpertEngine)
+
+
+def test_forgotten_placement_plan_fails_fast(matcher):
+    """plan_placement rebinds registry backends; wiring that registry
+    into a server *without* the plan must raise up front, not crash
+    deep inside admission at serve time."""
+    m, names = matcher
+    _, reg = _registries(matcher)
+    plan = plan_placement(reg)
+    with pytest.raises(ValueError, match="placement"):
+        RoutedServer(m, reg)
+    with pytest.raises(ValueError, match="already bank-placed"):
+        plan_placement(reg)          # re-planning a planned registry
+    # and a stale plan paired with a different registry fails fast too
+    _, other = _registries(matcher)
+    other_plan = plan_placement(other)
+    del other_plan
+    with pytest.raises(ValueError, match="does not match registry"):
+        RoutedServer(m, other, placement=plan)
+    # a registry grown after planning is uncovered -> fail fast, not hang
+    from repro.serve import Scheduler
+    reg.add("late", None)
+    with pytest.raises(ValueError, match="does not cover"):
+        Scheduler(None, reg, placement=plan)
+
+
+def test_banked_jit_cache_is_per_bank_not_per_expert(matcher, bench):
+    """The bank's executable count is bounded by its own bucket ladders
+    *total* — co-locating K experts must not multiply compiles by K."""
+    m, names = matcher
+    _, reg = _registries(matcher)
+    plan = plan_placement(reg)
+    srv = RoutedServer(m, reg, max_batch=4, placement=plan)
+    rng = np.random.default_rng(8)
+    reqs = []
+    for uid in range(30):
+        n = names[uid % 2]
+        x, _ = bench[n]["client_a"]
+        reqs.append(Request(uid=uid, features=x[uid % 80],
+                            prompt=rng.integers(0, 100,
+                                                size=1 + (uid * 5) % 50),
+                            max_new_tokens=1 + uid % 6))
+    resps = srv.serve(reqs)
+    assert len(resps) == 30
+    bank = plan.shards[0].bank
+    n_len, n_bat = len(bank.len_buckets), len(bank.batch_buckets)
+    assert bank.stats.prefill_compiles <= n_len * n_bat
+    assert bank.stats.decode_compiles <= n_bat
+    # replaying identical traffic compiles nothing new
+    before = bank.stats.jit_cache_entries
+    srv.serve([Request(uid=100 + r.uid, features=reqs[i].features,
+                       prompt=reqs[i].prompt,
+                       max_new_tokens=reqs[i].max_new_tokens)
+               for i, r in enumerate(resps)])
+    assert bank.stats.jit_cache_entries == before
+
+
+def test_banked_matches_per_engine_token_identical(matcher, bench):
+    """Equivalence: the banked placement must produce token-identical
+    responses to the per-engine path on the same request stream —
+    property-style over the deterministic _prop grids."""
+    m, names = matcher
+    reg_ref, reg_bank = _registries(matcher)
+    srv_ref = RoutedServer(m, reg_ref, max_batch=4)
+    plan = plan_placement(reg_bank)
+    assert len([s for s in plan.shards if s.banked]) == 1
+    srv_bank = RoutedServer(m, reg_bank, max_batch=4, placement=plan)
+
+    n_req = grid_st.integers(3, 8)
+    plen = grid_st.integers(1, 40)
+    mnew = grid_st.integers(1, 6)
+    rng = np.random.default_rng(0xE7)
+    uid = 0
+    for _ in range(6):   # six property examples over the grid
+        reqs = []
+        for _ in range(n_req.sample(rng)):
+            n = names[uid % 2]
+            x, _ = bench[n]["client_a"]
+            reqs.append(Request(
+                uid=uid, features=x[uid % 60],
+                prompt=rng.integers(0, 100, size=plen.sample(rng)),
+                max_new_tokens=mnew.sample(rng)))
+            uid += 1
+        got_ref = srv_ref.serve(reqs)
+        got_bank = srv_bank.serve(reqs)
+        for a, b in zip(got_ref, got_bank):
+            assert a.uid == b.uid
+            assert a.expert == b.expert
+            assert a.fine_class == b.fine_class
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            # shard ids demux through the placement plan; the unplaced
+            # server falls back to one implicit shard per expert
+            assert b.shard == plan.shard_of[reg_bank.names.index(b.expert)]
+            assert a.shard == reg_ref.names.index(a.expert)
 
 
 # -- kernel vs reference parity --------------------------------------------
