@@ -20,15 +20,32 @@ crossed with two placement columns:
                (``--devices N`` forces N host CPU devices so the mesh
                path runs on a laptop/CI box)
 
+and two dispatch executors:
+  serial     — the blocking reference: every decode tick forces a
+               device→host copy of its sampled token before the next
+               shard's work is issued
+  overlapped — async dispatch: all shards' prefills and decode ticks
+               are enqueued before anything blocks; tokens stay on
+               device and the host blocks at most once per wave per
+               step (the batched harvest transfer)
+
+Both executors are token-identical; the CI-stable signal separating
+them is ``host_blocks`` (the engines' sync counter) per decoded token,
+reported per scenario and in ``--json`` output.
+
   PYTHONPATH=src python benchmarks/serving_bench.py [--requests 60] \
-      [--placement {per-device,banked}] [--devices 8]
+      [--placement {per-device,banked}] [--devices 8] \
+      [--executor {serial,overlapped}] [--json OUT.json]
 
 Output: one CSV-ish line per scenario,
-  scenario,placement,n,throughput_rps,p50_ms,p99_ms,batches,prefill_compiles
+  scenario,placement,executor,n,throughput_rps,p50_ms,p99_ms,batches,
+  prefill_compiles,host_blocks_per_tok
+and, with ``--json``, a machine-readable results file for CI.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -41,7 +58,7 @@ DATASETS = ["mnist", "har", "reuters"]
 
 
 def build_server(n_per_dataset: int, epochs: int, max_batch: int,
-                 placement: str):
+                 placement: str, executor: str = "overlapped"):
     import jax
     from repro.configs import get_config
     from repro.core import ExpertRegistry, build_matcher, train_bank
@@ -72,16 +89,55 @@ def build_server(n_per_dataset: int, epochs: int, max_batch: int,
         for line in plan.describe(registry.names).splitlines():
             print(f"#   {line}", flush=True)
     server = RoutedServer(matcher, registry, max_batch=max_batch,
-                          placement=plan)
+                          placement=plan, executor=executor)
     return server, bench, names
 
 
-def total_prefill_compiles(server) -> int:
+def _engine_stats(server):
     st = server.stats
     # engine stats are per ExpertEngine; bank stats are per bank (each
     # bank serves several experts but counts its executables once)
-    return (sum(e.prefill_compiles for e in st["engines"].values())
-            + sum(b.prefill_compiles for b in st["banks"].values()))
+    return list(st["engines"].values()) + list(st["banks"].values())
+
+
+def total_prefill_compiles(server) -> int:
+    return sum(e.prefill_compiles for e in _engine_stats(server))
+
+
+def total_decode_compiles(server) -> int:
+    return sum(e.decode_compiles for e in _engine_stats(server))
+
+
+def total_host_blocks(server) -> int:
+    """Host-blocking device→host syncs across all engines (the
+    executor-sensitive counter: serial blocks once per decode tick per
+    wave, overlapped at most once per wave per step)."""
+    return sum(e.host_blocks for e in _engine_stats(server))
+
+
+def total_tokens(server) -> int:
+    return sum(e.tokens_generated for e in _engine_stats(server))
+
+
+def assert_bounded_compiles(server) -> None:
+    """The bucket ladders bound the number of *real* XLA executables.
+
+    Checked against the corrected compile counters (per-wrapper
+    ``_cache_size`` sums): a wrapper that silently recompiled for a
+    shape/dtype the bucket key didn't capture now trips this assert
+    instead of hiding behind a one-count-per-wrapper scheme.
+    """
+    from repro.serve import ExpertEngine
+    cores = [s.bank for s in server.scheduler.shards if s.banked]
+    cores += [b for b in (server.registry[e].backend
+                          for e in range(len(server.registry)))
+              if isinstance(b, ExpertEngine)]
+    p_bound = sum(len(c.len_buckets) * len(c.batch_buckets) for c in cores)
+    d_bound = sum(len(c.batch_buckets) for c in cores)
+    got_p, got_d = total_prefill_compiles(server), total_decode_compiles(server)
+    assert got_p <= p_bound and got_d <= d_bound, (
+        f"compile bound violated: {got_p} prefill (bound {p_bound}), "
+        f"{got_d} decode (bound {d_bound}) real executables")
 
 
 def arrivals_for(scenario: str, n: int, rate: float,
@@ -127,6 +183,8 @@ def run_scenario(scenario: str, server, bench, names,
     sched = server.scheduler
     batches0 = sched.stats["batches"]
     compiles0 = total_prefill_compiles(server)
+    blocks0 = total_host_blocks(server)
+    tokens0 = total_tokens(server)
     while i < n or sched.has_work:
         while i < n and t_arr[i] <= now:
             got = sched.submit([reqs[i]])
@@ -142,12 +200,17 @@ def run_scenario(scenario: str, server, bench, names,
         for r in resps:  # completed during this step
             done_at[r.uid] = now
     lat = np.asarray([done_at[u] - t_arr[u] for u in range(n)])
+    toks = total_tokens(server) - tokens0
+    blocks = total_host_blocks(server) - blocks0
     return {"scenario": scenario, "n": n,
             "throughput_rps": n / max(now, 1e-9),
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
             "batches": sched.stats["batches"] - batches0,
-            "prefill_compiles": total_prefill_compiles(server) - compiles0}
+            "prefill_compiles": total_prefill_compiles(server) - compiles0,
+            "host_blocks": blocks,
+            "tokens_generated": toks,
+            "host_blocks_per_tok": blocks / max(toks, 1)}
 
 
 def main():
@@ -163,6 +226,15 @@ def main():
                     default="per-device",
                     help="per-device: one ExpertEngine per expert (PR 1); "
                          "banked: plan_placement over a mesh expert axis")
+    ap.add_argument("--executor", choices=("serial", "overlapped"),
+                    default="overlapped",
+                    help="serial: blocking per-tick reference dispatch; "
+                         "overlapped: enqueue all shards' work, one "
+                         "batched host transfer per wave per step")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="also write machine-readable results (per-"
+                         "scenario metrics + corrected compile counts + "
+                         "sync counters) to this path")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host CPU devices (multi-device dry-run "
                          "for the banked placement path); 0 = leave the "
@@ -183,10 +255,11 @@ def main():
 
     t0 = time.time()
     server, bench, names = build_server(args.n_per_dataset, args.epochs,
-                                        args.max_batch, args.placement)
+                                        args.max_batch, args.placement,
+                                        args.executor)
     print(f"# server up in {time.time()-t0:.1f}s "
-          f"({len(names)} experts, placement={args.placement})",
-          flush=True)
+          f"({len(names)} experts, placement={args.placement}, "
+          f"executor={args.executor})", flush=True)
 
     # warmup: populate jit caches so scenario 1 isn't charged compiles
     rng = np.random.default_rng(1)
@@ -197,17 +270,44 @@ def main():
     server.serve(warm)
     print("# warmup done", flush=True)
 
-    print("scenario,placement,n,throughput_rps,p50_ms,p99_ms,batches,"
-          "prefill_compiles")
+    print("scenario,placement,executor,n,throughput_rps,p50_ms,p99_ms,"
+          "batches,prefill_compiles,host_blocks_per_tok")
+    results = []
     for scenario in ("uniform", "skewed", "bursty"):
         r = run_scenario(scenario, server, bench, names,
                          args.requests, args.rate, args.seed)
-        print(f"{r['scenario']},{args.placement},{r['n']},"
-              f"{r['throughput_rps']:.1f},"
+        results.append(r)
+        print(f"{r['scenario']},{args.placement},{args.executor},"
+              f"{r['n']},{r['throughput_rps']:.1f},"
               f"{r['p50_ms']:.1f},{r['p99_ms']:.1f},{r['batches']},"
-              f"{r['prefill_compiles']}", flush=True)
+              f"{r['prefill_compiles']},"
+              f"{r['host_blocks_per_tok']:.3f}", flush=True)
+    from repro.serve.core import COMPILE_COUNTER_EXACT
+    totals = {
+        # compile counts are *real* XLA executables (per-wrapper
+        # _cache_size sums), not jit-wrapper creations — unless this
+        # jax build lacks the API (then one-per-wrapper, flagged here)
+        "compile_counter_exact": COMPILE_COUNTER_EXACT,
+        "prefill_compiles": total_prefill_compiles(server),
+        "decode_compiles": total_decode_compiles(server),
+        "host_blocks": total_host_blocks(server),
+        "tokens_generated": total_tokens(server),
+        "host_blocks_per_tok": (total_host_blocks(server)
+                                / max(total_tokens(server), 1)),
+    }
+    assert_bounded_compiles(server)
     print(f"# total prefill compiles (warmup + scenarios): "
-          f"{total_prefill_compiles(server)}", flush=True)
+          f"{totals['prefill_compiles']}", flush=True)
+    print(f"# host blocks per decoded token (warmup + scenarios): "
+          f"{totals['host_blocks_per_tok']:.3f}", flush=True)
+    if args.json:
+        payload = {"placement": args.placement, "executor": args.executor,
+                   "devices": args.devices, "requests": args.requests,
+                   "rate": args.rate, "seed": args.seed,
+                   "scenarios": results, "totals": totals}
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

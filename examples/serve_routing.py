@@ -11,7 +11,15 @@ sharded over a mesh ``expert`` axis when more than one device is
 visible); capacity-dispatch MoE experts (mixtral) stay singleton shards
 because their outputs depend on batch padding.
 
-  PYTHONPATH=src python examples/serve_routing.py [--requests 48] [--banked]
+``--executor`` picks the dispatch executor: the default ``overlapped``
+enqueues every shard's prefill and decode tick before blocking on
+anything (sampled tokens stay on device; the host blocks once per wave
+in the batched harvest), ``serial`` is the blocking per-tick reference.
+Both produce identical tokens — the run prints the host-sync counter so
+the difference is visible.
+
+  PYTHONPATH=src python examples/serve_routing.py [--requests 48] \
+      [--banked] [--executor {serial,overlapped}]
 """
 import argparse
 import sys
@@ -37,6 +45,10 @@ def main():
     ap.add_argument("--n-per-dataset", type=int, default=2000)
     ap.add_argument("--banked", action="store_true",
                     help="bank homogeneous experts via plan_placement")
+    ap.add_argument("--executor", choices=("serial", "overlapped"),
+                    default="overlapped",
+                    help="dispatch executor (overlapped = async; serial "
+                         "= blocking per-tick reference)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -70,7 +82,8 @@ def main():
               f"({len(jax.devices())} device(s)):")
         for line in plan.describe(registry.names).splitlines():
             print(f"    {line}")
-    server = RoutedServer(matcher, registry, max_batch=8, placement=plan)
+    server = RoutedServer(matcher, registry, max_batch=8, placement=plan,
+                          executor=args.executor)
     rng = np.random.default_rng(0)
     reqs, truth = [], []
     for uid in range(args.requests):
@@ -97,11 +110,13 @@ def main():
     # continuous-batching internals: compile counts stay bucket-bounded
     st = server.stats
     print(f"scheduler: {st['scheduler']['batches']} micro-batches, "
-          f"{st['router']['cache_hits']} route-cache hits")
+          f"{st['router']['cache_hits']} route-cache hits, "
+          f"executor={st['executor']}")
     for name, es in {**st["engines"], **st["banks"]}.items():
         print(f"  {name}: {es.prefill_calls} prefills, "
               f"{es.decode_steps} decode ticks, "
-              f"{es.jit_cache_entries} compiled executables")
+              f"{es.jit_cache_entries} compiled executables, "
+              f"{es.host_blocks} host-blocking syncs")
 
     # second wave with repeated fingerprints rides the routing LRU and
     # the already-compiled bucket executables

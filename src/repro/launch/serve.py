@@ -27,6 +27,11 @@ def main():
     ap.add_argument("--n-per-dataset", type=int, default=2000)
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--executor", choices=("serial", "overlapped"),
+                    default="overlapped",
+                    help="dispatch executor: 'overlapped' enqueues every "
+                         "shard's prefill/decode before blocking (async "
+                         "dispatch); 'serial' is the blocking reference")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -47,7 +52,7 @@ def main():
         model = build_model(cfg)
         registry.add(n, ExpertEngine(model, model.init(
             jax.random.PRNGKey(i)), max_len=64), arch=cfg.name)
-    server = RoutedServer(matcher, registry)
+    server = RoutedServer(matcher, registry, executor=args.executor)
 
     rng = np.random.default_rng(0)
     reqs, truth = [], []
@@ -64,6 +69,10 @@ def main():
     acc = np.mean([r.expert == t for r, t in zip(resps, truth)])
     print(f"served {len(resps)} reqs in {dt:.2f}s "
           f"({len(resps)/dt:.1f} req/s); routing accuracy {acc:.1%}")
+    blocks = sum(es.host_blocks
+                 for es in server.stats["engines"].values())
+    print(f"executor={args.executor}: {blocks} host-blocking syncs "
+          f"across all engines")
 
 
 if __name__ == "__main__":

@@ -4,9 +4,16 @@
 ``Scheduler.submit``/``step`` expose the continuous-batching path.
 ``plan_placement`` + ``BankedEngine`` map homogeneous experts onto a
 mesh ``expert`` axis so one dispatch serves every co-located expert.
-See README.md in this directory for the design.
+``EngineCore`` is the shared residency/bucketing/harvest machinery both
+engine shims delegate to; the ``DispatchExecutor`` seam (``serial`` /
+``overlapped``) decides whether a scheduler step blocks per decode tick
+or enqueues all shards' work and harvests with one batched transfer per
+wave. See README.md in this directory for the design.
 """
-from .engine import EngineStats, ExpertEngine, bucket_for, make_buckets
+from .core import (DispatchExecutor, EngineCore, EngineStats,
+                   OverlappedExecutor, SerialExecutor, bucket_for,
+                   get_executor, make_buckets)
+from .engine import ExpertEngine
 from .placement import (BankMember, BankedEngine, PlacementPlan, Shard,
                         plan_placement)
 from .router import Router, RouteResult
@@ -14,7 +21,10 @@ from .scheduler import (Request, Response, RoutedServer, Scheduler,
                         SchedulerConfig)
 
 __all__ = [
-    "ExpertEngine", "EngineStats", "bucket_for", "make_buckets",
+    "EngineCore", "ExpertEngine", "EngineStats", "bucket_for",
+    "make_buckets",
+    "DispatchExecutor", "SerialExecutor", "OverlappedExecutor",
+    "get_executor",
     "BankedEngine", "BankMember", "PlacementPlan", "Shard",
     "plan_placement",
     "Router", "RouteResult",

@@ -1,0 +1,497 @@
+"""EngineCore: the shared residency / bucketed-jit / harvest machinery
+behind every expert engine, plus the dispatch executors.
+
+PR 2 left ``ExpertEngine`` and ``BankedEngine`` as two parallel
+implementations of the same machinery (bucket snapping, resident
+groups, per-row harvest, bounded jit caches), kept aligned only by the
+equivalence tests — and both forced a device→host copy of the sampled
+token on *every* decode tick, blocking JAX's async dispatch before the
+next shard's work could even be issued. This module unifies and
+de-syncs that hot path:
+
+  * ``EngineCore`` serves E >= 1 experts whose params are stacked on a
+    leading ``expert`` axis; prefill/decode are ``vmap`` over that axis
+    (optionally GSPMD-sharded over a 1-D ``expert`` mesh), jitted once
+    per (batch bucket, len bucket) for the whole core. ``ExpertEngine``
+    is the E=1 shim, ``BankedEngine`` the E=K shim — one implementation,
+    no equivalence-by-test.
+  * a tick **enqueues** device work and keeps the sampled token on
+    device: ``wave.tok`` stays a ``jnp.ndarray`` and emitted columns
+    accumulate as device buffers. Nothing blocks until ``harvest()``,
+    which materialises all planes a completable row needs in **one**
+    batched device→host transfer per wave per step (instead of one per
+    tick per group).
+  * every host-blocking materialisation increments
+    ``EngineStats.host_blocks`` — the CI-stable sync counter the bench
+    and tests assert against (overlapped must block strictly less often
+    per decoded token than serial).
+  * ``EngineStats.prefill_compiles`` / ``decode_compiles`` count real
+    XLA executables via each jit wrapper's ``_cache_size()``, not
+    wrapper creations — a wrapper that silently recompiled (shape/dtype
+    drift inside one bucket) now shows up in the bounded-compile
+    invariant instead of hiding behind a stale Python-side counter.
+
+The dispatch executors decide *when* the host blocks:
+
+  * ``SerialExecutor`` — the reference: each tick materialises its
+    token immediately (today's per-tick sync), shard after shard.
+  * ``OverlappedExecutor`` — issues prefills and decode ticks for all
+    shards before blocking on anything, then runs one batched harvest;
+    prefill of one shard overlaps decode of another on the device
+    queue.
+
+Both orders produce token-identical results (the compute graph is the
+same; only sync placement differs) — asserted property-style in
+``tests/test_serving.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..sharding import leading_sharding
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets
+# ---------------------------------------------------------------------------
+
+
+def make_buckets(lo: int, hi: int) -> Tuple[int, ...]:
+    """Power-of-two ladder covering [lo, hi] (hi always included).
+
+    Raises instead of silently returning ``(hi,)`` when ``lo > hi`` —
+    that shape used to make ``ExpertEngine(max_len=4, min_len_bucket=8)``
+    build a ladder that ignored ``min_len_bucket`` entirely.
+    """
+    lo, hi = int(lo), int(hi)
+    if lo < 1:
+        raise ValueError(f"make_buckets: lo must be >= 1, got {lo}")
+    if lo > hi:
+        raise ValueError(f"make_buckets: lo {lo} > hi {hi}")
+    out = []
+    b = lo
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(hi)
+    return tuple(out)
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n, clamped to the largest bucket."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+# ---------------------------------------------------------------------------
+# Stats
+# ---------------------------------------------------------------------------
+
+
+def _probe_cache_size() -> bool:
+    try:
+        return callable(getattr(jax.jit(lambda: 0), "_cache_size"))
+    except Exception:
+        return False
+
+
+# ``_cache_size`` is a private jax API (present on the pinned 0.4.37);
+# probe once at import so a build without it degrades *visibly* — the
+# compile counters revert to one-count-per-wrapper and tests/tools that
+# need exact semantics check this flag instead of silently passing.
+COMPILE_COUNTER_EXACT = _probe_cache_size()
+
+
+def _wrapper_compiles(fn) -> int:
+    """Real XLA executables behind one jit wrapper.
+
+    ``_cache_size()`` is the C++ pjit cache entry count — it grows when
+    a wrapper recompiles for a signature the Python-side bucket key
+    didn't capture (cache dtype/shape drift), which a
+    one-count-per-wrapper scheme silently missed. On jax builds without
+    the API (``COMPILE_COUNTER_EXACT`` False) this falls back to 1 per
+    wrapper — the pre-refactor upper-bound semantics.
+    """
+    if not COMPILE_COUNTER_EXACT:
+        return 1
+    try:
+        return int(fn._cache_size())
+    except TypeError:
+        return 1
+
+
+class EngineStats:
+    """Serving counters for one ``EngineCore``.
+
+    ``prefill_compiles`` / ``decode_compiles`` are *live* properties
+    summing real executable counts over the core's jit wrappers (see
+    ``_wrapper_compiles``); the rest are plain counters.
+    ``host_blocks`` counts host-blocking device→host materialisations —
+    the sync counter the overlapped-dispatch invariants assert against.
+    """
+
+    def __init__(self, core: Optional["EngineCore"] = None):
+        self._core = core
+        self.prefill_calls = 0
+        self.decode_steps = 0
+        self.rows_served = 0
+        self.rows_padded = 0
+        self.tokens_generated = 0
+        self.host_blocks = 0
+
+    @property
+    def prefill_compiles(self) -> int:
+        if self._core is None:
+            return 0
+        return sum(_wrapper_compiles(fn)
+                   for fn in self._core._prefill_fns.values())
+
+    @property
+    def decode_compiles(self) -> int:
+        if self._core is None:
+            return 0
+        return sum(_wrapper_compiles(fn)
+                   for fn in self._core._decode_fns.values())
+
+    @property
+    def jit_cache_entries(self) -> int:
+        return self.prefill_compiles + self.decode_compiles
+
+    def __repr__(self) -> str:
+        return (f"EngineStats(prefill_compiles={self.prefill_compiles}, "
+                f"decode_compiles={self.decode_compiles}, "
+                f"prefill_calls={self.prefill_calls}, "
+                f"decode_steps={self.decode_steps}, "
+                f"rows_served={self.rows_served}, "
+                f"rows_padded={self.rows_padded}, "
+                f"tokens_generated={self.tokens_generated}, "
+                f"host_blocks={self.host_blocks})")
+
+
+# ---------------------------------------------------------------------------
+# Core
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Wave:
+    """One admitted (E, Bb) micro-batch wave resident in the core.
+
+    ``emitted`` holds one (E, Bb) token plane per generated step; planes
+    start life as device buffers and are swapped for host arrays by
+    ``_materialize`` — ``n_host`` is the already-materialised prefix.
+    """
+    uids: Dict[int, List[Any]]          # local expert -> row uids
+    per_row_new: Dict[int, List[int]]
+    done: Dict[int, List[bool]]
+    cache: Any
+    tok: jnp.ndarray                    # (E, Bb, 1) last sampled token
+    emitted: List[Any]                  # (E, Bb) planes, device or host
+    steps_left: int
+    n_host: int = 0                     # emitted[:n_host] are host arrays
+
+
+class EngineCore:
+    """E homogeneous experts: bucketed executables, resident waves,
+    device-side token state, batched harvest.
+
+    Admission and decode *enqueue* work; the only host-blocking points
+    are ``_materialize`` calls — per tick in sync mode (``defer=False``,
+    the serial reference and the seed-compatible blocking API), or one
+    batched transfer per wave inside ``harvest()`` in deferred mode.
+    """
+
+    def __init__(self, model, params_list: Sequence[Any], *,
+                 max_len: int = 256, min_len_bucket: int = 8,
+                 len_buckets: Optional[Sequence[int]] = None,
+                 batch_buckets: Optional[Sequence[int]] = None,
+                 mesh: Optional[Mesh] = None):
+        if not params_list:
+            raise ValueError("EngineCore needs at least one expert")
+        self.model = model
+        self.n_experts = len(params_list)
+        self.max_len = max_len
+        self.len_buckets = tuple(len_buckets) if len_buckets else \
+            make_buckets(min_len_bucket, max_len)
+        self.batch_buckets = tuple(batch_buckets or make_buckets(1, 16))
+        if mesh is not None and (
+                "expert" not in mesh.shape
+                or self.n_experts % mesh.shape["expert"]):
+            raise ValueError(
+                f"mesh expert axis {dict(mesh.shape)} must divide the "
+                f"bank's {self.n_experts} experts")
+        self.mesh = mesh if (mesh is not None
+                             and mesh.shape.get("expert", 1) > 1) else None
+        self.stats = EngineStats(self)
+        self._active: List[_Wave] = []
+        self._finished: List[Tuple[int, Any, np.ndarray]] = []
+        # shape-keyed jit wrappers; real executable counts come from
+        # each wrapper's _cache_size() (see EngineStats)
+        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+        self._decode_fns: Dict[int, Any] = {}
+        params = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                        *params_list)
+        if self.mesh is not None:
+            sh = leading_sharding(params, "expert", self.mesh)
+            params = jax.device_put(params, sh)
+        self.params = params
+
+    # -- sharded/bucketed executables -----------------------------------
+    def _bank_sharding(self):
+        """Prefix sharding for any expert-leading pytree (or None)."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P("expert"))
+
+    def _prefill_fn(self, Bb: int, Sb: int):
+        key = (Bb, Sb)
+        if key not in self._prefill_fns:
+            fn = jax.vmap(lambda p, b: self.model.prefill(
+                p, b, capacity=self.max_len))
+            s = self._bank_sharding()
+            if s is not None:
+                jitted = jax.jit(fn, in_shardings=(s, s),
+                                 out_shardings=(s, s))
+            else:
+                jitted = jax.jit(fn)
+            self._prefill_fns[key] = jitted
+        return self._prefill_fns[key]
+
+    def _decode_fn(self, Bb: int):
+        if Bb not in self._decode_fns:
+            fn = jax.vmap(self.model.decode)
+            s = self._bank_sharding()
+            if s is not None:
+                jitted = jax.jit(fn, in_shardings=(s, s, s),
+                                 out_shardings=(s, s), donate_argnums=(1,))
+            else:
+                jitted = jax.jit(fn, donate_argnums=(1,))
+            self._decode_fns[Bb] = jitted
+        return self._decode_fns[Bb]
+
+    # -- admission -------------------------------------------------------
+    def pad_shape(self, n_rows: int, prompt_len: int) -> Tuple[int, int]:
+        """(batch bucket, length bucket) this admission would snap to."""
+        return (bucket_for(n_rows, self.batch_buckets),
+                bucket_for(prompt_len, self.len_buckets))
+
+    def admit_wave(self, groups: Mapping[int, Tuple[Sequence[Any],
+                                                    Sequence[np.ndarray],
+                                                    Sequence[int]]],
+                   *, defer: bool = False) -> bool:
+        """Prefill one (E, Bb, Sb) wave: every member expert's micro-batch
+        in a single dispatch. Returns False when no group has rows.
+
+        ``groups`` maps local expert index -> (uids, prompts, max_new);
+        experts without traffic this wave ride along as zero rows.
+        Prompts are right-truncated to the largest length bucket (keeping
+        the most recent tokens) and zero-padded to the common bucket; the
+        batch dim is zero-padded to its bucket. Decoding past cache
+        capacity is safe: the cache is a position-tracked ring, so the
+        oldest context is evicted rather than corrupted.
+
+        With ``defer=True`` the prefill (and the first sampled token)
+        stays enqueued on device — call ``harvest()`` to materialise and
+        emit. With ``defer=False`` the first token plane is materialised
+        and harvested before returning (the blocking reference path).
+        """
+        rows_max, len_max = 0, 1
+        for local, (uids, prompts, max_new) in groups.items():
+            if not 0 <= local < self.n_experts:
+                raise ValueError(f"local expert {local} out of range")
+            if len(uids) != len(prompts) or len(uids) != len(max_new):
+                raise ValueError("uids/prompts/max_new length mismatch")
+            if len(prompts) > self.batch_buckets[-1]:
+                raise ValueError(
+                    f"micro-batch of {len(prompts)} rows exceeds the "
+                    f"largest batch bucket {self.batch_buckets[-1]}")
+            rows_max = max(rows_max, len(prompts))
+            len_max = max(len_max, max((len(p) for p in prompts),
+                                       default=1))
+        if rows_max == 0:
+            return False
+        groups = {l: g for l, g in groups.items() if g[0]}
+        Bb = bucket_for(rows_max, self.batch_buckets)
+        Sb = bucket_for(len_max, self.len_buckets)
+        E = self.n_experts
+        toks = np.zeros((E, Bb, Sb), np.int32)
+        uids: Dict[int, List[Any]] = {}
+        per_row: Dict[int, List[int]] = {}
+        done: Dict[int, List[bool]] = {}
+        n_rows = 0
+        for local, (u, prompts, max_new) in groups.items():
+            for i, p in enumerate(prompts):
+                p = np.asarray(p, np.int32)[-Sb:]
+                toks[local, i, :len(p)] = p
+            uids[local] = list(u)
+            per_row[local] = [max(1, int(m)) for m in max_new]
+            done[local] = [False] * len(u)
+            n_rows += len(u)
+        logits, cache = self._prefill_fn(Bb, Sb)(
+            self.params, {"tokens": jnp.asarray(toks)})
+        self.stats.prefill_calls += 1
+        self.stats.rows_served += n_rows
+        self.stats.rows_padded += E * Bb - n_rows
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[..., None]
+        w = _Wave(uids=uids, per_row_new=per_row, done=done,
+                  cache=cache, tok=tok, emitted=[tok[..., 0]],
+                  steps_left=max(m for ms in per_row.values()
+                                 for m in ms) - 1)
+        self._active.append(w)
+        if not defer:
+            self._materialize(w, 1)
+            self.harvest()
+        return True
+
+    # -- decoding --------------------------------------------------------
+    def tick(self, *, defer: bool = False) -> int:
+        """Advance every active wave one decode step — one dispatch per
+        wave covers all member experts. Returns waves advanced.
+
+        ``defer=False`` (the blocking reference) materialises each
+        wave's new token plane immediately — one host block per wave —
+        and harvests before returning. ``defer=True`` only enqueues:
+        ``wave.tok`` feeds the next decode without ever leaving the
+        device, and the host blocks once per wave at ``harvest()``.
+        """
+        advanced = 0
+        for w in list(self._active):
+            if w.steps_left > 0:
+                Bb = w.tok.shape[1]
+                logits, w.cache = self._decode_fn(Bb)(
+                    self.params, w.cache, {"token": w.tok})
+                w.tok = jnp.argmax(logits, axis=-1).astype(
+                    jnp.int32)[..., None]
+                w.emitted.append(w.tok[..., 0])
+                w.steps_left -= 1
+                self.stats.decode_steps += 1
+                advanced += 1
+                if not defer:
+                    self._materialize(w, len(w.emitted))
+        if not defer:
+            self.harvest()
+        return advanced
+
+    # -- harvest ---------------------------------------------------------
+    def _materialize(self, w: _Wave, upto: int) -> None:
+        """Bring ``emitted[:upto]`` to host in one blocking transfer."""
+        upto = min(upto, len(w.emitted))
+        if upto <= w.n_host:
+            return
+        host = jax.device_get(w.emitted[w.n_host:upto])
+        for k, plane in enumerate(host):
+            w.emitted[w.n_host + k] = np.asarray(plane)
+        w.n_host = upto
+        self.stats.host_blocks += 1
+
+    def harvest(self) -> None:
+        """Emit every row whose ``max_new`` tokens are all available and
+        retire fully-done waves.
+
+        Per wave, all planes any completable row needs are materialised
+        in a single batched device→host transfer (at most one host
+        block per wave per call) — the per-tick sync of the old engines
+        is gone from the deferred path entirely.
+        """
+        for w in list(self._active):
+            have = len(w.emitted)
+            need = 0
+            for local, row_uids in w.uids.items():
+                for i in range(len(row_uids)):
+                    if (not w.done[local][i]
+                            and w.per_row_new[local][i] <= have):
+                        need = max(need, w.per_row_new[local][i])
+            if need > w.n_host:
+                self._materialize(w, need)
+            for local, row_uids in w.uids.items():
+                for i, uid in enumerate(row_uids):
+                    if w.done[local][i] or w.per_row_new[local][i] > have:
+                        continue
+                    seq = np.asarray(
+                        [w.emitted[t][local, i] for t in
+                         range(w.per_row_new[local][i])], np.int32)
+                    self._finished.append((local, uid, seq))
+                    self.stats.tokens_generated += len(seq)
+                    w.done[local][i] = True
+            if w.steps_left <= 0 and all(all(d) for d in w.done.values()):
+                self._active.remove(w)
+
+    def poll(self) -> List[Tuple[int, Any, np.ndarray]]:
+        """Drain finished (local expert, uid, tokens) triples."""
+        out, self._finished = self._finished, []
+        return out
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def has_pending(self) -> bool:
+        """Active waves or finished rows not yet polled."""
+        return bool(self._active or self._finished)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch executors
+# ---------------------------------------------------------------------------
+
+
+class DispatchExecutor:
+    """How one scheduler step drives its shards.
+
+    ``run_step`` always issues every shard's prefill, then every
+    shard's decode tick, then harvests — the ``defer`` flag decides
+    whether each dispatch blocks on its own device→host copy (serial,
+    the reference) or whether nothing blocks until the single batched
+    harvest transfer per wave (overlapped). Because both orders run the
+    identical compute graph, they are token-identical by construction;
+    only ``EngineStats.host_blocks`` differs.
+    """
+
+    name = "base"
+    defer = False
+
+    def run_step(self, sched) -> None:
+        sched._admit_batches(defer=self.defer)
+        sched._tick_engines(defer=self.defer)
+        sched._harvest_engines()
+
+
+class SerialExecutor(DispatchExecutor):
+    """Reference behaviour: every admit/tick materialises its sampled
+    token immediately, blocking the host once per tick per wave before
+    the next shard's work is issued."""
+
+    name = "serial"
+    defer = False
+
+
+class OverlappedExecutor(DispatchExecutor):
+    """Async dispatch: prefills and decode ticks for *all* shards are
+    enqueued before anything blocks; tokens stay on device and the host
+    blocks at most once per wave per step, inside the batched harvest.
+    Prefill of one shard overlaps decode of another on the device
+    queue."""
+
+    name = "overlapped"
+    defer = True
+
+
+def get_executor(executor) -> DispatchExecutor:
+    """Resolve ``'serial'`` / ``'overlapped'`` / an instance."""
+    if isinstance(executor, DispatchExecutor):
+        return executor
+    if executor == "serial":
+        return SerialExecutor()
+    if executor == "overlapped":
+        return OverlappedExecutor()
+    raise ValueError(f"unknown executor {executor!r}; expected 'serial', "
+                     "'overlapped' or a DispatchExecutor instance")

@@ -1,94 +1,42 @@
-"""ExpertEngine: one expert model behind the router, continuous-batching
-style.
+"""ExpertEngine: one expert model behind the router — the E=1 shim over
+the shared ``EngineCore``.
 
-The seed engine re-ran a blocking prefill+decode loop per ``serve`` call
-and let ``jax.jit`` compile a fresh executable for every (batch, pad
-length) combination a traffic mix produced. This engine instead:
+PR 1 built this engine's residency/bucketing/harvest machinery inline;
+PR 2 duplicated it for ``BankedEngine`` with the two copies kept aligned
+by equivalence tests. Both now delegate to ``serve.core.EngineCore``
+(this class is the single-expert view: params stacked to a leading axis
+of one, waves carry exactly one local expert), which also moved the
+decode hot path off the host: tokens stay on device and the only
+blocking transfer is the batched one inside ``harvest()``. The
+``defer`` flag on ``admit``/``tick`` selects between the blocking
+reference behaviour (default — the seed-compatible API) and the
+enqueue-only path the overlapped dispatch executor drives.
 
-  * admits work as *groups* (``admit``) whose shapes are snapped to a
-    small fixed set of (batch, prompt-length) buckets, so the number of
-    distinct XLA executables is bounded by ``len(batch_buckets) *
-    len(len_buckets)`` prefills + ``len(batch_buckets)`` decode steps
-    for the engine's whole lifetime;
-  * keeps admitted groups resident (KV cache + last token) and advances
-    every active group exactly one token per ``tick`` — the scheduler
-    interleaves ticks across engines, so a long generation on one expert
-    never blocks admission or progress elsewhere;
-  * donates the decode cache on every step, so XLA reuses the same KV
-    buffers in place instead of allocating per token;
-  * emits per-row results as soon as a row has its ``max_new_tokens``,
-    not when its whole group retires.
+What the engine still guarantees (see ``EngineCore`` for mechanics):
 
-Decode executables are shared across prompt buckets because prefill
-always builds the cache at ``capacity=max_len``; only the batch bucket
-shows up in the decode shape signature.
+  * admissions snap to (batch, prompt-length) buckets, so the number of
+    distinct XLA executables is bounded by the bucket-ladder product for
+    the engine's whole lifetime — and the bound is now asserted against
+    *real* executable counts (``_cache_size``), not wrapper creations;
+  * admitted groups stay resident (KV cache + last token) and advance
+    one token per ``tick`` — the scheduler interleaves ticks across
+    engines, so a long generation on one expert never blocks progress
+    elsewhere;
+  * the decode cache is donated every step, so XLA reuses the same KV
+    buffers in place;
+  * per-row results are emitted as soon as a row has its
+    ``max_new_tokens``, not when its whole group retires.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..models.api import BaseModel
+from .core import EngineCore, EngineStats, bucket_for, make_buckets
 
-
-def make_buckets(lo: int, hi: int) -> Tuple[int, ...]:
-    """Power-of-two ladder covering [lo, hi] (hi always included).
-
-    Raises instead of silently returning ``(hi,)`` when ``lo > hi`` —
-    that shape used to make ``ExpertEngine(max_len=4, min_len_bucket=8)``
-    build a ladder that ignored ``min_len_bucket`` entirely.
-    """
-    lo, hi = int(lo), int(hi)
-    if lo < 1:
-        raise ValueError(f"make_buckets: lo must be >= 1, got {lo}")
-    if lo > hi:
-        raise ValueError(f"make_buckets: lo {lo} > hi {hi}")
-    out = []
-    b = lo
-    while b < hi:
-        out.append(b)
-        b *= 2
-    out.append(hi)
-    return tuple(out)
-
-
-def bucket_for(n: int, buckets: Sequence[int]) -> int:
-    """Smallest bucket >= n, clamped to the largest bucket."""
-    for b in buckets:
-        if n <= b:
-            return b
-    return buckets[-1]
-
-
-@dataclasses.dataclass
-class EngineStats:
-    prefill_compiles: int = 0
-    decode_compiles: int = 0
-    prefill_calls: int = 0
-    decode_steps: int = 0
-    rows_served: int = 0
-    rows_padded: int = 0
-    tokens_generated: int = 0
-
-    @property
-    def jit_cache_entries(self) -> int:
-        return self.prefill_compiles + self.decode_compiles
-
-
-@dataclasses.dataclass
-class _Group:
-    """One admitted micro-batch resident in the engine."""
-    uids: List[Any]                # caller ints or generate() tuples
-    per_row_new: List[int]
-    cache: Any
-    tok: jnp.ndarray               # (Bb, 1) last emitted token
-    emitted: List[np.ndarray]      # one (Bb,) column per generated step
-    steps_left: int                # decode steps still to run
-    done_rows: List[bool]
+__all__ = ["ExpertEngine", "EngineStats", "bucket_for", "make_buckets"]
 
 
 class ExpertEngine:
@@ -97,140 +45,86 @@ class ExpertEngine:
     def __init__(self, model: BaseModel, params, *, max_len: int = 256,
                  min_len_bucket: int = 8,
                  batch_buckets: Optional[Sequence[int]] = None):
+        self.core = EngineCore(model, [params], max_len=max_len,
+                               min_len_bucket=min_len_bucket,
+                               batch_buckets=batch_buckets)
         self.model = model
+        # the caller's unstacked params: plan_placement restacks these
+        # into a BankedEngine, so the E=1 leading axis must not leak out
         self.params = params
-        self.max_len = max_len
-        self.len_buckets = make_buckets(min_len_bucket, max_len)
-        self.batch_buckets = tuple(batch_buckets or make_buckets(1, 16))
-        self.stats = EngineStats()
-        self._active: List[_Group] = []
-        self._finished: List[Tuple[int, np.ndarray]] = []
+        self.max_len = self.core.max_len
+        self.len_buckets = self.core.len_buckets
+        self.batch_buckets = self.core.batch_buckets
         self._gen_serial = 0           # private generate() uid namespace
-        # shape-keyed executables; dict size == XLA compile count
-        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
-        self._decode_fns: Dict[int, Any] = {}
 
-    # -- bucketed executables -------------------------------------------
-    def _prefill_fn(self, Bb: int, Sb: int):
-        key = (Bb, Sb)
-        if key not in self._prefill_fns:
-            self._prefill_fns[key] = jax.jit(
-                lambda p, b: self.model.prefill(p, b, capacity=self.max_len))
-            self.stats.prefill_compiles += 1
-        return self._prefill_fns[key]
-
-    def _decode_fn(self, Bb: int):
-        if Bb not in self._decode_fns:
-            self._decode_fns[Bb] = jax.jit(self.model.decode,
-                                           donate_argnums=(1,))
-            self.stats.decode_compiles += 1
-        return self._decode_fns[Bb]
+    @property
+    def stats(self) -> EngineStats:
+        return self.core.stats
 
     # -- admission -------------------------------------------------------
     def pad_shape(self, n_rows: int, prompt_len: int) -> Tuple[int, int]:
         """(batch bucket, length bucket) this admission would snap to."""
-        return (bucket_for(n_rows, self.batch_buckets),
-                bucket_for(prompt_len, self.len_buckets))
+        return self.core.pad_shape(n_rows, prompt_len)
 
     def admit(self, uids: Sequence[int], prompts: Sequence[np.ndarray],
-              max_new: Sequence[int]) -> None:
+              max_new: Sequence[int], *, defer: bool = False) -> None:
         """Prefill a micro-batch and keep it resident for ticking.
 
-        Prompts are right-truncated to the largest length bucket (keeping
-        the most recent tokens) and zero-padded up to their bucket; the
-        batch dim is zero-padded to its bucket. Decoding past cache
-        capacity is safe: the cache is a position-tracked ring, so the
-        oldest context is evicted rather than corrupted.
+        Empty micro-batches are rejected up front (previously a bare
+        ``ValueError`` escaped from ``max()`` deep inside padding).
+        ``defer=True`` enqueues only — see ``EngineCore.admit_wave``.
         """
         assert len(uids) == len(prompts) == len(max_new)
-        if len(prompts) > self.batch_buckets[-1]:
+        if not len(uids):
             raise ValueError(
-                f"micro-batch of {len(prompts)} rows exceeds the largest "
-                f"batch bucket {self.batch_buckets[-1]}; split it or "
-                f"construct the engine with larger batch_buckets")
-        Bb, Sb = self.pad_shape(len(prompts),
-                                max(len(p) for p in prompts))
-        toks = np.zeros((Bb, Sb), np.int32)
-        for i, p in enumerate(prompts):
-            p = np.asarray(p, np.int32)[-Sb:]
-            toks[i, :len(p)] = p
-        per_row = [max(1, int(m)) for m in max_new]
-        logits, cache = self._prefill_fn(Bb, Sb)(
-            self.params, {"tokens": jnp.asarray(toks)})
-        self.stats.prefill_calls += 1
-        self.stats.rows_served += len(uids)
-        self.stats.rows_padded += Bb - len(uids)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        g = _Group(uids=list(uids), per_row_new=per_row, cache=cache,
-                   tok=tok, emitted=[np.asarray(tok)[:, 0]],
-                   steps_left=max(per_row) - 1,
-                   done_rows=[False] * len(uids))
-        self._active.append(g)
-        self._harvest(g)
-        if g.steps_left <= 0 and all(g.done_rows):
-            self._active.remove(g)
+                "ExpertEngine.admit: empty micro-batch (0 rows); admit "
+                "at least one row or skip the call")
+        self.core.admit_wave(
+            {0: (list(uids), list(prompts), list(max_new))}, defer=defer)
 
     # -- decoding --------------------------------------------------------
-    def tick(self) -> int:
+    def tick(self, *, defer: bool = False) -> int:
         """Advance every active group one decode step. Returns the number
         of groups advanced (0 == engine idle)."""
-        advanced = 0
-        for g in list(self._active):
-            if g.steps_left > 0:
-                Bb = g.tok.shape[0]
-                logits, g.cache = self._decode_fn(Bb)(
-                    self.params, g.cache, {"token": g.tok})
-                g.tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-                g.emitted.append(np.asarray(g.tok)[:, 0])
-                g.steps_left -= 1
-                self.stats.decode_steps += 1
-                advanced += 1
-            self._harvest(g)
-            if g.steps_left <= 0 and all(g.done_rows):
-                self._active.remove(g)
-        return advanced
+        return self.core.tick(defer=defer)
 
-    def _harvest(self, g: _Group) -> None:
-        """Emit rows whose max_new tokens are all available."""
-        have = len(g.emitted)
-        for i, uid in enumerate(g.uids):
-            if not g.done_rows[i] and g.per_row_new[i] <= have:
-                seq = np.asarray([col[i] for col in
-                                  g.emitted[:g.per_row_new[i]]], np.int32)
-                self._finished.append((uid, seq))
-                self.stats.tokens_generated += len(seq)
-                g.done_rows[i] = True
+    def harvest(self) -> None:
+        """Materialise (one batched transfer per wave) and emit every
+        row whose tokens are all available; retire finished groups."""
+        self.core.harvest()
 
     def poll(self) -> List[Tuple[int, np.ndarray]]:
         """Drain finished (uid, tokens) pairs."""
-        out, self._finished = self._finished, []
-        return out
+        return [(uid, seq) for _local, uid, seq in self.core.poll()]
 
     @property
     def n_active(self) -> int:
-        return len(self._active)
+        return self.core.n_active
 
     @property
     def has_pending(self) -> bool:
         """Still decoding, or holding finished rows not yet polled —
         the latter matters when an interleaved ``generate`` call ticked
         another owner's group to completion and re-queued its rows."""
-        return bool(self._active or self._finished)
+        return self.core.has_pending
 
     # -- blocking convenience (seed-API compatible) ----------------------
     def generate(self, tokens, max_new: int,
                  extra_inputs: Optional[Dict] = None) -> np.ndarray:
         """Greedy generation. tokens: (B, S) int32 -> (B, max_new).
 
-        Safe to interleave with scheduler-owned ``admit``/``tick``/
-        ``poll`` traffic: rows are admitted under a private uid
-        namespace (tuples can never collide with caller-issued int
-        uids), and only *this call's* rows are consumed from ``poll`` —
-        any other engine's finished rows drained along the way are put
-        back for their owner.
+        A zero-row batch short-circuits to an empty ``(0, max_new)``
+        array (admitting nothing). Safe to interleave with
+        scheduler-owned ``admit``/``tick``/``poll`` traffic: rows are
+        admitted under a private uid namespace (tuples can never collide
+        with caller-issued int uids), and only *this call's* rows are
+        consumed from ``poll`` — any other engine's finished rows
+        drained along the way are put back for their owner.
         """
         del extra_inputs  # stub-embed models are not served token-only
         toks = np.asarray(tokens)
+        if len(toks) == 0:
+            return np.zeros((0, max(1, int(max_new))), np.int32)
         self._gen_serial += 1
         uids = [("__generate__", self._gen_serial, i)
                 for i in range(len(toks))]
@@ -254,5 +148,6 @@ class ExpertEngine:
         finally:
             # hand foreign rows back even if a tick raised, or their
             # owners would never see them (has_pending goes false)
-            self._finished.extend(stash)
+            self.core._finished.extend(
+                (0, uid, seq) for uid, seq in stash)
         return np.stack([rows[u] for u in uids])

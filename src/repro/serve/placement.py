@@ -12,11 +12,12 @@ machinery at all. This module makes placement first-class:
     keep their own singleton shard. The result is a ``PlacementPlan``
     the scheduler and router consume (shard ids ride through
     ``RouteResult`` / ``Response``).
-  * ``BankedEngine`` stacks the params of its member experts along a
-    leading ``expert`` axis and serves *every* member's micro-batch with
-    a single jitted dispatch: ``vmap`` over the expert axis, optionally
-    partitioned across devices by GSPMD via a 1-D ``expert`` mesh
-    (``launch.mesh.make_expert_mesh``). Because the bank reuses one
+  * ``BankedEngine`` is the E>1 view of the shared ``EngineCore``
+    (``serve.core``): the params of its member experts are stacked
+    along a leading ``expert`` axis and *every* member's micro-batch is
+    served by a single jitted dispatch — ``vmap`` over the expert axis,
+    optionally partitioned across devices by GSPMD via a 1-D ``expert``
+    mesh (``launch.mesh.make_expert_mesh``). Because the bank reuses one
     bucket ladder, the executable count is bounded at
     ``len(batch_buckets) * len(len_buckets)`` prefills +
     ``len(batch_buckets)`` decode steps *total* — not per expert.
@@ -30,13 +31,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from ..sharding import leading_sharding
-from .engine import EngineStats, ExpertEngine, bucket_for, make_buckets
+from .core import EngineCore, EngineStats
+from .engine import ExpertEngine
 
 
 # ---------------------------------------------------------------------------
@@ -44,20 +43,9 @@ from .engine import EngineStats, ExpertEngine, bucket_for, make_buckets
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class _BankGroup:
-    """One admitted (E, Bb) micro-batch wave resident in the bank."""
-    uids: Dict[int, List[Any]]          # local expert -> row uids
-    per_row_new: Dict[int, List[int]]
-    done: Dict[int, List[bool]]
-    cache: Any
-    tok: jnp.ndarray                    # (E, Bb, 1) last emitted token
-    emitted: List[np.ndarray]           # one (E, Bb) plane per step
-    steps_left: int
-
-
 class BankedEngine:
-    """E homogeneous experts served by one vmapped/sharded dispatch.
+    """E homogeneous experts served by one vmapped/sharded dispatch —
+    the E>1 shim over ``EngineCore``.
 
     Params are stacked on a leading expert axis; prefill/decode are
     ``vmap`` over that axis, jitted once per (batch bucket, len bucket)
@@ -74,186 +62,62 @@ class BankedEngine:
                  mesh: Optional[Mesh] = None):
         if not params_list:
             raise ValueError("BankedEngine needs at least one expert")
+        self.core = EngineCore(model, params_list, max_len=max_len,
+                               min_len_bucket=min_len_bucket,
+                               len_buckets=len_buckets,
+                               batch_buckets=batch_buckets, mesh=mesh)
         self.model = model
-        self.n_experts = len(params_list)
-        self.max_len = max_len
-        self.len_buckets = tuple(len_buckets) if len_buckets else \
-            make_buckets(min_len_bucket, max_len)
-        self.batch_buckets = tuple(batch_buckets or make_buckets(1, 16))
-        if mesh is not None and (
-                "expert" not in mesh.shape
-                or self.n_experts % mesh.shape["expert"]):
-            raise ValueError(
-                f"mesh expert axis {dict(mesh.shape)} must divide the "
-                f"bank's {self.n_experts} experts")
-        self.mesh = mesh if (mesh is not None
-                             and mesh.shape.get("expert", 1) > 1) else None
-        self.stats = EngineStats()
-        self._active: List[_BankGroup] = []
-        self._finished: List[Tuple[int, Any, np.ndarray]] = []
-        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
-        self._decode_fns: Dict[int, Any] = {}
-        params = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
-                                        *params_list)
-        if self.mesh is not None:
-            sh = leading_sharding(params, "expert", self.mesh)
-            params = jax.device_put(params, sh)
-        self.params = params
+        self.n_experts = self.core.n_experts
+        self.mesh = self.core.mesh
+        self.max_len = self.core.max_len
+        self.len_buckets = self.core.len_buckets
+        self.batch_buckets = self.core.batch_buckets
+        self.params = self.core.params      # stacked (E, ...) pytree
 
-    # -- sharded/bucketed executables -----------------------------------
-    def _bank_sharding(self):
-        """Prefix sharding for any expert-leading pytree (or None)."""
-        if self.mesh is None:
-            return None
-        return NamedSharding(self.mesh, P("expert"))
-
-    def _prefill_fn(self, Bb: int, Sb: int):
-        key = (Bb, Sb)
-        if key not in self._prefill_fns:
-            fn = jax.vmap(lambda p, b: self.model.prefill(
-                p, b, capacity=self.max_len))
-            s = self._bank_sharding()
-            if s is not None:
-                jitted = jax.jit(fn, in_shardings=(s, s),
-                                 out_shardings=(s, s))
-            else:
-                jitted = jax.jit(fn)
-            self._prefill_fns[key] = jitted
-            self.stats.prefill_compiles += 1
-        return self._prefill_fns[key]
-
-    def _decode_fn(self, Bb: int):
-        if Bb not in self._decode_fns:
-            fn = jax.vmap(self.model.decode)
-            s = self._bank_sharding()
-            if s is not None:
-                jitted = jax.jit(fn, in_shardings=(s, s, s),
-                                 out_shardings=(s, s), donate_argnums=(1,))
-            else:
-                jitted = jax.jit(fn, donate_argnums=(1,))
-            self._decode_fns[Bb] = jitted
-            self.stats.decode_compiles += 1
-        return self._decode_fns[Bb]
+    @property
+    def stats(self) -> EngineStats:
+        return self.core.stats
 
     # -- admission -------------------------------------------------------
     def pad_shape(self, n_rows: int, prompt_len: int) -> Tuple[int, int]:
         """(batch bucket, length bucket) this admission would snap to."""
-        return (bucket_for(n_rows, self.batch_buckets),
-                bucket_for(prompt_len, self.len_buckets))
+        return self.core.pad_shape(n_rows, prompt_len)
 
     def admit(self, groups: Mapping[int, Tuple[Sequence[Any],
                                                Sequence[np.ndarray],
-                                               Sequence[int]]]) -> None:
+                                               Sequence[int]]],
+              *, defer: bool = False) -> None:
         """Prefill one (E, Bb, Sb) wave: every member expert's micro-batch
-        in a single dispatch.
-
-        ``groups`` maps local expert index -> (uids, prompts, max_new);
-        experts without traffic this wave ride along as zero rows. Row
-        padding follows ``ExpertEngine.admit``: prompts right-truncated
-        to the largest length bucket, zero-padded to the common bucket.
+        in a single dispatch. A wave with no rows at all is a no-op (the
+        scheduler only calls with traffic; ``ExpertEngine.admit`` by
+        contrast rejects empties loudly). See ``EngineCore.admit_wave``
+        for padding rules and the ``defer`` contract.
         """
-        rows_max, len_max = 0, 1
-        for local, (uids, prompts, max_new) in groups.items():
-            if not 0 <= local < self.n_experts:
-                raise ValueError(f"local expert {local} out of range")
-            if len(uids) != len(prompts) or len(uids) != len(max_new):
-                raise ValueError("uids/prompts/max_new length mismatch")
-            if len(prompts) > self.batch_buckets[-1]:
-                raise ValueError(
-                    f"micro-batch of {len(prompts)} rows exceeds the "
-                    f"largest batch bucket {self.batch_buckets[-1]}")
-            rows_max = max(rows_max, len(prompts))
-            len_max = max(len_max, max((len(p) for p in prompts),
-                                       default=1))
-        if rows_max == 0:
-            return
-        groups = {l: g for l, g in groups.items() if g[0]}
-        Bb = bucket_for(rows_max, self.batch_buckets)
-        Sb = bucket_for(len_max, self.len_buckets)
-        E = self.n_experts
-        toks = np.zeros((E, Bb, Sb), np.int32)
-        uids: Dict[int, List[Any]] = {}
-        per_row: Dict[int, List[int]] = {}
-        done: Dict[int, List[bool]] = {}
-        n_rows = 0
-        for local, (u, prompts, max_new) in groups.items():
-            for i, p in enumerate(prompts):
-                p = np.asarray(p, np.int32)[-Sb:]
-                toks[local, i, :len(p)] = p
-            uids[local] = list(u)
-            per_row[local] = [max(1, int(m)) for m in max_new]
-            done[local] = [False] * len(u)
-            n_rows += len(u)
-        logits, cache = self._prefill_fn(Bb, Sb)(
-            self.params, {"tokens": jnp.asarray(toks)})
-        self.stats.prefill_calls += 1
-        self.stats.rows_served += n_rows
-        self.stats.rows_padded += E * Bb - n_rows
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[..., None]
-        g = _BankGroup(uids=uids, per_row_new=per_row, done=done,
-                       cache=cache, tok=tok,
-                       emitted=[np.asarray(tok)[..., 0]],
-                       steps_left=max(m for ms in per_row.values()
-                                      for m in ms) - 1)
-        self._active.append(g)
-        self._harvest(g)
-        if g.steps_left <= 0 and self._retired(g):
-            self._active.remove(g)
+        self.core.admit_wave(groups, defer=defer)
 
     # -- decoding --------------------------------------------------------
-    def tick(self) -> int:
+    def tick(self, *, defer: bool = False) -> int:
         """Advance every active wave one decode step — one dispatch per
         wave covers all member experts. Returns waves advanced."""
-        advanced = 0
-        for g in list(self._active):
-            if g.steps_left > 0:
-                Bb = g.tok.shape[1]
-                logits, g.cache = self._decode_fn(Bb)(
-                    self.params, g.cache, {"token": g.tok})
-                g.tok = jnp.argmax(logits, axis=-1).astype(
-                    jnp.int32)[..., None]
-                g.emitted.append(np.asarray(g.tok)[..., 0])
-                g.steps_left -= 1
-                self.stats.decode_steps += 1
-                advanced += 1
-            self._harvest(g)
-            if g.steps_left <= 0 and self._retired(g):
-                self._active.remove(g)
-        return advanced
+        return self.core.tick(defer=defer)
 
-    @staticmethod
-    def _retired(g: _BankGroup) -> bool:
-        """Every row harvested — same retirement rule as ExpertEngine
-        (today implied by steps_left == 0, kept explicit so the banked
-        and per-engine residency paths cannot silently diverge)."""
-        return all(all(d) for d in g.done.values())
-
-    def _harvest(self, g: _BankGroup) -> None:
-        have = len(g.emitted)
-        for local, row_uids in g.uids.items():
-            for i, uid in enumerate(row_uids):
-                if g.done[local][i] or g.per_row_new[local][i] > have:
-                    continue
-                seq = np.asarray(
-                    [plane[local, i] for plane in
-                     g.emitted[:g.per_row_new[local][i]]], np.int32)
-                self._finished.append((local, uid, seq))
-                self.stats.tokens_generated += len(seq)
-                g.done[local][i] = True
+    def harvest(self) -> None:
+        """Materialise (one batched transfer per wave) and emit finished
+        rows; retire fully-done waves."""
+        self.core.harvest()
 
     def poll(self) -> List[Tuple[int, Any, np.ndarray]]:
         """Drain finished (local expert, uid, tokens) triples."""
-        out, self._finished = self._finished, []
-        return out
+        return self.core.poll()
 
     @property
     def n_active(self) -> int:
-        return len(self._active)
+        return self.core.n_active
 
     @property
     def has_pending(self) -> bool:
         """Active waves or finished rows not yet polled."""
-        return bool(self._active or self._finished)
+        return self.core.has_pending
 
 
 @dataclasses.dataclass

@@ -6,14 +6,20 @@ Life of a request:
   submit() -> Router.route (fingerprint LRU + Pallas scoring, shard ids
               from the placement plan)
            -> per-expert FIFO queue, sub-bucketed by prompt-length bucket
-  step()   -> admission: per *shard*, pick one length bucket (fullest
+  step()   -> the dispatch executor runs one round over all shards:
+              admission (per *shard*, pick one length bucket — fullest
               wins, with age-based promotion so sparse buckets can't
-              starve) and admit one dispatch group — a banked shard
+              starve — and admit one dispatch group; a banked shard
               prefills every member expert's micro-batch in a single
-              call, a singleton shard behaves like PR 1's per-engine
-              path
-           -> decode: every shard with resident groups advances one
-              token (one ``tick`` per bank, not per expert)
+              call), then decode (every shard with resident groups
+              advances one token; one ``tick`` per bank, not per
+              expert), then engine harvest. With the default
+              ``overlapped`` executor every prefill and decode tick is
+              *enqueued* before anything blocks — sampled tokens stay
+              on device and the host blocks at most once per wave, in
+              the batched harvest transfer — so prefill of one shard
+              overlaps decode of another. ``executor="serial"`` keeps
+              the blocking per-tick reference behaviour.
            -> harvest: finished rows become Responses immediately,
               demuxed through the shard's expert list
   drain()  -> step() until all queues and engines are empty
@@ -34,6 +40,7 @@ import numpy as np
 
 from ..core.matcher import ExpertMatcher
 from ..core.registry import ExpertRegistry
+from .core import DispatchExecutor, get_executor
 from .engine import ExpertEngine
 from .placement import BankMember, PlacementPlan, Shard
 from .router import Router
@@ -79,11 +86,13 @@ class Scheduler:
 
     def __init__(self, router: Router, registry: ExpertRegistry,
                  config: Optional[SchedulerConfig] = None,
-                 placement: Optional[PlacementPlan] = None):
+                 placement: Optional[PlacementPlan] = None,
+                 executor: "str | DispatchExecutor" = "overlapped"):
         self.router = router
         self.registry = registry
         self.config = config or SchedulerConfig()
         self.placement = placement
+        self.executor = get_executor(executor)
         if placement is not None:
             # the plan must describe THIS registry: plan_placement
             # rebound each banked expert's backend to a BankMember of
@@ -177,8 +186,7 @@ class Scheduler:
 
     # -- one scheduling round -------------------------------------------
     def step(self) -> List[Response]:
-        self._admit_batches()
-        self._tick_engines()
+        self.executor.run_step(self)
         self._harvest()
         out, self._done = self._done, []
         self.stats["responses"] += len(out)
@@ -259,17 +267,21 @@ class Scheduler:
             del self.queues[e][sb]
         return take
 
-    def _admit_batches(self) -> None:
+    def _admit_batches(self, *, defer: bool = False) -> None:
+        """Issue one dispatch group per shard. With ``defer`` the
+        prefills are only enqueued (tokens stay on device; the executor
+        harvests once at the end of the step)."""
         for shard in self.shards:
             sb = self._pick_bucket(shard)
             if sb is None:
                 continue
             if shard.banked:
-                self._admit_banked(shard, sb)
+                self._admit_banked(shard, sb, defer=defer)
             else:
-                self._admit_single(shard.experts[0], sb)
+                self._admit_single(shard.experts[0], sb, defer=defer)
 
-    def _admit_banked(self, shard: Shard, sb: int) -> None:
+    def _admit_banked(self, shard: Shard, sb: int, *,
+                      defer: bool = False) -> None:
         """One dispatch group: every member expert's micro-batch from the
         chosen bucket rides a single BankedEngine prefill."""
         bank = shard.bank
@@ -282,10 +294,11 @@ class Scheduler:
                                  [p.req.prompt for p in take],
                                  [p.req.max_new_tokens for p in take])
         if groups:
-            bank.admit(groups)
+            bank.admit(groups, defer=defer)
             self.stats["batches"] += 1
 
-    def _admit_single(self, e: int, sb: int) -> None:
+    def _admit_single(self, e: int, sb: int, *,
+                      defer: bool = False) -> None:
         engine = self.registry[e].backend
         name = self.registry[e].name
         cap = self.config.max_batch
@@ -298,7 +311,8 @@ class Scheduler:
         if isinstance(engine, ExpertEngine):
             engine.admit([p.req.uid for p in take],
                          [p.req.prompt for p in take],
-                         [p.req.max_new_tokens for p in take])
+                         [p.req.max_new_tokens for p in take],
+                         defer=defer)
         elif engine is None:
             for p in take:
                 self._meta.pop(p.req.uid, None)
@@ -317,12 +331,23 @@ class Scheduler:
                 self._done.append(self._response(
                     p, name, gen[i, :p.req.max_new_tokens]))
 
-    def _tick_engines(self) -> None:
+    def _tick_engines(self, *, defer: bool = False) -> None:
+        """Advance every shard's resident waves one token. With
+        ``defer`` the decode dispatches are only enqueued — no shard's
+        tick blocks the host before the next shard's work is issued."""
         for shard in self.shards:
             eng = self._shard_engine(shard)
             if eng is not None and eng.n_active:
-                eng.tick()
+                eng.tick(defer=defer)
                 self.stats["ticks"] += 1
+
+    def _harvest_engines(self) -> None:
+        """One batched device→host transfer per wave (at most): emit
+        finished rows into each engine's poll buffer."""
+        for shard in self.shards:
+            eng = self._shard_engine(shard)
+            if eng is not None:
+                eng.harvest()
 
     def _harvest(self) -> None:
         for shard in self.shards:
@@ -362,13 +387,17 @@ class RoutedServer:
     submit-then-drain, returning responses in request order. Incremental
     users call ``submit``/``step`` directly for continuous batching.
     Pass ``placement`` (from ``serve.placement.plan_placement``) to
-    serve banked multi-expert shards instead of one engine per expert.
+    serve banked multi-expert shards instead of one engine per expert,
+    and ``executor`` (``"overlapped"`` — the default async dispatch —
+    or ``"serial"``, the blocking reference) to pick how each step
+    drives its shards; both executors are token-identical.
     """
 
     def __init__(self, matcher: ExpertMatcher, registry: ExpertRegistry,
                  *, max_batch: int = 16, route_cache_size: int = 4096,
                  use_fine_kernel: bool = True,
-                 placement: Optional[PlacementPlan] = None):
+                 placement: Optional[PlacementPlan] = None,
+                 executor: "str | DispatchExecutor" = "overlapped"):
         assert len(registry) == matcher.n_experts, "registry/bank mismatch"
         self.matcher = matcher
         self.registry = registry
@@ -379,7 +408,8 @@ class RoutedServer:
             shard_of=placement.shard_of if placement else None)
         self.scheduler = Scheduler(self.router, registry,
                                    SchedulerConfig(max_batch=max_batch),
-                                   placement=placement)
+                                   placement=placement,
+                                   executor=executor)
 
     def submit(self, requests: Sequence[Request]) -> int:
         return self.scheduler.submit(requests)
@@ -412,4 +442,5 @@ class RoutedServer:
                 banks[label] = shard.bank.stats
         return {"scheduler": self.scheduler.stats,
                 "router": self.router.stats, "engines": engines,
-                "banks": banks}
+                "banks": banks,
+                "executor": self.scheduler.executor.name}

@@ -111,30 +111,45 @@ rng = np.random.default_rng(0)
 groups = {i: ([i], [rng.integers(0, 50, 5 + 3 * i)], [4])
           for i in range(4)}
 
-def run(mesh):
+def run(mesh, deferred):
+    # deferred=False is the blocking serial reference (each tick
+    # materialises its token); deferred=True is the overlapped
+    # executor's engine protocol: enqueue everything, harvest once per
+    # step with a single batched device->host transfer per wave
     bank = BankedEngine(model, params, max_len=32, mesh=mesh)
-    bank.admit(groups)
+    bank.admit(groups, defer=deferred)
+    if deferred:
+        bank.harvest()
     while bank.n_active:
-        bank.tick()
-    return {(l, u): t.tolist() for l, u, t in bank.poll()}
+        bank.tick(defer=deferred)
+        if deferred:
+            bank.harvest()
+    out = {(l, u): t.tolist() for l, u, t in bank.poll()}
+    return out, bank.stats.host_blocks
 
 mesh = make_expert_mesh()  # (expert=8) -> bank submesh below
 from repro.serve.placement import _bank_submesh
 sub, devs = _bank_submesh(4, mesh)
 assert sub is not None and dict(sub.shape) == {"expert": 4}, sub
-sharded = run(sub)
-single = run(None)
-match = all(single[k] == sharded[k] for k in single)
-print(json.dumps({"n_devices": len(jax.devices()),
-                  "bank_devices": len(devs), "match": match}))
+sharded_serial, blocks_serial = run(sub, False)
+sharded_over, blocks_over = run(sub, True)
+single, _ = run(None, False)
+print(json.dumps({
+    "n_devices": len(jax.devices()), "bank_devices": len(devs),
+    "match": all(single[k] == sharded_serial[k] for k in single),
+    "match_overlapped": all(single[k] == sharded_over[k]
+                            for k in single),
+    "blocks_serial": blocks_serial, "blocks_over": blocks_over}))
 """
 
 
 @pytest.mark.slow
 def test_banked_placement_sharded_matches_single_device():
     """A 4-expert bank sharded over 4 of 8 host devices must emit the
-    same tokens as the unsharded bank (GSPMD numerics check for the
-    serving placement path)."""
+    same tokens as the unsharded bank — under both the blocking serial
+    protocol and the overlapped executor's deferred enqueue-then-harvest
+    protocol, which must also host-block strictly less (GSPMD numerics +
+    async dispatch check for the serving placement path)."""
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(
@@ -146,3 +161,5 @@ def test_banked_placement_sharded_matches_single_device():
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["n_devices"] == 8 and res["bank_devices"] == 4, res
     assert res["match"], res
+    assert res["match_overlapped"], res
+    assert res["blocks_over"] < res["blocks_serial"], res

@@ -84,6 +84,58 @@ def test_make_buckets_validates_inputs():
 # -- engine -----------------------------------------------------------------
 
 
+def test_admit_rejects_empty_micro_batch_and_generate_handles_zero_rows():
+    """Regression: a B=0 admit crashed with a bare ValueError escaping
+    from max() deep inside padding; generate() on zero rows crashed the
+    same way. Empty admits are now rejected loudly and zero-row
+    generate returns an empty (0, max_new) array."""
+    eng = _engine(seed=13, max_len=32)
+    with pytest.raises(ValueError, match="empty micro-batch"):
+        eng.admit([], [], [])
+    out = eng.generate(np.zeros((0, 5), np.int32), 4)
+    assert out.shape == (0, 4)
+    assert out.dtype == np.int32
+    assert eng.n_active == 0 and not eng.has_pending
+    # the engine still serves normally afterwards
+    got = eng.generate(np.arange(6, dtype=np.int32)[None, :], 2)
+    assert got.shape == (1, 2)
+
+
+def test_compile_counters_count_executables_not_wrappers():
+    """EngineStats.prefill_compiles/decode_compiles must report real
+    XLA executables (per-wrapper _cache_size sums), not jit-wrapper
+    creations: a wrapper that exists but never ran holds no executable,
+    and a silently recompiling wrapper would count per compile."""
+    from repro.serve.core import COMPILE_COUNTER_EXACT, _wrapper_compiles
+    if not COMPILE_COUNTER_EXACT:
+        pytest.skip("this jax build lacks jit._cache_size(); counters "
+                    "degrade to one-per-wrapper (flagged, not silent)")
+    eng = _engine(seed=14, max_len=32)
+    # wrapper created but never called -> no executable yet (the old
+    # counter charged a compile at wrapper creation)
+    eng.core._prefill_fn(1, 8)
+    assert len(eng.core._prefill_fns) == 1
+    assert eng.stats.prefill_compiles == 0
+    rng = np.random.default_rng(0)
+    eng.admit([0], [rng.integers(0, 50, 5)], [2])
+    assert eng.stats.prefill_compiles == 1
+    assert eng.stats.decode_compiles == 0      # no decode ran yet
+    eng.tick()
+    assert eng.stats.decode_compiles == 1
+    # same-bucket traffic mints no new executable
+    eng.admit([1], [rng.integers(0, 50, 6)], [1])
+    assert eng.stats.prefill_compiles == 1
+    # a new length bucket does
+    eng.admit([2], [rng.integers(0, 50, 20)], [1])
+    assert eng.stats.prefill_compiles == 2
+    # the counter is exactly the sum over wrappers of real cache sizes
+    assert eng.stats.prefill_compiles == sum(
+        _wrapper_compiles(f) for f in eng.core._prefill_fns.values())
+    while eng.n_active:
+        eng.tick()
+    eng.poll()
+
+
 def test_engine_rows_finish_independently():
     """A row with small max_new is harvested before its group retires."""
     eng = _engine()
@@ -501,10 +553,14 @@ def test_banked_matches_per_engine_token_identical(matcher, bench):
     property-style over the deterministic _prop grids."""
     m, names = matcher
     reg_ref, reg_bank = _registries(matcher)
-    srv_ref = RoutedServer(m, reg_ref, max_batch=4)
+    # cross-executor on top of cross-placement: the per-engine reference
+    # runs the blocking serial dispatch, the banked server the default
+    # overlapped one — tokens must still be identical
+    srv_ref = RoutedServer(m, reg_ref, max_batch=4, executor="serial")
     plan = plan_placement(reg_bank)
     assert len([s for s in plan.shards if s.banked]) == 1
-    srv_bank = RoutedServer(m, reg_bank, max_batch=4, placement=plan)
+    srv_bank = RoutedServer(m, reg_bank, max_batch=4, placement=plan,
+                            executor="overlapped")
 
     n_req = grid_st.integers(3, 8)
     plen = grid_st.integers(1, 40)
@@ -532,6 +588,165 @@ def test_banked_matches_per_engine_token_identical(matcher, bench):
             # server falls back to one implicit shard per expert
             assert b.shard == plan.shard_of[reg_bank.names.index(b.expert)]
             assert a.shard == reg_ref.names.index(a.expert)
+
+
+# -- unified core & async dispatch -------------------------------------------
+
+
+def test_engines_are_shims_over_one_core(matcher):
+    """ExpertEngine and BankedEngine must share EngineCore (no parallel
+    residency/bucketing/harvest implementations kept aligned by test)."""
+    from repro.serve import EngineCore
+    _, reg = _registries(matcher)
+    solo = reg[0].backend
+    assert isinstance(solo.core, EngineCore)
+    assert solo.core.n_experts == 1
+    plan = plan_placement(reg)
+    bank = plan.shards[0].bank
+    assert isinstance(bank.core, EngineCore)
+    assert bank.core.n_experts == 2
+    assert type(solo.core) is type(bank.core)
+    # neither shim re-implements the machinery: tick/harvest/poll resolve
+    # to the one core
+    for shim in (solo, bank):
+        for meth in ("tick", "harvest", "poll"):
+            assert hasattr(shim.core, meth)
+
+
+def test_deferred_dispatch_keeps_tokens_on_device_until_harvest():
+    """defer=True must enqueue only: emitted planes stay device buffers
+    (no host block) until harvest() moves them in one batched transfer."""
+    import jax as _jax
+    eng = _engine(seed=15, max_len=32)
+    rng = np.random.default_rng(1)
+    eng.admit([1, 2], [rng.integers(0, 50, 5), rng.integers(0, 50, 4)],
+              [1, 3], defer=True)
+    assert eng.poll() == [] and eng.n_active == 1
+    w = eng.core._active[0]
+    assert isinstance(w.tok, _jax.Array)
+    assert isinstance(w.emitted[0], _jax.Array) and w.n_host == 0
+    assert eng.stats.host_blocks == 0
+    eng.harvest()                      # one batched transfer
+    assert eng.stats.host_blocks == 1
+    assert dict(eng.poll())[1].shape == (1,)
+    eng.tick(defer=True)
+    eng.tick(defer=True)
+    assert eng.stats.host_blocks == 1  # decode ticks never blocked
+    assert all(isinstance(p, _jax.Array) for p in w.emitted[w.n_host:])
+    eng.harvest()
+    assert eng.stats.host_blocks == 2  # one transfer for both planes
+    assert dict(eng.poll())[2].shape == (3,)
+    assert eng.n_active == 0
+
+
+def _scenario_rounds(scenario, names, bench, rng, n_req, uid0):
+    """Per-round request batches emulating the bench's traffic mixes:
+    uniform (spread over experts), skewed (80% on expert 0), bursty
+    (everything in one burst, then idle rounds)."""
+    reqs = []
+    for k in range(n_req):
+        if scenario == "skewed":
+            e = 0 if rng.random() < 0.8 else int(rng.integers(
+                1, len(names)))
+        else:
+            e = int(rng.integers(len(names)))
+        n = names[e]
+        x, _ = bench[n]["client_a"]
+        reqs.append(Request(
+            uid=uid0 + k, features=x[int(rng.integers(60))],
+            prompt=rng.integers(0, 100, size=int(rng.integers(1, 40))),
+            max_new_tokens=int(rng.integers(1, 7))))
+    if scenario == "bursty":
+        return [reqs, [], []]
+    return [reqs[i:i + 3] for i in range(0, len(reqs), 3)]
+
+
+def _run_rounds(srv, rounds, gen_at=None):
+    """Drive submit/step round by round; optionally interleave a
+    blocking generate() on expert 0's engine mid-stream."""
+    got, gen_out = {}, None
+    for k, batch in enumerate(rounds):
+        if batch:
+            srv.submit(batch)
+        if gen_at is not None and k == gen_at:
+            gen_out = srv.registry[0].backend.generate(
+                (np.arange(6)[None, :] % 50).astype(np.int32), 4)
+        for r in srv.step():
+            got[r.uid] = r
+    for r in srv.scheduler.drain():
+        got[r.uid] = r
+    return got, gen_out
+
+
+def test_overlapped_token_identical_to_serial_on_scenarios(matcher, bench):
+    """The overlapped executor must be token-identical to the serial
+    reference on the bench's uniform/skewed/bursty traffic shapes
+    (property grid over prompt lengths / max_new / expert mixes), with
+    an interleaved generate() call mid-stream — while issuing strictly
+    fewer host-blocking syncs."""
+    m, names = matcher
+    reg_s, reg_o = _registries(matcher)   # identical engine params
+    srv_s = RoutedServer(m, reg_s, max_batch=4, executor="serial")
+    srv_o = RoutedServer(m, reg_o, max_batch=4, executor="overlapped")
+    assert srv_s.scheduler.executor.name == "serial"
+    assert srv_o.scheduler.executor.name == "overlapped"
+    blocks = lambda reg: sum(reg[e].backend.stats.host_blocks
+                             for e in range(len(reg)))
+    tokens = lambda reg: sum(reg[e].backend.stats.tokens_generated
+                             for e in range(len(reg)))
+    uid0 = 0
+    for scenario in ("uniform", "skewed", "bursty"):
+        rng = np.random.default_rng(0xB0 + uid0)
+        rounds = _scenario_rounds(scenario, names, bench, rng, 9, uid0)
+        uid0 += 9
+        got_s, gen_s = _run_rounds(srv_s, rounds, gen_at=1)
+        got_o, gen_o = _run_rounds(srv_o, rounds, gen_at=1)
+        assert set(got_s) == set(got_o) and len(got_s) == 9, scenario
+        for uid in got_s:
+            a, b = got_s[uid], got_o[uid]
+            assert a.expert == b.expert, (scenario, uid)
+            assert a.fine_class == b.fine_class
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_array_equal(gen_s, gen_o)
+    assert tokens(reg_s) == tokens(reg_o)
+    assert blocks(reg_o) < blocks(reg_s), \
+        "overlapped must host-block strictly less than serial"
+
+
+def test_overlapped_host_blocks_bounded_per_step(matcher, bench):
+    """The acceptance invariant: with the overlapped executor a
+    scheduler step blocks the host at most once per resident wave
+    (waves active before the step + waves admitted by it)."""
+    m, names = matcher
+    _, reg = _registries(matcher)
+    srv = RoutedServer(m, reg, max_batch=4, executor="overlapped")
+    sched = srv.scheduler
+    blocks = lambda: sum(reg[e].backend.stats.host_blocks
+                         for e in range(len(reg)))
+    active = lambda: sum(reg[e].backend.n_active
+                         for e in range(len(reg)))
+    rng = np.random.default_rng(0xC1)
+    uid, steps = 0, 0
+    while uid < 18 or sched.has_work:
+        if uid < 18 and steps % 2 == 0:
+            reqs = []
+            for k in range(3):
+                n = names[(uid + k) % 2]
+                x, _ = bench[n]["client_a"]
+                reqs.append(Request(
+                    uid=uid + k, features=x[(uid + k) % 60],
+                    prompt=rng.integers(0, 100,
+                                        size=int(rng.integers(2, 30))),
+                    max_new_tokens=int(rng.integers(1, 6))))
+            uid += srv.submit(reqs)
+        b0, a0, n0 = blocks(), active(), sched.stats["batches"]
+        srv.step()
+        admitted = sched.stats["batches"] - n0
+        assert blocks() - b0 <= a0 + admitted, \
+            (f"step {steps}: {blocks() - b0} host blocks for "
+             f"{a0} resident + {admitted} admitted waves")
+        steps += 1
+    assert not sched._meta
 
 
 # -- kernel vs reference parity --------------------------------------------
