@@ -8,12 +8,25 @@ virtual clock, and records per-request latency = completion - arrival.
 When the system is idle the clock jumps to the next arrival, so offered
 load (not Python sleep jitter) determines queueing.
 
-Three traffic scenarios (the ISSUE's acceptance matrix):
+Traffic scenarios (the ISSUE's acceptance matrix):
   uniform  — requests spread evenly over all experts
   skewed   — 80% of traffic hammers one expert (hot-expert queueing)
   bursty   — on/off arrivals: idle gaps, then bursts at 10x rate
+  shared-prefix (``--workload shared-prefix``) — cohort traffic: groups
+             of clients repeatedly send the *same* prompt (the paper's
+             setting: one regional cohort, one dataset, near-identical
+             queries). With ``--kv paged`` the engine deduplicates
+             cohort prefills and serves repeats from the prefix cache,
+             so prefill tokens *computed* drop strictly below prefill
+             tokens *submitted* — the CI-asserted savings signal.
 
-crossed with two placement columns:
+crossed with two KV layouts:
+  ring   — dense per-wave KV buffers (the reference)
+  paged  — per-shard page pool + per-row page tables with refcounted
+           shared-prefix reuse (token-identical to ring; asserted in
+           tests/test_paged_kv.py)
+
+and two placement columns:
   per-device — PR 1's path: one independent ExpertEngine per expert
   banked     — plan_placement banks homogeneous experts into one
                vmapped/sharded dispatch over a mesh ``expert`` axis
@@ -35,11 +48,13 @@ reported per scenario and in ``--json`` output.
 
   PYTHONPATH=src python benchmarks/serving_bench.py [--requests 60] \
       [--placement {per-device,banked}] [--devices 8] \
-      [--executor {serial,overlapped}] [--json OUT.json]
+      [--executor {serial,overlapped}] [--kv {ring,paged}] \
+      [--workload {standard,shared-prefix}] [--json OUT.json]
 
 Output: one CSV-ish line per scenario,
-  scenario,placement,executor,n,throughput_rps,p50_ms,p99_ms,batches,
-  prefill_compiles,host_blocks_per_tok
+  scenario,placement,executor,kv,n,throughput_rps,p50_ms,p99_ms,batches,
+  prefill_compiles,host_blocks_per_tok,prefill_tok_computed,
+  prefill_tok_submitted
 and, with ``--json``, a machine-readable results file for CI.
 """
 from __future__ import annotations
@@ -58,7 +73,8 @@ DATASETS = ["mnist", "har", "reuters"]
 
 
 def build_server(n_per_dataset: int, epochs: int, max_batch: int,
-                 placement: str, executor: str = "overlapped"):
+                 placement: str, executor: str = "overlapped",
+                 kv: str = "ring"):
     import jax
     from repro.configs import get_config
     from repro.core import ExpertRegistry, build_matcher, train_bank
@@ -79,7 +95,8 @@ def build_server(n_per_dataset: int, epochs: int, max_batch: int,
         cfg = get_config("smollm-135m").reduced(name=f"expert-{n}")
         model = build_model(cfg)
         registry.add(n, ExpertEngine(
-            model, model.init(jax.random.PRNGKey(i)), max_len=64))
+            model, model.init(jax.random.PRNGKey(i)), max_len=64,
+            kv_layout=kv))
     plan = None
     if placement == "banked":
         mesh = make_expert_mesh()
@@ -117,6 +134,14 @@ def total_host_blocks(server) -> int:
 
 def total_tokens(server) -> int:
     return sum(e.tokens_generated for e in _engine_stats(server))
+
+
+def total_prefill_tokens(server) -> "tuple[int, int]":
+    """(computed, submitted) prompt-token totals across engines. With
+    the paged layout, deduplicated and prefix-cached rows contribute
+    nothing to computed — the shared-prefix savings signal."""
+    return (sum(e.prefill_tokens_computed for e in _engine_stats(server)),
+            sum(e.prefill_tokens_submitted for e in _engine_stats(server)))
 
 
 def assert_bounded_compiles(server) -> None:
@@ -164,27 +189,52 @@ def expert_mix(scenario: str, n: int, n_experts: int,
     return rng.integers(0, n_experts, size=n)
 
 
+def cohort_requests(bench, names, n: int, rng) -> list:
+    """Shared-prefix workload: cohorts of clients sending the *same*
+    prompt (the paper's regional-cohort setting). Each cohort is pinned
+    to one dataset/expert; prompts are 30 tokens (a 32-bucket, no ring
+    wrap at max_new <= 10, so prefixes stay cacheable across waves)."""
+    from repro.serve import Request
+    reqs = []
+    n_cohorts = max(len(names), n // 8)
+    prompts = [rng.integers(0, 100, size=30) for _ in range(n_cohorts)]
+    for uid in range(n):
+        c = int(rng.integers(n_cohorts))
+        x, _ = bench[names[c % len(names)]]["client_a"]
+        reqs.append(Request(
+            uid=uid, features=x[int(rng.integers(len(x)))],
+            prompt=prompts[c],
+            max_new_tokens=int(rng.integers(2, 11))))
+    return reqs
+
+
 def run_scenario(scenario: str, server, bench, names,
                  n: int, rate: float, seed: int) -> dict:
     from repro.serve import Request
     rng = np.random.default_rng(seed)
-    t_arr = arrivals_for(scenario, n, rate, rng)
-    which = expert_mix(scenario, n, len(names), rng)
-    reqs = []
-    for uid in range(n):
-        x, _ = bench[names[which[uid]]]["client_a"]
-        reqs.append(Request(
-            uid=uid, features=x[int(rng.integers(len(x)))],
-            prompt=rng.integers(0, 100,
-                                size=int(rng.integers(3, 48))),
-            max_new_tokens=int(rng.integers(2, 12))))
+    t_arr = arrivals_for("bursty" if scenario == "bursty" else "uniform",
+                         n, rate, rng)
+    if scenario == "shared-prefix":
+        reqs = cohort_requests(bench, names, n, rng)
+    else:
+        which = expert_mix(scenario, n, len(names), rng)
+        reqs = []
+        for uid in range(n):
+            x, _ = bench[names[which[uid]]]["client_a"]
+            reqs.append(Request(
+                uid=uid, features=x[int(rng.integers(len(x)))],
+                prompt=rng.integers(0, 100,
+                                    size=int(rng.integers(3, 48))),
+                max_new_tokens=int(rng.integers(2, 12))))
 
     now, i, done_at = 0.0, 0, {}
     sched = server.scheduler
     batches0 = sched.stats["batches"]
+    stalls0 = sched.stats["kv_stalls"]
     compiles0 = total_prefill_compiles(server)
     blocks0 = total_host_blocks(server)
     tokens0 = total_tokens(server)
+    pf0 = total_prefill_tokens(server)
     while i < n or sched.has_work:
         while i < n and t_arr[i] <= now:
             got = sched.submit([reqs[i]])
@@ -202,6 +252,7 @@ def run_scenario(scenario: str, server, bench, names,
     lat = np.asarray([done_at[u] - t_arr[u] for u in range(n)])
     toks = total_tokens(server) - tokens0
     blocks = total_host_blocks(server) - blocks0
+    pf1 = total_prefill_tokens(server)
     return {"scenario": scenario, "n": n,
             "throughput_rps": n / max(now, 1e-9),
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
@@ -210,7 +261,10 @@ def run_scenario(scenario: str, server, bench, names,
             "prefill_compiles": total_prefill_compiles(server) - compiles0,
             "host_blocks": blocks,
             "tokens_generated": toks,
-            "host_blocks_per_tok": blocks / max(toks, 1)}
+            "host_blocks_per_tok": blocks / max(toks, 1),
+            "prefill_tokens_computed": pf1[0] - pf0[0],
+            "prefill_tokens_submitted": pf1[1] - pf0[1],
+            "kv_stalls": sched.stats["kv_stalls"] - stalls0}
 
 
 def main():
@@ -231,6 +285,16 @@ def main():
                     help="serial: blocking per-tick reference dispatch; "
                          "overlapped: enqueue all shards' work, one "
                          "batched host transfer per wave per step")
+    ap.add_argument("--kv", choices=("ring", "paged"), default="ring",
+                    help="KV cache layout: ring = dense per-wave "
+                         "buffers (reference); paged = per-shard page "
+                         "pool with refcounted shared-prefix reuse")
+    ap.add_argument("--workload", choices=("standard", "shared-prefix"),
+                    default="standard",
+                    help="standard: uniform/skewed/bursty grid; "
+                         "shared-prefix: cohort traffic re-sending the "
+                         "same prompts (asserts prefill-compute savings "
+                         "when --kv paged)")
     ap.add_argument("--json", metavar="OUT", default=None,
                     help="also write machine-readable results (per-"
                          "scenario metrics + corrected compile counts + "
@@ -256,10 +320,10 @@ def main():
     t0 = time.time()
     server, bench, names = build_server(args.n_per_dataset, args.epochs,
                                         args.max_batch, args.placement,
-                                        args.executor)
+                                        args.executor, args.kv)
     print(f"# server up in {time.time()-t0:.1f}s "
           f"({len(names)} experts, placement={args.placement}, "
-          f"executor={args.executor})", flush=True)
+          f"executor={args.executor}, kv={args.kv})", flush=True)
 
     # warmup: populate jit caches so scenario 1 isn't charged compiles
     rng = np.random.default_rng(1)
@@ -270,19 +334,26 @@ def main():
     server.serve(warm)
     print("# warmup done", flush=True)
 
-    print("scenario,placement,executor,n,throughput_rps,p50_ms,p99_ms,"
-          "batches,prefill_compiles,host_blocks_per_tok")
+    print("scenario,placement,executor,kv,n,throughput_rps,p50_ms,p99_ms,"
+          "batches,prefill_compiles,host_blocks_per_tok,"
+          "prefill_tok_computed,prefill_tok_submitted")
     results = []
-    for scenario in ("uniform", "skewed", "bursty"):
+    scenarios = (("shared-prefix", "uniform")
+                 if args.workload == "shared-prefix"
+                 else ("uniform", "skewed", "bursty"))
+    for scenario in scenarios:
         r = run_scenario(scenario, server, bench, names,
                          args.requests, args.rate, args.seed)
         results.append(r)
         print(f"{r['scenario']},{args.placement},{args.executor},"
-              f"{r['n']},{r['throughput_rps']:.1f},"
+              f"{args.kv},{r['n']},{r['throughput_rps']:.1f},"
               f"{r['p50_ms']:.1f},{r['p99_ms']:.1f},{r['batches']},"
               f"{r['prefill_compiles']},"
-              f"{r['host_blocks_per_tok']:.3f}", flush=True)
+              f"{r['host_blocks_per_tok']:.3f},"
+              f"{r['prefill_tokens_computed']},"
+              f"{r['prefill_tokens_submitted']}", flush=True)
     from repro.serve.core import COMPILE_COUNTER_EXACT
+    pf = total_prefill_tokens(server)
     totals = {
         # compile counts are *real* XLA executables (per-wrapper
         # _cache_size sums), not jit-wrapper creations — unless this
@@ -294,14 +365,29 @@ def main():
         "tokens_generated": total_tokens(server),
         "host_blocks_per_tok": (total_host_blocks(server)
                                 / max(total_tokens(server), 1)),
+        "prefill_tokens_computed": pf[0],
+        "prefill_tokens_submitted": pf[1],
     }
     assert_bounded_compiles(server)
     print(f"# total prefill compiles (warmup + scenarios): "
           f"{totals['prefill_compiles']}", flush=True)
     print(f"# host blocks per decoded token (warmup + scenarios): "
           f"{totals['host_blocks_per_tok']:.3f}", flush=True)
+    if args.workload == "shared-prefix":
+        sp = results[0]
+        print(f"# shared-prefix: {sp['prefill_tokens_computed']} prefill "
+              f"tokens computed for {sp['prefill_tokens_submitted']} "
+              "submitted", flush=True)
+        if args.kv == "paged":
+            # the ISSUE's acceptance criterion: cohort prompts must be
+            # prefilled once, not per request
+            assert (sp["prefill_tokens_computed"]
+                    < sp["prefill_tokens_submitted"]), (
+                "paged KV showed no prefill savings on the "
+                "shared-prefix workload")
     if args.json:
         payload = {"placement": args.placement, "executor": args.executor,
+                   "kv": args.kv, "workload": args.workload,
                    "devices": args.devices, "requests": args.requests,
                    "rate": args.rate, "seed": args.seed,
                    "scenarios": results, "totals": totals}

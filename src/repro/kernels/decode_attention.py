@@ -1,12 +1,27 @@
-"""Pallas TPU kernel: GQA flash-decode (single query token vs. KV cache).
+"""Pallas TPU kernels: GQA flash-decode (single query token vs. KV cache),
+dense-ring and paged variants.
 
-Grid (B, KV_heads, S_blocks); for each (batch row, kv head) the G = H/KV
-query heads attend to one KV-cache block per grid step with an online-
-softmax carried in VMEM scratch (m, l, acc). Position ids (-1 = empty ring
-slot) provide the mask, so full and sliding-window ring caches use the
-same kernel. Block size is the VMEM tiling knob: (block_s, dh) K/V tiles.
+``decode_attention_pallas`` — grid (B, KV_heads, S_blocks); for each
+(batch row, kv head) the G = H/KV query heads attend to one KV-cache
+block per grid step with an online-softmax carried in VMEM scratch
+(m, l, acc). Position ids (-1 = empty ring slot) provide the mask, so
+full and sliding-window ring caches use the same kernel. Block size is
+the VMEM tiling knob: (block_s, dh) K/V tiles.
 
-The pure-jnp oracle is ``repro.models.attention.attention`` (chunk=0).
+``paged_decode_attention_pallas`` — the paged-KV variant: K/V live in a
+pool of fixed-size pages ``(P + 1, page, KV, dh)`` (last page is the
+write-discard "trash" page) and each row carries a page table mapping
+its logical cache pages to physical pool pages, so prefix-sharing rows
+point at the *same* physical pages with zero copying. The table rides
+in as a scalar-prefetch argument (``pltpu.PrefetchScalarGridSpec``):
+the BlockSpec index maps read ``table[b, s]`` to DMA exactly the pages
+a row owns — the kernel never materialises a dense per-row KV view.
+The online-softmax body is shared with the ring kernel; position ids
+are logical-slot-indexed and mask trash-backed (never-written) pages.
+
+The pure-jnp oracle for both is ``repro.models.attention.attention``
+(chunk=0), composed with a page-table gather for the paged variant
+(``repro.kernels.ref.paged_decode_attention_ref``).
 """
 from __future__ import annotations
 
@@ -92,4 +107,68 @@ def decode_attention_pallas(q, k, v, q_pos, kv_pos, *, window: int = 0,
     )(q_pos.reshape(1).astype(jnp.int32),
       qg, kt.reshape(B * KV, S, dh), vt.reshape(B * KV, S, dh),
       kv_pos[None, :].astype(jnp.int32))
+    return out.reshape(B, H, dh)
+
+
+def _paged_kernel(tbl_ref, qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, window: int, n_blocks: int):
+    # the page-table ref is consumed by the BlockSpec index maps (it
+    # decides WHICH page was DMA'd here); the softmax body is the ring
+    # kernel's, operating on whatever page landed in VMEM
+    del tbl_ref
+    _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_ref, l_ref, acc_ref, window=window, n_blocks=n_blocks)
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, table, q_pos,
+                                  kv_pos, *, window: int = 0,
+                                  interpret: bool = True):
+    """Flash-decode through a per-row page table.
+
+    q: (B, H, dh); k_pages, v_pages: (P1, page, KV, dh) physical pool
+    (``P1 - 1`` is the trash page — writable garbage, always masked);
+    table: (B, n_pages) int32 physical page per logical page; q_pos: ()
+    int32; kv_pos: (C,) int32 logical-slot positions (-1 = empty),
+    C = n_pages * page. Returns (B, H, dh).
+
+    One grid step DMAs exactly one physical page per (row, kv head):
+    the scalar-prefetched table feeds the K/V BlockSpec index maps, so
+    prefix-sharing rows re-read the same pool pages and no dense
+    per-row KV copy ever exists.
+    """
+    B, H, dh = q.shape
+    P1, page, KV = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    nlp = table.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, dh)
+    kp = jnp.moveaxis(k_pages, 2, 1).reshape(P1 * KV, page, dh)
+    vp = jnp.moveaxis(v_pages, 2, 1).reshape(P1 * KV, page, dh)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, nlp),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, j, s, tbl, qp:
+                         (b, j, 0, 0)),
+            pl.BlockSpec((1, page, dh), lambda b, j, s, tbl, qp:
+                         (tbl[b * nlp + s] * KV + j, 0, 0)),
+            pl.BlockSpec((1, page, dh), lambda b, j, s, tbl, qp:
+                         (tbl[b * nlp + s] * KV + j, 0, 0)),
+            pl.BlockSpec((1, page), lambda b, j, s, tbl, qp: (0, s)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, j, s, tbl, qp:
+                               (b, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, window=window, n_blocks=nlp),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, dh), q.dtype),
+        interpret=interpret,
+    )(table.reshape(-1).astype(jnp.int32),
+      q_pos.reshape(1).astype(jnp.int32),
+      qg, kp, vp, kv_pos[None, :].astype(jnp.int32))
     return out.reshape(B, H, dh)

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from .cosine_topk import cosine_scores_pallas
-from .decode_attention import decode_attention_pallas
+from .decode_attention import (decode_attention_pallas,
+                               paged_decode_attention_pallas)
 from .expert_score import expert_score_pallas, pad_to_lane
 from .wkv_step import wkv_step_pallas
 
@@ -86,6 +87,17 @@ def decode_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
         bs //= 2
     return decode_attention_pallas(q, k, v, q_pos, kv_pos, window=window,
                                    block_s=max(bs, 1), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, table, q_pos, kv_pos, *,
+                           window: int = 0, interpret: bool = True):
+    """Flash-decode gathering K/V through a per-row page table (the
+    paged-KV serving layout). Block size is the page size — the pool's
+    physical granularity IS the kernel's VMEM tile."""
+    return paged_decode_attention_pallas(q, k_pages, v_pages, table,
+                                         q_pos, kv_pos, window=window,
+                                         interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -29,3 +29,16 @@ def decode_attention_ref(q, k, v, q_pos, kv_pos, *, window: int = 0):
     o = attention(q[:, None], k, v, q_pos=q_pos[None].astype(jnp.int32),
                   kv_pos=kv_pos, window=window, chunk=0)
     return o[:, 0]
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, table, q_pos, kv_pos,
+                               *, window: int = 0):
+    """Paged oracle: gather each row's logical KV through its page table
+    into a dense (B, C, KV, dh) view, then run the ring reference.
+
+    q: (B, H, dh); k_pages/v_pages: (P1, page, KV, dh); table:
+    (B, n_pages) int32; kv_pos: (C,) with C = n_pages * page.
+    """
+    from ..models.attention import paged_gather
+    k, v = paged_gather(k_pages, v_pages, table)
+    return decode_attention_ref(q, k, v, q_pos, kv_pos, window=window)

@@ -32,6 +32,11 @@ def main():
                     help="dispatch executor: 'overlapped' enqueues every "
                          "shard's prefill/decode before blocking (async "
                          "dispatch); 'serial' is the blocking reference")
+    ap.add_argument("--kv", choices=("ring", "paged"), default="ring",
+                    help="KV cache layout: 'paged' pools fixed-size "
+                         "pages per shard and shares prompt-prefix "
+                         "pages between requests (dense-family experts "
+                         "only; others keep the ring layout)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -50,8 +55,10 @@ def main():
         if cfg.family in ("encdec", "vlm"):  # token-only serving demo
             cfg = get_config("llama3_2_1b").reduced(name=f"llama@{n}")
         model = build_model(cfg)
+        kv = args.kv if model.supports_paged_kv else "ring"
         registry.add(n, ExpertEngine(model, model.init(
-            jax.random.PRNGKey(i)), max_len=64), arch=cfg.name)
+            jax.random.PRNGKey(i)), max_len=64, kv_layout=kv),
+            arch=cfg.name)
     server = RoutedServer(matcher, registry, executor=args.executor)
 
     rng = np.random.default_rng(0)

@@ -47,6 +47,29 @@ class BaseModel:
         zeros = jax.eval_shape(lambda: self.init_cache(batch_size, capacity))
         return zeros
 
+    # -- paged KV cache protocol (opt-in per family) ----------------------
+    @property
+    def supports_paged_kv(self) -> bool:
+        """Whether this family implements the paged cache protocol
+        (``init_paged_pool`` / ``paged_prefill`` / ``paged_decode``).
+        Families with non-KV recurrent state (rwkv6, mamba2) or
+        prepended stub embeddings keep the dense ring layout."""
+        return False
+
+    def init_paged_pool(self, n_pages: int, page: int):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support the paged KV layout")
+
+    def paged_prefill(self, params, batch, pool, scatter_tbl, *,
+                      page: int, capacity: int):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support the paged KV layout")
+
+    def paged_decode(self, params, pool, table, pos, t, batch, *,
+                     page: int):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support the paged KV layout")
+
     # -- shapes ------------------------------------------------------------
     def cache_capacity(self, seq_len: int) -> int:
         w = self.cfg.sliding_window

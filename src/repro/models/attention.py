@@ -174,3 +174,63 @@ def cache_append(cache, k1, v1):
         cache["v"], v1.astype(cache["v"].dtype), (0, slot, 0, 0))
     pos = jax.lax.dynamic_update_slice(cache["pos"], t[None], (slot,))
     return {"k": ck, "v": cv, "pos": pos, "t": t + 1}
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache protocol (single-layer primitives)
+#
+# Instead of one dense (B, C, KV, dh) buffer per micro-batch, K/V live
+# in a shared pool of fixed-size pages (n_pages + 1, page, KV, dh) —
+# the trailing page is the *trash page*, a write-discard target for
+# rows whose computed KV is deliberately dropped (batch padding, rows
+# deduplicated against a shared prefix). Each row carries a page table
+# (B, C // page) of physical page ids; prefix-sharing rows simply map
+# leading logical pages to the same physical pages. `pos`/`t` tracking
+# is unchanged from the ring cache: positions are logical-slot-indexed
+# and rows advance in lockstep, so the attention masking math cannot
+# tell the layouts apart. Allocation/refcounting is host-side
+# (`repro.serve.kvcache.PagePool`); these helpers are the device half.
+# ---------------------------------------------------------------------------
+
+
+def init_paged_pool(n_pages, page, n_kv, dh, dtype):
+    """Zeroed (n_pages + 1, page, KV, dh) pool; last page is trash."""
+    shape = (n_pages + 1, page, n_kv, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_gather(k_pages, v_pages, table):
+    """Materialise each row's logical KV view through its page table.
+
+    k_pages, v_pages: (P1, page, KV, dh); table: (B, n) int32 physical
+    page per logical page. Returns dense (B, n * page, KV, dh) views
+    whose values equal the ring cache's for every written slot (unwritten
+    slots carry pool garbage — always masked via pos == -1).
+    """
+    B, n = table.shape
+    page, KV, dh = k_pages.shape[1:]
+    k = k_pages[table].reshape(B, n * page, KV, dh)
+    v = v_pages[table].reshape(B, n * page, KV, dh)
+    return k, v
+
+
+def paged_scatter_pages(k_pages, v_pages, scatter_tbl, k, v):
+    """Write whole prefill pages: k, v (B, S, KV, dh) with S a multiple
+    of the page size; scatter_tbl (B, S // page) physical destinations.
+    Rows whose compute is discarded point every entry at the trash page
+    (duplicate trash indices are fine — the page is never read)."""
+    B, S, KV, dh = k.shape
+    npp = scatter_tbl.shape[1]
+    page = S // npp
+    ku = k.reshape(B, npp, page, KV, dh).astype(k_pages.dtype)
+    vu = v.reshape(B, npp, page, KV, dh).astype(v_pages.dtype)
+    return (k_pages.at[scatter_tbl].set(ku),
+            v_pages.at[scatter_tbl].set(vu))
+
+
+def paged_append(k_pages, v_pages, tbl_col, offset, k1, v1):
+    """Write one decoded token per row: tbl_col (B,) physical pages,
+    offset () in-page slot (shared — rows decode in lockstep), k1, v1
+    (B, 1, KV, dh)."""
+    return (k_pages.at[tbl_col, offset].set(k1[:, 0].astype(k_pages.dtype)),
+            v_pages.at[tbl_col, offset].set(v1[:, 0].astype(v_pages.dtype)))

@@ -12,7 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from .api import BaseModel, register_family
-from .attention import (attention, cache_append, cache_prefill, init_kv_cache)
+from .attention import (attention, cache_append, cache_prefill,
+                        init_kv_cache, paged_append, paged_gather,
+                        paged_scatter_pages)
 from .common import (ArchConfig, KeyGen, apply_rope, dense_init, dt,
                      embed_init, ones_init, rmsnorm, softmax_xent, zeros_init)
 from .moe import init_moe, moe_ffn
@@ -240,6 +242,69 @@ class DecoderLM(BaseModel):
             "t": t + 1,
         }
         return logits, new_cache
+
+    # ------------------------------------------------------------------
+    # Paged KV cache protocol. The forward math is *shared with the ring
+    # path by construction*: paged_prefill runs the ordinary prefill and
+    # only then scatters the dense cache into pool pages; paged_decode
+    # gathers each row's pages into the dense view the ordinary decode
+    # expects and scatters back the one slot it wrote. Logits therefore
+    # go through the identical op sequence in both layouts — the
+    # token-identity the serving equivalence tests assert is a property
+    # of the construction, not a numerical accident.
+    # ------------------------------------------------------------------
+    @property
+    def supports_paged_kv(self):
+        # stub-embed (VLM) prefills prepend non-token positions, so the
+        # prompt page <-> token page correspondence breaks
+        return not self.cfg.n_stub_embeds
+
+    def init_paged_pool(self, n_pages, page):
+        # layer-stack on axis 1: (P1, L, page, KV, dh) keeps the page
+        # index leading so one gather per table entry covers all layers
+        cfg = self.cfg
+        shape = (n_pages + 1, cfg.n_layers, page, cfg.n_kv_heads, cfg.dh)
+        cdt = dt(cfg.compute_dtype)
+        return {"k": jnp.zeros(shape, cdt), "v": jnp.zeros(shape, cdt)}
+
+    def paged_prefill(self, params, batch, pool, scatter_tbl, *, page,
+                      capacity):
+        """Ordinary prefill + page scatter. scatter_tbl: (B, S // page)
+        physical destination pages (trash for rows whose compute is
+        discarded). Returns (logits, pool', pos, t)."""
+        logits, cache = self.prefill(params, batch, capacity=capacity)
+        S = batch["tokens"].shape[1]
+        k, v = cache["k"][:, :, :S], cache["v"][:, :, :S]
+
+        def per_layer(kp, vp, kl, vl):
+            return paged_scatter_pages(kp, vp, scatter_tbl, kl, vl)
+
+        nk, nv = jax.vmap(per_layer, in_axes=(1, 1, 0, 0),
+                          out_axes=(1, 1))(pool["k"], pool["v"], k, v)
+        return logits, {"k": nk, "v": nv}, cache["pos"], cache["t"]
+
+    def paged_decode(self, params, pool, table, pos, t, batch, *, page):
+        """Gather the dense per-row view through the page table, run the
+        ordinary decode on it, scatter the newly written slot back.
+        Returns (logits, pool', pos', t')."""
+        nlp = table.shape[1]
+        C = nlp * page
+        gk, gv = jax.vmap(paged_gather, in_axes=(1, 1, None),
+                          out_axes=0)(pool["k"], pool["v"], table)
+        logits, nc = self.decode(
+            params, {"k": gk, "v": gv, "pos": pos, "t": t}, batch)
+        slot = t % C
+        tbl_col = jnp.take(table, slot // page, axis=1)
+        off = slot % page
+        k1 = jax.lax.dynamic_slice_in_dim(nc["k"], slot, 1, axis=2)
+        v1 = jax.lax.dynamic_slice_in_dim(nc["v"], slot, 1, axis=2)
+
+        def per_layer(kp, vp, kl, vl):
+            return paged_append(kp, vp, tbl_col, off, kl, vl)
+
+        nk, nv = jax.vmap(per_layer, in_axes=(1, 1, 0, 0),
+                          out_axes=(1, 1))(pool["k"], pool["v"], k1, v1)
+        return logits, {"k": nk, "v": nv}, nc["pos"], nc["t"]
 
     # ------------------------------------------------------------------
     def input_shapes(self, sc):

@@ -2,21 +2,42 @@
 
 ``RoutedServer`` keeps the seed one-shot API (``serve(requests)``);
 ``Scheduler.submit``/``step`` expose the continuous-batching path.
-``plan_placement`` + ``BankedEngine`` map homogeneous experts onto a
-mesh ``expert`` axis so one dispatch serves every co-located expert.
-``EngineCore`` is the shared residency/bucketing/harvest machinery both
-engine shims delegate to; the ``DispatchExecutor`` seam (``serial`` /
-``overlapped``) decides whether a scheduler step blocks per decode tick
-or enqueues all shards' work and harvests with one batched transfer per
-wave. See README.md in this directory for the design.
+
+The moving parts, front to back:
+
+  * ``Router`` — ExpertMatcher scoring with bounded jit shapes, a
+    client-fingerprint LRU, and ``PrefixLRU``, the same idiom applied
+    to prompt pages so cohorts sending near-identical prompts are
+    detected at submission.
+  * ``Scheduler`` — per-expert admission queues with length-bucketed
+    continuous micro-batching; on paged shards, prefix-sharing rows are
+    co-admitted into one wave and page-pool exhaustion requeues rows as
+    clean backpressure.
+  * ``plan_placement`` + ``BankedEngine`` — homogeneous experts banked
+    onto a mesh ``expert`` axis: one vmapped/GSPMD-sharded dispatch
+    serves every co-located expert.
+  * ``EngineCore`` — the one residency/bucketing/harvest implementation
+    behind both engine shims. Its KV cache has two layouts: ``ring``
+    (dense per-wave buffers, the reference) and ``paged`` (a per-shard
+    ``PagePool`` of fixed-size pages with per-row page tables,
+    refcounted prefix sharing, copy-on-write, and prefill deduplication
+    — see ``kvcache``).
+  * ``DispatchExecutor`` (``serial`` / ``overlapped``) — whether a
+    scheduler step blocks per decode tick or enqueues all shards' work
+    and harvests with one batched transfer per wave.
+
+See README.md in this directory and ``docs/architecture.md`` for the
+design and the paper mapping.
 """
 from .core import (DispatchExecutor, EngineCore, EngineStats,
                    OverlappedExecutor, SerialExecutor, bucket_for,
                    get_executor, make_buckets)
 from .engine import ExpertEngine
+from .kvcache import (PagePool, PagePoolExhausted, PrefixCache,
+                      hash_chain)
 from .placement import (BankMember, BankedEngine, PlacementPlan, Shard,
                         plan_placement)
-from .router import Router, RouteResult
+from .router import PrefixLRU, Router, RouteResult
 from .scheduler import (Request, Response, RoutedServer, Scheduler,
                         SchedulerConfig)
 
@@ -25,8 +46,9 @@ __all__ = [
     "make_buckets",
     "DispatchExecutor", "SerialExecutor", "OverlappedExecutor",
     "get_executor",
+    "PagePool", "PagePoolExhausted", "PrefixCache", "hash_chain",
     "BankedEngine", "BankMember", "PlacementPlan", "Shard",
     "plan_placement",
-    "Router", "RouteResult",
+    "PrefixLRU", "Router", "RouteResult",
     "Request", "Response", "RoutedServer", "Scheduler", "SchedulerConfig",
 ]

@@ -55,6 +55,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..sharding import leading_sharding
+from .kvcache import PagePool, PagePoolExhausted, PrefixCache, hash_chain
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +147,18 @@ class EngineStats:
         self.rows_padded = 0
         self.tokens_generated = 0
         self.host_blocks = 0
+        # prefill-compute accounting (the shared-prefix savings signal):
+        # submitted counts every prompt token clients sent; computed
+        # counts Sb per row that actually went through a prefill
+        # dispatch — rows deduplicated in-wave or fully served from the
+        # prefix cache contribute zero
+        self.prefill_tokens_submitted = 0
+        self.prefill_tokens_computed = 0
+        self.prefill_rows_computed = 0
+        self.prefix_full_hits = 0       # rows skipped via cross-wave cache
+        self.prefix_dup_rows = 0        # rows deduplicated inside a wave
+        self.prefix_pages_shared = 0    # page refs shared instead of built
+        self.pages_copied = 0           # copy-on-write page copies
 
     @property
     def prefill_compiles(self) -> int:
@@ -173,7 +186,11 @@ class EngineStats:
                 f"rows_served={self.rows_served}, "
                 f"rows_padded={self.rows_padded}, "
                 f"tokens_generated={self.tokens_generated}, "
-                f"host_blocks={self.host_blocks})")
+                f"host_blocks={self.host_blocks}, "
+                f"prefill_tokens={self.prefill_tokens_computed}/"
+                f"{self.prefill_tokens_submitted}, "
+                f"prefix_hits={self.prefix_full_hits}+"
+                f"{self.prefix_dup_rows}dup)")
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +205,12 @@ class _Wave:
     ``emitted`` holds one (E, Bb) token plane per generated step; planes
     start life as device buffers and are swapped for host arrays by
     ``_materialize`` — ``n_host`` is the already-materialised prefix.
+
+    Ring waves own a dense ``cache``; paged waves instead carry a page
+    ``table`` into the core's shared pool plus the wave's ``pos``/``t``
+    tracking (lockstep rows share positions, only physical storage is
+    per-row), the pages each row must release at retirement, and the
+    prefix chains to register in the cross-wave cache.
     """
     uids: Dict[int, List[Any]]          # local expert -> row uids
     per_row_new: Dict[int, List[int]]
@@ -197,6 +220,15 @@ class _Wave:
     emitted: List[Any]                  # (E, Bb) planes, device or host
     steps_left: int
     n_host: int = 0                     # emitted[:n_host] are host arrays
+    # paged-layout fields (None / empty on ring waves)
+    table: Optional[jnp.ndarray] = None      # (E, Bb, n_logical) int32
+    pos: Optional[jnp.ndarray] = None        # (E, C) slot positions
+    t: Optional[jnp.ndarray] = None          # (E,) next write position
+    pages_held: Dict[int, List[List[int]]] = \
+        dataclasses.field(default_factory=dict)
+    register: List[Tuple[int, int, int, List[bytes], List[int]]] = \
+        dataclasses.field(default_factory=list)
+    #   ^ (local, row, padded_len, chain, pages) to insert at retirement
 
 
 class EngineCore:
@@ -213,9 +245,15 @@ class EngineCore:
                  max_len: int = 256, min_len_bucket: int = 8,
                  len_buckets: Optional[Sequence[int]] = None,
                  batch_buckets: Optional[Sequence[int]] = None,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 kv_layout: str = "ring", page_size: int = 8,
+                 pool_pages: Optional[int] = None,
+                 prefix_cache_size: int = 1024):
         if not params_list:
             raise ValueError("EngineCore needs at least one expert")
+        if kv_layout not in ("ring", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}; expected "
+                             "'ring' or 'paged'")
         self.model = model
         self.n_experts = len(params_list)
         self.max_len = max_len
@@ -237,12 +275,48 @@ class EngineCore:
         # each wrapper's _cache_size() (see EngineStats)
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
         self._decode_fns: Dict[int, Any] = {}
+        self._copy_fns: Dict[int, Any] = {}     # COW page-copy, by count
         params = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
                                         *params_list)
         if self.mesh is not None:
             sh = leading_sharding(params, "expert", self.mesh)
             params = jax.device_put(params, sh)
         self.params = params
+        # -- paged KV state (None in ring layout) ------------------------
+        self.kv_layout = kv_layout
+        self.pool: Optional[PagePool] = None
+        self.prefix_cache: Optional[PrefixCache] = None
+        self.kv_pool = None                  # {k, v}: (E, P1, L, page, ...)
+        if kv_layout == "paged":
+            if not model.supports_paged_kv:
+                raise ValueError(
+                    f"model family {model.cfg.family!r} does not "
+                    "implement the paged KV cache protocol; use "
+                    "kv_layout='ring'")
+            self.page = int(page_size)
+            bad = [b for b in (*self.len_buckets, self.max_len)
+                   if b % self.page]
+            if bad:
+                raise ValueError(
+                    f"paged layout needs every length bucket to be a "
+                    f"multiple of page_size={self.page}; offending "
+                    f"buckets {bad} (prefills must fill whole pages so "
+                    "prefix-shared pages are never partially written)")
+            self.n_logical = self.max_len // self.page
+            per_expert = int(pool_pages) if pool_pages else \
+                3 * self.batch_buckets[-1] * self.n_logical
+            self.pool = PagePool(self.n_experts, per_expert, self.page)
+            self.prefix_cache = PrefixCache(self.pool,
+                                            capacity=prefix_cache_size)
+            shape = jax.eval_shape(
+                lambda: model.init_paged_pool(per_expert, self.page))
+            kv = jax.tree_util.tree_map(
+                lambda s: jnp.zeros((self.n_experts,) + s.shape, s.dtype),
+                shape)
+            if self.mesh is not None:
+                kv = jax.device_put(
+                    kv, leading_sharding(kv, "expert", self.mesh))
+            self.kv_pool = kv
 
     # -- sharded/bucketed executables -----------------------------------
     def _bank_sharding(self):
@@ -254,28 +328,97 @@ class EngineCore:
     def _prefill_fn(self, Bb: int, Sb: int):
         key = (Bb, Sb)
         if key not in self._prefill_fns:
-            fn = jax.vmap(lambda p, b: self.model.prefill(
-                p, b, capacity=self.max_len))
             s = self._bank_sharding()
-            if s is not None:
-                jitted = jax.jit(fn, in_shardings=(s, s),
-                                 out_shardings=(s, s))
+            if self.kv_layout == "paged":
+                # (params, {tokens}, kv_pool, scatter_tbl) ->
+                # (logits, kv_pool'); the pool buffers are donated so
+                # XLA scatters the new pages in place
+                fn = jax.vmap(
+                    lambda p, b, pool, tbl: self.model.paged_prefill(
+                        p, b, pool, tbl, page=self.page,
+                        capacity=self.max_len)[:2])
+                if s is not None:
+                    jitted = jax.jit(fn, in_shardings=(s, s, s, s),
+                                     out_shardings=(s, s),
+                                     donate_argnums=(2,))
+                else:
+                    jitted = jax.jit(fn, donate_argnums=(2,))
             else:
-                jitted = jax.jit(fn)
+                fn = jax.vmap(lambda p, b: self.model.prefill(
+                    p, b, capacity=self.max_len))
+                if s is not None:
+                    jitted = jax.jit(fn, in_shardings=(s, s),
+                                     out_shardings=(s, s))
+                else:
+                    jitted = jax.jit(fn)
             self._prefill_fns[key] = jitted
         return self._prefill_fns[key]
 
     def _decode_fn(self, Bb: int):
         if Bb not in self._decode_fns:
-            fn = jax.vmap(self.model.decode)
             s = self._bank_sharding()
-            if s is not None:
-                jitted = jax.jit(fn, in_shardings=(s, s, s),
-                                 out_shardings=(s, s), donate_argnums=(1,))
+            if self.kv_layout == "paged":
+                # (params, kv_pool, table, pos, t, {token}) ->
+                # (logits, kv_pool', pos', t')
+                fn = jax.vmap(
+                    lambda p, pool, tbl, pos, t, b: self.model.paged_decode(
+                        p, pool, tbl, pos, t, b, page=self.page))
+                if s is not None:
+                    jitted = jax.jit(fn,
+                                     in_shardings=(s, s, s, s, s, s),
+                                     out_shardings=(s, s, s, s),
+                                     donate_argnums=(1,))
+                else:
+                    jitted = jax.jit(fn, donate_argnums=(1,))
             else:
-                jitted = jax.jit(fn, donate_argnums=(1,))
+                fn = jax.vmap(self.model.decode)
+                if s is not None:
+                    jitted = jax.jit(fn, in_shardings=(s, s, s),
+                                     out_shardings=(s, s),
+                                     donate_argnums=(1,))
+                else:
+                    jitted = jax.jit(fn, donate_argnums=(1,))
             self._decode_fns[Bb] = jitted
         return self._decode_fns[Bb]
+
+    def _copy_pages_fn(self, m: int):
+        """Jitted COW page copier for ``m`` (expert, src, dst) triples.
+        The pool is donated so XLA scatters the copied pages in place —
+        an eager ``.at[].set`` would materialise a full copy of the
+        engine's largest device buffer per call. ``m`` is snapped to a
+        power-of-two ladder (padding copies trash -> trash, a no-op),
+        so the wrapper count stays bounded under arbitrary traffic."""
+        if m not in self._copy_fns:
+            def fn(pool, es, srcs, dsts):
+                return {k: v.at[es, dsts].set(v[es, srcs])
+                        for k, v in pool.items()}
+            s = self._bank_sharding()
+            if s is not None:
+                jitted = jax.jit(fn, in_shardings=(s, None, None, None),
+                                 out_shardings=s, donate_argnums=(0,))
+            else:
+                jitted = jax.jit(fn, donate_argnums=(0,))
+            self._copy_fns[m] = jitted
+        return self._copy_fns[m]
+
+    def _copy_pages(self, copies: Mapping[int, Sequence[Tuple[int, int]]]
+                    ) -> None:
+        """Apply copy-on-write page copies: flatten every expert's
+        (src, dst) pairs into one padded, jitted, donated dispatch."""
+        triples = [(local, s_, d) for local, pairs in copies.items()
+                   for s_, d in pairs]
+        if not triples:
+            return
+        m = 1
+        while m < len(triples):
+            m *= 2
+        trash = self.pool.trash
+        triples += [(0, trash, trash)] * (m - len(triples))
+        es, srcs, dsts = (np.asarray(col, np.int32)
+                          for col in zip(*triples))
+        self.kv_pool = self._copy_pages_fn(m)(
+            self.kv_pool, jnp.asarray(es), jnp.asarray(srcs),
+            jnp.asarray(dsts))
 
     # -- admission -------------------------------------------------------
     def pad_shape(self, n_rows: int, prompt_len: int) -> Tuple[int, int]:
@@ -326,30 +469,256 @@ class EngineCore:
         uids: Dict[int, List[Any]] = {}
         per_row: Dict[int, List[int]] = {}
         done: Dict[int, List[bool]] = {}
-        n_rows = 0
+        n_rows, n_submitted = 0, 0
         for local, (u, prompts, max_new) in groups.items():
             for i, p in enumerate(prompts):
                 p = np.asarray(p, np.int32)[-Sb:]
                 toks[local, i, :len(p)] = p
+                n_submitted += len(p)
             uids[local] = list(u)
             per_row[local] = [max(1, int(m)) for m in max_new]
             done[local] = [False] * len(u)
             n_rows += len(u)
-        logits, cache = self._prefill_fn(Bb, Sb)(
-            self.params, {"tokens": jnp.asarray(toks)})
-        self.stats.prefill_calls += 1
+        if self.kv_layout == "paged":
+            # may raise PagePoolExhausted with no state changed — the
+            # scheduler requeues the rows as backpressure
+            w = self._admit_paged(toks, uids, per_row, done, Bb, Sb)
+        else:
+            logits, cache = self._prefill_fn(Bb, Sb)(
+                self.params, {"tokens": jnp.asarray(toks)})
+            self.stats.prefill_calls += 1
+            self.stats.prefill_rows_computed += n_rows
+            self.stats.prefill_tokens_computed += n_rows * Sb
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[..., None]
+            w = _Wave(uids=uids, per_row_new=per_row, done=done,
+                      cache=cache, tok=tok, emitted=[tok[..., 0]],
+                      steps_left=max(m for ms in per_row.values()
+                                     for m in ms) - 1)
         self.stats.rows_served += n_rows
         self.stats.rows_padded += E * Bb - n_rows
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[..., None]
-        w = _Wave(uids=uids, per_row_new=per_row, done=done,
-                  cache=cache, tok=tok, emitted=[tok[..., 0]],
-                  steps_left=max(m for ms in per_row.values()
-                                 for m in ms) - 1)
+        self.stats.prefill_tokens_submitted += n_submitted
         self._active.append(w)
         if not defer:
             self._materialize(w, 1)
             self.harvest()
         return True
+
+    # -- paged admission -------------------------------------------------
+    def _alloc_pages(self, local: int, n: int,
+                     ledger: List[Tuple[int, List[int]]]) -> List[int]:
+        """Pool allocation with prefix-cache eviction as the fallback;
+        every page taken is recorded in ``ledger`` for rollback."""
+        try:
+            pages = self.pool.alloc(local, n)
+        except PagePoolExhausted:
+            self.prefix_cache.evict_for(local, n)
+            pages = self.pool.alloc(local, n)
+        ledger.append((local, pages))
+        return pages
+
+    def _admit_paged(self, toks: np.ndarray, uids, per_row, done,
+                     Bb: int, Sb: int) -> _Wave:
+        """Plan page tables for one wave, sharing prefixes, then prefill
+        only the rows no cached/duplicated prefix covers.
+
+        Host phase (transactional): every row is classified as
+
+          * ``cached`` — its full padded prompt's pages are in the
+            cross-wave prefix cache and the greedy first token is known:
+            the row adopts the pages (refcount++) and skips prefill
+            compute entirely;
+          * ``dup`` — an earlier row in this wave carries the identical
+            padded prompt: share its pages, take its first token;
+          * ``computed`` — adopt whatever cached prefix exists (those
+            pages are scattered to trash — storage shared, compute not),
+            allocate fresh pages for the rest, and join the packed
+            prefill batch.
+
+        Rows that wrap (Sb + steps > capacity) overwrite prompt pages
+        during decode, so shared pages in the write range are
+        copy-on-write remapped to fresh copies before the first tick.
+        If the pool cannot cover the wave even after evicting cache
+        entries, every reference taken so far is rolled back and
+        ``PagePoolExhausted`` propagates with the pool untouched.
+
+        Device phase: computed rows are packed into a (E, Bbc, Sb)
+        prefill — Bbc buckets the *computed* row count, which is where
+        the measured prefill-compute saving comes from — followed by the
+        COW page copies and the first-token plane assembly (gather from
+        packed logits + cached-token overrides), all enqueued without a
+        host block.
+        """
+        E, page, nlp, C = self.n_experts, self.page, self.n_logical, \
+            self.max_len
+        npp = Sb // page
+        trash = self.pool.trash
+        steps = max(m for ms in per_row.values() for m in ms) - 1
+        wr_pages = sorted({(s % C) // page for s in range(Sb, Sb + steps)})
+        wr_prompt = [lp for lp in wr_pages if lp < npp]
+        wr_decode = [lp for lp in wr_pages if lp >= npp]
+        register_ok = not wr_prompt      # decode never clobbers a prefix
+
+        table = np.full((E, Bb, nlp), trash, np.int32)
+        ledger: List[Tuple[int, List[int]]] = []    # refs for rollback
+        to_release: List[Tuple[int, List[int]]] = []  # COW'd-out pages
+        copies: Dict[int, List[Tuple[int, int]]] = {}  # local -> (src, dst)
+        scatter: Dict[Tuple[int, int], List[int]] = {}  # computed rows
+        cached_tok: Dict[Tuple[int, int], int] = {}
+        dup_src: Dict[Tuple[int, int], int] = {}    # row -> computed row
+        register: List[Tuple[int, int, int, List[bytes], List[int]]] = []
+        n_cached = n_dup = n_shared = 0
+        try:
+            for local, row_uids in uids.items():
+                seen: Dict[bytes, int] = {}       # full-prompt key -> row
+                for i in range(len(row_uids)):
+                    chain = hash_chain(toks[local, i], page)
+                    key = chain[-1]
+                    prow: List[int]
+                    if key in seen:
+                        # only computed rows enter ``seen`` (a row equal
+                        # to a cache-hit row takes the cached branch
+                        # itself), so a dup's first token always comes
+                        # from its representative's packed logits
+                        rep = seen[key]
+                        prow = list(table[local, rep, :npp])
+                        self.pool.retain(local, prow)
+                        # ledger entries must own their page lists: the
+                        # COW remap below mutates prow in place, and an
+                        # aliased entry would double-free the fresh COW
+                        # page on rollback while leaking the shared one
+                        ledger.append((local, list(prow)))
+                        dup_src[(local, i)] = rep
+                        n_dup += 1
+                        n_shared += npp
+                    else:
+                        adopted = self.prefix_cache.adopt_prefix(local,
+                                                                 chain)
+                        if adopted:
+                            ledger.append((local, list(adopted)))
+                        ftok = None
+                        if len(adopted) == npp:
+                            ftok = self.prefix_cache.first_token(
+                                local, Sb, chain)
+                        if ftok is not None:
+                            prow = list(adopted)
+                            cached_tok[(local, i)] = ftok
+                            n_cached += 1
+                            n_shared += npp
+                        else:
+                            if wr_prompt and adopted:
+                                # a wrapping row must own its wrapped
+                                # prompt pages; trash the adoption and
+                                # compute everything into fresh pages
+                                self.pool.release(local, adopted)
+                                ledger.pop()
+                                adopted = []
+                            d = len(adopted)
+                            fresh = self._alloc_pages(local, npp - d,
+                                                      ledger)
+                            prow = list(adopted) + fresh
+                            scatter[(local, i)] = [trash] * d + fresh
+                            n_shared += d
+                            if register_ok:
+                                register.append((local, i, Sb, chain,
+                                                 list(prow)))
+                            seen[key] = i
+                    # copy-on-write: shared pages decode will overwrite
+                    for lp in wr_prompt:
+                        if self.pool.shared(local, prow[lp]):
+                            new = self._alloc_pages(local, 1, ledger)[0]
+                            copies.setdefault(local, []).append(
+                                (prow[lp], new))
+                            to_release.append((local, [prow[lp]]))
+                            prow[lp] = new
+                    decode_pages = self._alloc_pages(
+                        local, len(wr_decode), ledger)
+                    table[local, i, :npp] = prow
+                    for lp, pg in zip(wr_decode, decode_pages):
+                        table[local, i, lp] = pg
+        except PagePoolExhausted:
+            for local, pages in ledger:
+                self.pool.release(local, pages)
+            raise
+        # commit: COW'd-out shared pages lose this wave's reference
+        # (rollback above must NOT see these as held, hence deferred)
+        for local, pages in to_release:
+            self.pool.release(local, pages)
+        pages_held = {
+            local: [[int(p) for p in table[local, i] if p != trash]
+                    for i in range(len(row_uids))]
+            for local, row_uids in uids.items()}
+
+        # device phase: packed prefill over computed rows only
+        computed = sorted(scatter)                 # [(local, i), ...]
+        per_local: Dict[int, List[int]] = {}
+        for local, i in computed:
+            per_local.setdefault(local, []).append(i)
+        n_computed = len(computed)
+        tok = None
+        if n_computed:
+            Bbc = bucket_for(max(len(v) for v in per_local.values()),
+                             self.batch_buckets)
+            toks_c = np.zeros((E, Bbc, Sb), np.int32)
+            stbl = np.full((E, Bbc, npp), trash, np.int32)
+            slot_of: Dict[Tuple[int, int], int] = {}
+            for local, rows in per_local.items():
+                for c, i in enumerate(rows):
+                    toks_c[local, c] = toks[local, i]
+                    stbl[local, c] = scatter[(local, i)]
+                    slot_of[(local, i)] = c
+            logits, self.kv_pool = self._prefill_fn(Bbc, Sb)(
+                self.params, {"tokens": jnp.asarray(toks_c)},
+                self.kv_pool, jnp.asarray(stbl))
+            self.stats.prefill_calls += 1
+            tok_c = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            src = np.zeros((E, Bb), np.int32)
+            for local, row_uids in uids.items():
+                for i in range(len(row_uids)):
+                    src[local, i] = slot_of.get(
+                        (local, i),
+                        slot_of.get((local, dup_src.get((local, i), -1)),
+                                    0))
+            tok = jnp.take_along_axis(tok_c, jnp.asarray(src), axis=1)
+        if cached_tok:
+            mask = np.zeros((E, Bb), bool)
+            vals = np.zeros((E, Bb), np.int32)
+            for (local, i), ft in cached_tok.items():
+                mask[local, i] = True
+                vals[local, i] = ft
+            tok = jnp.asarray(vals) if tok is None else \
+                jnp.where(jnp.asarray(mask), jnp.asarray(vals), tok)
+        assert tok is not None, "wave with rows but no token source"
+        # COW copies read post-prefill pages (a dup's source may have
+        # been written by this very wave's scatter)
+        self._copy_pages(copies)
+        self.stats.pages_copied += sum(len(p) for p in copies.values())
+
+        self.stats.prefill_rows_computed += n_computed
+        self.stats.prefill_tokens_computed += n_computed * Sb
+        self.stats.prefix_full_hits += n_cached
+        self.stats.prefix_dup_rows += n_dup
+        self.stats.prefix_pages_shared += n_shared
+        pos = np.where(np.arange(C) < Sb, np.arange(C), -1).astype(
+            np.int32)
+        tok = tok[..., None]
+        table_dev = jnp.asarray(table)
+        pos_dev = jnp.asarray(np.broadcast_to(pos, (E, C)).copy())
+        t_dev = jnp.full((E,), Sb, jnp.int32)
+        s = self._bank_sharding()
+        if s is not None:
+            # commit every wave-carried array to the bank sharding now:
+            # tick 1 must present the decode executable with the same
+            # input shardings as every later tick (whose pos/t/tok come
+            # out of the decode itself via out_shardings), or pjit mints
+            # one executable per sharding combination and the
+            # bounded-compile invariant breaks
+            table_dev, pos_dev, t_dev, tok = jax.device_put(
+                (table_dev, pos_dev, t_dev, tok), s)
+        return _Wave(uids=uids, per_row_new=per_row, done=done,
+                     cache=None, tok=tok, emitted=[tok[..., 0]],
+                     steps_left=steps,
+                     table=table_dev, pos=pos_dev, t=t_dev,
+                     pages_held=pages_held, register=register)
 
     # -- decoding --------------------------------------------------------
     def tick(self, *, defer: bool = False) -> int:
@@ -366,8 +735,15 @@ class EngineCore:
         for w in list(self._active):
             if w.steps_left > 0:
                 Bb = w.tok.shape[1]
-                logits, w.cache = self._decode_fn(Bb)(
-                    self.params, w.cache, {"token": w.tok})
+                if self.kv_layout == "paged":
+                    # the pool buffers thread through every wave's tick
+                    # (donated each dispatch); pos/t stay per-wave
+                    logits, self.kv_pool, w.pos, w.t = self._decode_fn(
+                        Bb)(self.params, self.kv_pool, w.table, w.pos,
+                            w.t, {"token": w.tok})
+                else:
+                    logits, w.cache = self._decode_fn(Bb)(
+                        self.params, w.cache, {"token": w.tok})
                 w.tok = jnp.argmax(logits, axis=-1).astype(
                     jnp.int32)[..., None]
                 w.emitted.append(w.tok[..., 0])
@@ -423,6 +799,21 @@ class EngineCore:
                     w.done[local][i] = True
             if w.steps_left <= 0 and all(all(d) for d in w.done.values()):
                 self._active.remove(w)
+                if self.kv_layout == "paged":
+                    self._retire_paged(w)
+
+    def _retire_paged(self, w: _Wave) -> None:
+        """Register computed prefixes in the cross-wave cache (the
+        first-token plane is host-side by now, so registration costs no
+        sync), then release every page the wave's rows held."""
+        for local, i, padded_len, chain, pages in w.register:
+            self.prefix_cache.insert(local, padded_len, chain, pages,
+                                     int(w.emitted[0][local, i]))
+        for local, rows in w.pages_held.items():
+            for pages in rows:
+                self.pool.release(local, pages)
+        w.pages_held = {}
+        w.register = []
 
     def poll(self) -> List[Tuple[int, Any, np.ndarray]]:
         """Drain finished (local expert, uid, tokens) triples."""

@@ -44,10 +44,14 @@ class ExpertEngine:
 
     def __init__(self, model: BaseModel, params, *, max_len: int = 256,
                  min_len_bucket: int = 8,
-                 batch_buckets: Optional[Sequence[int]] = None):
+                 batch_buckets: Optional[Sequence[int]] = None,
+                 kv_layout: str = "ring", page_size: int = 8,
+                 pool_pages: Optional[int] = None):
         self.core = EngineCore(model, [params], max_len=max_len,
                                min_len_bucket=min_len_bucket,
-                               batch_buckets=batch_buckets)
+                               batch_buckets=batch_buckets,
+                               kv_layout=kv_layout, page_size=page_size,
+                               pool_pages=pool_pages)
         self.model = model
         # the caller's unstacked params: plan_placement restacks these
         # into a BankedEngine, so the E=1 leading axis must not leak out
@@ -55,6 +59,7 @@ class ExpertEngine:
         self.max_len = self.core.max_len
         self.len_buckets = self.core.len_buckets
         self.batch_buckets = self.core.batch_buckets
+        self.kv_layout = self.core.kv_layout
         self._gen_serial = 0           # private generate() uid namespace
 
     @property

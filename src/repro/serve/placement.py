@@ -59,19 +59,24 @@ class BankedEngine:
                  max_len: int = 256, min_len_bucket: int = 8,
                  len_buckets: Optional[Sequence[int]] = None,
                  batch_buckets: Optional[Sequence[int]] = None,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 kv_layout: str = "ring", page_size: int = 8,
+                 pool_pages: Optional[int] = None):
         if not params_list:
             raise ValueError("BankedEngine needs at least one expert")
         self.core = EngineCore(model, params_list, max_len=max_len,
                                min_len_bucket=min_len_bucket,
                                len_buckets=len_buckets,
-                               batch_buckets=batch_buckets, mesh=mesh)
+                               batch_buckets=batch_buckets, mesh=mesh,
+                               kv_layout=kv_layout, page_size=page_size,
+                               pool_pages=pool_pages)
         self.model = model
         self.n_experts = self.core.n_experts
         self.mesh = self.core.mesh
         self.max_len = self.core.max_len
         self.len_buckets = self.core.len_buckets
         self.batch_buckets = self.core.batch_buckets
+        self.kv_layout = self.core.kv_layout
         self.params = self.core.params      # stacked (E, ...) pytree
 
     @property
@@ -134,6 +139,10 @@ class BankMember:
         return self.bank.batch_buckets
 
     @property
+    def kv_layout(self) -> str:
+        return self.bank.kv_layout
+
+    @property
     def stats(self) -> EngineStats:
         return self.bank.stats
 
@@ -186,10 +195,16 @@ def _bankable(engine: ExpertEngine) -> bool:
 
 
 def _bank_signature(engine: ExpertEngine):
-    """Experts are bankable iff they share arch config (minus name) and
-    bucket ladders — identical shapes, identical executables."""
+    """Experts are bankable iff they share arch config (minus name),
+    bucket ladders and KV layout — identical shapes, identical
+    executables (a paged member additionally contributes its page pool
+    geometry, since the bank stacks pools on the expert axis)."""
     cfg = engine.model.cfg.replace(name="")
-    return (cfg, engine.max_len, engine.len_buckets, engine.batch_buckets)
+    kv = (engine.kv_layout,)
+    if engine.kv_layout == "paged":
+        kv += (engine.core.page, engine.core.pool.n_pages)
+    return (cfg, engine.max_len, engine.len_buckets, engine.batch_buckets,
+            kv)
 
 
 def _bank_submesh(n_experts: int, mesh: Optional[Mesh], offset: int = 0):
@@ -249,7 +264,12 @@ def plan_placement(registry, *, mesh: Optional[Mesh] = None,
             engines[0].model, [eng.params for eng in engines],
             max_len=engines[0].max_len,
             len_buckets=engines[0].len_buckets,
-            batch_buckets=engines[0].batch_buckets, mesh=submesh)
+            batch_buckets=engines[0].batch_buckets, mesh=submesh,
+            kv_layout=engines[0].kv_layout,
+            page_size=(engines[0].core.page
+                       if engines[0].kv_layout == "paged" else 8),
+            pool_pages=(engines[0].core.pool.n_pages
+                        if engines[0].kv_layout == "paged" else None))
         sid = len(shards)
         shards.append(Shard(sid=sid, experts=tuple(experts), bank=bank,
                             devices=devices))

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -40,6 +41,40 @@ class RouteResult:
     fine: np.ndarray          # (B,) class index within the top-1 expert
     shard: Optional[np.ndarray] = None  # (B,) placement shard ids
     cache_hits: int = 0
+
+
+class PrefixLRU:
+    """Prompt-prefix index: the fingerprint-LRU idiom applied to prompt
+    pages instead of client features.
+
+    The paper's cohorts re-query the server with near-identical prompts;
+    ``observe`` fingerprints the first KV page of each prompt (shorter
+    prompts hash whole) and returns a grouping key. The scheduler uses
+    equal keys to co-admit prefix-sharing rows into one wave, which is
+    what lets the paged engine deduplicate their prefill and share
+    pages; the LRU's repeat counter is the cohort-detection signal
+    surfaced in routing stats.
+    """
+
+    def __init__(self, page: int = 8, capacity: int = 4096):
+        self.page = page
+        self.capacity = capacity
+        self._lru: "collections.OrderedDict[bytes, int]" = \
+            collections.OrderedDict()
+        self.stats = {"observed": 0, "repeats": 0}
+
+    def observe(self, prompt: np.ndarray) -> bytes:
+        head = np.ascontiguousarray(
+            np.asarray(prompt, np.int32)[:self.page]).tobytes()
+        key = hashlib.blake2b(head, digest_size=16).digest()
+        self.stats["observed"] += 1
+        seen = self._lru.pop(key, 0)
+        if seen:
+            self.stats["repeats"] += 1
+        self._lru[key] = seen + 1
+        while len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+        return key
 
 
 class Router:

@@ -42,8 +42,9 @@ from ..core.matcher import ExpertMatcher
 from ..core.registry import ExpertRegistry
 from .core import DispatchExecutor, get_executor
 from .engine import ExpertEngine
+from .kvcache import PagePoolExhausted
 from .placement import BankMember, PlacementPlan, Shard
-from .router import Router
+from .router import PrefixLRU, Router
 
 
 @dataclasses.dataclass
@@ -79,6 +80,7 @@ class _Pending:
     scores: np.ndarray
     shard: int = -1
     seq: int = 0                    # submit order, for age promotion
+    prefix_key: bytes = b""         # prompt-prefix cohort key (PrefixLRU)
 
 
 class Scheduler:
@@ -138,9 +140,19 @@ class Scheduler:
             collections.defaultdict(int)   # (shard, bucket) skip rounds
         self.stats = {"submitted": 0, "rejected": 0, "batches": 0,
                       "ticks": 0, "responses": 0, "promotions": 0,
-                      "orphaned": 0}
+                      "orphaned": 0, "kv_stalls": 0}
         self._done: List[Response] = []
         self._meta: Dict[int, _Pending] = {}   # uid -> routing info
+        # prompt-prefix cohort detection: keyed at the page granularity
+        # of the first paged engine (8 when every shard rings)
+        page = next((self._shard_engine(s).core.page for s in self.shards
+                     if self._paged_shard(s)), 8)
+        self.prefix_lru = PrefixLRU(page=page)
+
+    def _paged_shard(self, shard: Shard) -> bool:
+        eng = self._shard_engine(shard)
+        return eng is not None and getattr(eng, "kv_layout", "ring") == \
+            "paged"
 
     # -- admission -------------------------------------------------------
     def submit(self, requests: Sequence[Request]) -> int:
@@ -176,7 +188,8 @@ class Scheduler:
                    else self._shard_of.get(e, -1))
             self._seq += 1
             p = _Pending(r, int(routed.fine[i]), routed.coarse_score[i],
-                         shard=sid, seq=self._seq)
+                         shard=sid, seq=self._seq,
+                         prefix_key=self.prefix_lru.observe(r.prompt))
             self.queues[e][sb].append(p)
             self._meta[r.uid] = p
             self.n_queued += 1
@@ -256,9 +269,34 @@ class Scheduler:
         self._skips.pop((shard.sid, sb), None)
         return sb
 
-    def _pop(self, e: int, sb: int, cap: int) -> List[_Pending]:
+    def _pop(self, e: int, sb: int, cap: int,
+             prefix_group: bool = False) -> List[_Pending]:
+        """Take up to ``cap`` rows from one bucket queue.
+
+        Plain FIFO normally; with ``prefix_group`` (paged shards) the
+        head's prompt-prefix cohort is pulled forward so prefix-sharing
+        rows land in the *same wave* — that co-residency is what lets
+        the paged engine deduplicate their prefill and share pages.
+        Non-matching rows keep their relative order and still fill any
+        remaining capacity, and bucket-level age promotion bounds how
+        long a displaced row can wait.
+        """
         q = self.queues[e][sb]
-        take = [q.popleft() for _ in range(min(len(q), cap))]
+        if prefix_group and len(q) > 1 and cap > 1:
+            key = q[0].prefix_key
+            idxs = [i for i, p in enumerate(q)
+                    if p.prefix_key == key][:cap]
+            if len(idxs) < cap:
+                fill = [i for i, p in enumerate(q)
+                        if p.prefix_key != key][:cap - len(idxs)]
+                idxs = sorted(idxs + fill)
+            picked = set(idxs)
+            take = [q[i] for i in idxs]
+            rest = [q[i] for i in range(len(q)) if i not in picked]
+            q.clear()
+            q.extend(rest)
+        else:
+            take = [q.popleft() for _ in range(min(len(q), cap))]
         self.n_queued -= len(take)
         if not q:
             # drop drained buckets: legacy backends key them by raw
@@ -266,6 +304,14 @@ class Scheduler:
             # _pick_bucket's scan) for the server's lifetime
             del self.queues[e][sb]
         return take
+
+    def _requeue(self, e: int, sb: int, take: List[_Pending]) -> None:
+        """Put popped rows back at the queue front (order preserved) —
+        the page pool could not host their wave this round."""
+        q = self.queues[e][sb]
+        for p in reversed(take):
+            q.appendleft(p)
+        self.n_queued += len(take)
 
     def _admit_batches(self, *, defer: bool = False) -> None:
         """Issue one dispatch group per shard. With ``defer`` the
@@ -283,43 +329,70 @@ class Scheduler:
     def _admit_banked(self, shard: Shard, sb: int, *,
                       defer: bool = False) -> None:
         """One dispatch group: every member expert's micro-batch from the
-        chosen bucket rides a single BankedEngine prefill."""
+        chosen bucket rides a single BankedEngine prefill. A paged bank
+        whose pool cannot host the wave requeues the rows (clean
+        backpressure) instead of corrupting resident pages."""
         bank = shard.bank
+        paged = self._paged_shard(shard)
         cap = min(self.config.max_batch, bank.batch_buckets[-1])
-        groups = {}
+        groups, popped = {}, {}
         for local, e in enumerate(shard.experts):
-            take = self._pop(e, sb, cap)
+            take = self._pop(e, sb, cap, prefix_group=paged)
             if take:
+                popped[local] = take
                 groups[local] = ([p.req.uid for p in take],
                                  [p.req.prompt for p in take],
                                  [p.req.max_new_tokens for p in take])
-        if groups:
+        if not groups:
+            return
+        try:
             bank.admit(groups, defer=defer)
-            self.stats["batches"] += 1
+        except PagePoolExhausted:
+            if not bank.n_active:
+                # no resident wave will ever free pages: the pool is
+                # simply too small for a single wave — surface it
+                raise
+            for local, e in enumerate(shard.experts):
+                if local in popped:
+                    self._requeue(e, sb, popped[local])
+            self.stats["kv_stalls"] += 1
+            return
+        self.stats["batches"] += 1
 
     def _admit_single(self, e: int, sb: int, *,
                       defer: bool = False) -> None:
         engine = self.registry[e].backend
         name = self.registry[e].name
         cap = self.config.max_batch
+        paged = isinstance(engine, ExpertEngine) and \
+            engine.kv_layout == "paged"
         if isinstance(engine, ExpertEngine):
             cap = min(cap, engine.batch_buckets[-1])
-        take = self._pop(e, sb, cap)
+        take = self._pop(e, sb, cap, prefix_group=paged)
         if not take:
             return
-        self.stats["batches"] += 1
         if isinstance(engine, ExpertEngine):
-            engine.admit([p.req.uid for p in take],
-                         [p.req.prompt for p in take],
-                         [p.req.max_new_tokens for p in take],
-                         defer=defer)
+            try:
+                engine.admit([p.req.uid for p in take],
+                             [p.req.prompt for p in take],
+                             [p.req.max_new_tokens for p in take],
+                             defer=defer)
+            except PagePoolExhausted:
+                if not engine.n_active:
+                    raise      # pool too small for even one wave
+                self._requeue(e, sb, take)
+                self.stats["kv_stalls"] += 1
+                return
+            self.stats["batches"] += 1
         elif engine is None:
+            self.stats["batches"] += 1
             for p in take:
                 self._meta.pop(p.req.uid, None)
                 self._done.append(self._response(
                     p, name, np.zeros(p.req.max_new_tokens, np.int32)))
         else:
             # legacy blocking engines: one padded batch call
+            self.stats["batches"] += 1
             m = max(len(p.req.prompt) for p in take)
             toks = np.zeros((len(take), m), np.int32)
             for i, p in enumerate(take):

@@ -109,6 +109,79 @@ def test_decode_attention_ring_cache_semantics():
     np.testing.assert_allclose(got1, got2, rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("B,H,KV,dh,page,nlp,win,dtype", [
+    (3, 8, 2, 64, 8, 8, 0, jnp.float32),
+    (2, 4, 4, 64, 16, 4, 0, jnp.float32),
+    (3, 8, 2, 64, 8, 8, 24, jnp.float32),    # sliding window
+    (1, 16, 2, 128, 8, 4, 0, jnp.float32),
+    (2, 8, 2, 64, 8, 8, 0, jnp.bfloat16),
+])
+def test_paged_decode_attention_parity(B, H, KV, dh, page, nlp, win,
+                                       dtype):
+    """Paged kernel == ring kernel on the gathered dense view == jnp
+    reference, through a scrambled page table with shared pages between
+    rows and trash-backed (never-written) logical tail pages — the
+    interpret=True Pallas path the serving kernels rely on."""
+    from repro.kernels.decode_attention import paged_decode_attention_pallas
+    from repro.models.attention import paged_gather
+    C = nlp * page
+    P1 = 3 * B * nlp + 1                       # pool + trash page
+    ks = jax.random.split(jax.random.PRNGKey(C + H), 3)
+    kp = jax.random.normal(ks[0], (P1, page, KV, dh), dtype)
+    vp = jax.random.normal(ks[1], (P1, page, KV, dh), dtype)
+    q = jax.random.normal(ks[2], (B, H, dh), dtype)
+    t = C - C // 3                             # last pages unwritten
+    n_valid = -(-t // page)
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(P1 - 1)             # scrambled physical order
+    tbl = np.full((B, nlp), P1 - 1, np.int32)  # tail -> trash
+    for b in range(B):
+        tbl[b, :n_valid] = perm[b * nlp:b * nlp + n_valid]
+    tbl[1:, 0] = tbl[0, 0]                     # rows share a prefix page
+    q_pos = jnp.asarray(t - 1, jnp.int32)
+    kv_pos = jnp.where(jnp.arange(C) < t, jnp.arange(C), -1).astype(
+        jnp.int32)
+    tblj = jnp.asarray(tbl)
+    got = np.asarray(paged_decode_attention_pallas(
+        q, kp, vp, tblj, q_pos, kv_pos, window=win), np.float32)
+    want = np.asarray(ref.paged_decode_attention_ref(
+        q, kp, vp, tblj, q_pos, kv_pos, window=win), np.float32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+    # triangulate against the ring kernel on the gathered dense view
+    kd, vd = paged_gather(kp, vp, tblj)
+    ring = np.asarray(ops.decode_attention(q, kd, vd, q_pos, kv_pos,
+                                           window=win, block_s=page),
+                      np.float32)
+    np.testing.assert_allclose(got, ring, rtol=tol, atol=tol)
+
+
+def test_paged_decode_attention_page_table_remap_invariance():
+    """Remapping rows to different physical pages with identical
+    contents must not change the output (storage layout is invisible
+    to the attention math)."""
+    B, H, KV, dh, page, nlp = 2, 4, 2, 32, 8, 4
+    C = nlp * page
+    P1 = 2 * B * nlp + 1
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    kp = jax.random.normal(ks[0], (P1, page, KV, dh))
+    vp = jax.random.normal(ks[1], (P1, page, KV, dh))
+    q = jax.random.normal(ks[2], (B, H, dh))
+    tbl1 = np.arange(B * nlp, dtype=np.int32).reshape(B, nlp)
+    # duplicate contents into a disjoint region, remap row 1 there
+    kp = kp.at[B * nlp:2 * B * nlp].set(kp[:B * nlp])
+    vp = vp.at[B * nlp:2 * B * nlp].set(vp[:B * nlp])
+    tbl2 = tbl1.copy()
+    tbl2[1] += B * nlp
+    q_pos = jnp.asarray(C - 1, jnp.int32)
+    kv_pos = jnp.arange(C, dtype=jnp.int32)
+    a = np.asarray(ops.paged_decode_attention(
+        q, kp, vp, jnp.asarray(tbl1), q_pos, kv_pos))
+    b = np.asarray(ops.paged_decode_attention(
+        q, kp, vp, jnp.asarray(tbl2), q_pos, kv_pos))
+    np.testing.assert_array_equal(a, b)
+
+
 @pytest.mark.parametrize("B,H,P", [(2, 4, 32), (1, 8, 64), (4, 2, 16)])
 def test_wkv_decode_step(B, H, P):
     from repro.kernels.wkv_step import wkv_step_pallas
