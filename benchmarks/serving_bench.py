@@ -19,6 +19,18 @@ Traffic scenarios (the ISSUE's acceptance matrix):
              cohort prefills and serves repeats from the prefix cache,
              so prefill tokens *computed* drop strictly below prefill
              tokens *submitted* — the CI-asserted savings signal.
+  zipf (``--hub``) — the long-tail catalog workload: ``--n-experts N``
+             experts served through an ExpertHub with only
+             ``--resident K`` device slots (N >> K). Traffic is one
+             catalog sweep (every expert cold-starts once) followed by
+             Zipf-distributed arrivals, so popular experts stay
+             resident while the tail churns through the slots. The
+             bench runs the identical request stream against a
+             fully-resident baseline hub (K = N) and asserts zero
+             token divergence, evictions > 0, every expert served, and
+             zero steady-state recompiles (bank jit cache + install
+             executable count unchanged from post-warmup through the
+             whole measured run).
 
 crossed with two KV layouts:
   ring   — dense per-wave KV buffers (the reference)
@@ -49,11 +61,12 @@ reported per scenario and in ``--json`` output.
   PYTHONPATH=src python benchmarks/serving_bench.py [--requests 60] \
       [--placement {per-device,banked}] [--devices 8] \
       [--executor {serial,overlapped}] [--kv {ring,paged}] \
-      [--workload {standard,shared-prefix}] [--json OUT.json]
+      [--workload {standard,shared-prefix}] [--json OUT.json] \
+      [--hub --n-experts 64 --resident 8]
 
 Output: one CSV-ish line per scenario,
-  scenario,placement,executor,kv,n,throughput_rps,p50_ms,p99_ms,batches,
-  prefill_compiles,host_blocks_per_tok,prefill_tok_computed,
+  scenario,placement,executor,kv,n,throughput_rps,p50_ms,p95_ms,p99_ms,
+  batches,prefill_compiles,host_blocks_per_tok,prefill_tok_computed,
   prefill_tok_submitted
 and, with ``--json``, a machine-readable results file for CI.
 """
@@ -108,6 +121,61 @@ def build_server(n_per_dataset: int, epochs: int, max_batch: int,
     server = RoutedServer(matcher, registry, max_batch=max_batch,
                           placement=plan, executor=executor)
     return server, bench, names
+
+
+def build_hub_server(n_experts: int, resident: int, max_batch: int,
+                     executor: str, kv: str, store: "str | None",
+                     seed: int = 0, use_mesh: bool = True,
+                     max_len: int = 32):
+    """An ExpertHub-fronted server: ``n_experts`` catalogued, only
+    ``resident`` device slots. Requests are pre-routed (no matcher —
+    the hub bench isolates the residency subsystem), and with ``store``
+    every expert is checkpointed cold so staging is real disk I/O. The
+    slot bank shards over the expert mesh when the forced device count
+    divides it (the fully-resident baseline passes ``use_mesh=False``:
+    it is a token-identity reference, and GSPMD-compiling E = catalog
+    vmapped graphs would dominate the bench for no extra signal)."""
+    import jax
+    from repro.configs import get_config
+    from repro.launch.mesh import make_expert_mesh
+    from repro.models import build_model
+    from repro.serve import ExpertHub, RoutedServer
+
+    cfg = get_config("smollm-135m").reduced(name="hub-expert")
+    model = build_model(cfg)
+    mesh = make_expert_mesh() if (use_mesh and len(jax.devices()) > 1
+                                  and resident % len(jax.devices()) == 0) \
+        else None
+    hub = ExpertHub(model, n_slots=resident, max_len=max_len, mesh=mesh,
+                    kv_layout=kv, store=store)
+    for i in range(n_experts):
+        hub.add_expert(f"expert-{i:03d}",
+                       model.init(jax.random.PRNGKey(seed + i)),
+                       cold=store is not None)
+    server = RoutedServer(None, hub.build_registry(),
+                          max_batch=max_batch, hub=hub,
+                          executor=executor)
+    return server, hub
+
+
+def zipf_requests(n: int, n_experts: int, rng: np.random.Generator,
+                  alpha: float = 1.1, max_len: int = 32) -> list:
+    """Long-tail catalog traffic: a catalog sweep (every expert exactly
+    once — the cold-start path, and the guarantee that all N experts
+    are served) followed by Zipf(alpha) arrivals over expert rank, so
+    expert 0 is hottest and the tail churns through the hub's slots."""
+    from repro.serve import Request
+    p = 1.0 / np.arange(1, n_experts + 1) ** alpha
+    p /= p.sum()
+    picks = rng.choice(n_experts, size=max(n - n_experts, 0), p=p)
+    experts = list(range(n_experts)) + list(picks)
+    hi = max(4, 3 * max_len // 4)
+    return [Request(uid=uid, features=np.zeros(784, np.float32),
+                    prompt=rng.integers(0, 100,
+                                        size=int(rng.integers(3, hi))),
+                    max_new_tokens=int(rng.integers(2, 6)),
+                    expert=int(e))
+            for uid, e in enumerate(experts[:n])]
 
 
 def _engine_stats(server):
@@ -209,12 +277,20 @@ def cohort_requests(bench, names, n: int, rng) -> list:
 
 
 def run_scenario(scenario: str, server, bench, names,
-                 n: int, rate: float, seed: int) -> dict:
+                 n: int, rate: float, seed: int,
+                 reqs: "list | None" = None,
+                 collect: "dict | None" = None) -> dict:
+    """Drive one scenario. ``reqs`` overrides the generated request
+    stream (the hub bench feeds both servers the identical stream);
+    ``collect`` (a dict) captures uid -> (expert, tokens) for token-
+    identity comparison across servers."""
     from repro.serve import Request
     rng = np.random.default_rng(seed)
     t_arr = arrivals_for("bursty" if scenario == "bursty" else "uniform",
                          n, rate, rng)
-    if scenario == "shared-prefix":
+    if reqs is not None:
+        assert len(reqs) == n
+    elif scenario == "shared-prefix":
         reqs = cohort_requests(bench, names, n, rng)
     else:
         which = expert_mix(scenario, n, len(names), rng)
@@ -231,6 +307,7 @@ def run_scenario(scenario: str, server, bench, names,
     sched = server.scheduler
     batches0 = sched.stats["batches"]
     stalls0 = sched.stats["kv_stalls"]
+    rstalls0 = sched.stats["resident_stalls"]
     compiles0 = total_prefill_compiles(server)
     blocks0 = total_host_blocks(server)
     tokens0 = total_tokens(server)
@@ -249,6 +326,8 @@ def run_scenario(scenario: str, server, bench, names,
         now += time.perf_counter() - t0
         for r in resps:  # completed during this step
             done_at[r.uid] = now
+            if collect is not None:
+                collect[r.uid] = (r.expert, r.tokens.tolist())
     lat = np.asarray([done_at[u] - t_arr[u] for u in range(n)])
     toks = total_tokens(server) - tokens0
     blocks = total_host_blocks(server) - blocks0
@@ -256,6 +335,7 @@ def run_scenario(scenario: str, server, bench, names,
     return {"scenario": scenario, "n": n,
             "throughput_rps": n / max(now, 1e-9),
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p95_ms": float(np.percentile(lat, 95) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
             "batches": sched.stats["batches"] - batches0,
             "prefill_compiles": total_prefill_compiles(server) - compiles0,
@@ -264,7 +344,110 @@ def run_scenario(scenario: str, server, bench, names,
             "host_blocks_per_tok": blocks / max(toks, 1),
             "prefill_tokens_computed": pf1[0] - pf0[0],
             "prefill_tokens_submitted": pf1[1] - pf0[1],
-            "kv_stalls": sched.stats["kv_stalls"] - stalls0}
+            "kv_stalls": sched.stats["kv_stalls"] - stalls0,
+            "resident_stalls": sched.stats["resident_stalls"] - rstalls0}
+
+
+_CSV_HEADER = ("scenario,placement,executor,kv,n,throughput_rps,p50_ms,"
+               "p95_ms,p99_ms,batches,prefill_compiles,"
+               "host_blocks_per_tok,prefill_tok_computed,"
+               "prefill_tok_submitted")
+
+
+def _csv_row(r: dict, args) -> str:
+    placement = "hub" if args.hub else args.placement
+    return (f"{r['scenario']},{placement},{args.executor},"
+            f"{args.kv},{r['n']},{r['throughput_rps']:.1f},"
+            f"{r['p50_ms']:.1f},{r['p95_ms']:.1f},{r['p99_ms']:.1f},"
+            f"{r['batches']},{r['prefill_compiles']},"
+            f"{r['host_blocks_per_tok']:.3f},"
+            f"{r['prefill_tokens_computed']},"
+            f"{r['prefill_tokens_submitted']}")
+
+
+def run_hub_bench(args) -> None:
+    """The long-tail residency benchmark: N catalogued experts through
+    K device slots, token-identity asserted against a fully-resident
+    (K = N) baseline on the identical Zipf request stream.
+
+    The whole measured run happens *after* the ladder warmup, so the
+    no-recompile clause of the ``--hub`` acceptance criterion is
+    direct: the bank's jit cache plus the slot-install executable must
+    not grow across a run in which dozens of experts rotate through
+    the slots.
+    """
+    import tempfile
+
+    t0 = time.time()
+    store = args.store or tempfile.mkdtemp(prefix="expert-store-")
+    server, hub = build_hub_server(
+        args.n_experts, args.resident, args.max_batch, args.executor,
+        args.kv, store, seed=args.seed)
+    base_srv, base_hub = build_hub_server(
+        args.n_experts, args.n_experts, args.max_batch, args.executor,
+        args.kv, None, seed=args.seed, use_mesh=False)
+    print(f"# hub server up in {time.time()-t0:.1f}s "
+          f"({args.n_experts} experts, {args.resident} slots, "
+          f"kv={args.kv}, executor={args.executor}, "
+          f"{hub.bank.mesh is not None and 'sharded' or 'unsharded'})",
+          flush=True)
+    t0 = time.time()
+    hub.warmup(args.max_batch)
+    jit_warm = hub.bank.stats.jit_cache_entries + hub.install_compiles
+    print(f"# ladder warmup in {time.time()-t0:.1f}s "
+          f"({jit_warm} executables)", flush=True)
+
+    print(_CSV_HEADER)
+    results = []
+    rng = np.random.default_rng(args.seed)
+    reqs = zipf_requests(args.requests, args.n_experts, rng,
+                         alpha=args.alpha, max_len=hub.bank.max_len)
+    got, want = {}, {}
+    r = run_scenario("zipf", server, None, None, args.requests,
+                     args.rate, args.seed, reqs=reqs, collect=got)
+    rb = run_scenario("zipf", base_srv, None, None, args.requests,
+                      args.rate, args.seed, reqs=reqs, collect=want)
+    diverged = [u for u in want if got.get(u) != want[u]]
+    assert not diverged, (
+        f"hub diverged from the fully-resident baseline on uids "
+        f"{diverged[:5]} (of {len(diverged)})")
+    served = {e for e, _ in got.values()}
+    assert len(served) == args.n_experts, (
+        f"only {len(served)}/{args.n_experts} experts served")
+    r["experts_served"] = len(served)
+    r["baseline_throughput_rps"] = rb["throughput_rps"]
+    results.append(r)
+    print(_csv_row(r, args), flush=True)
+
+    jit_end = hub.bank.stats.jit_cache_entries + hub.install_compiles
+    hub.check()
+    st = hub.stats
+    print(f"# hub: {st.loads} loads, {st.evictions} evictions, "
+          f"{st.resident_misses} resident misses, "
+          f"stage {st.stage_ms_avg:.1f}ms avg, "
+          f"commit {st.commit_ms_avg:.1f}ms avg", flush=True)
+    print(f"# jit executables: {jit_warm} post-warmup -> {jit_end} "
+          f"after the measured run", flush=True)
+    # the ISSUE's acceptance criteria, asserted in-process so CI only
+    # has to check the exit code
+    assert st.evictions > 0, "no evictions: catalog fits the slots?"
+    assert jit_end == jit_warm, (
+        f"steady-state recompiles: {jit_warm} executables post-warmup "
+        f"grew to {jit_end}")
+    assert base_hub.stats.evictions == 0   # baseline truly resident
+    assert_bounded_compiles(server)
+    if args.json:
+        payload = {"hub": True, "n_experts": args.n_experts,
+                   "resident": args.resident, "alpha": args.alpha,
+                   "kv": args.kv, "executor": args.executor,
+                   "requests": args.requests, "rate": args.rate,
+                   "seed": args.seed, "scenarios": results,
+                   "hub_stats": st.as_dict(),
+                   "jit_post_warmup": jit_warm,
+                   "jit_after_runs": jit_end}
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", flush=True)
 
 
 def main():
@@ -295,6 +478,21 @@ def main():
                          "shared-prefix: cohort traffic re-sending the "
                          "same prompts (asserts prefill-compute savings "
                          "when --kv paged)")
+    ap.add_argument("--hub", action="store_true",
+                    help="serve a long-tail expert catalog through an "
+                         "ExpertHub: --n-experts catalogued, --resident "
+                         "device slots, Zipf traffic, token-identity "
+                         "asserted against a fully-resident baseline")
+    ap.add_argument("--n-experts", type=int, default=64,
+                    help="hub catalog size (with --hub)")
+    ap.add_argument("--resident", type=int, default=8,
+                    help="hub device bank slots (with --hub)")
+    ap.add_argument("--alpha", type=float, default=1.1,
+                    help="Zipf exponent for the hub workload")
+    ap.add_argument("--store", default=None,
+                    help="expert checkpoint store dir for --hub "
+                         "(default: a temp dir; every expert is "
+                         "checkpointed cold so staging is real I/O)")
     ap.add_argument("--json", metavar="OUT", default=None,
                     help="also write machine-readable results (per-"
                          "scenario metrics + corrected compile counts + "
@@ -315,6 +513,16 @@ def main():
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}")
 
+    if args.hub:
+        if args.requests < args.n_experts:
+            ap.error(f"--hub needs --requests >= --n-experts "
+                     f"({args.n_experts}): the stream starts with a "
+                     "catalog sweep so every expert is served")
+        if args.resident < 1 or args.resident > args.n_experts:
+            ap.error("--resident must be in [1, --n-experts]")
+        run_hub_bench(args)
+        return
+
     from repro.serve import Request
 
     t0 = time.time()
@@ -334,9 +542,7 @@ def main():
     server.serve(warm)
     print("# warmup done", flush=True)
 
-    print("scenario,placement,executor,kv,n,throughput_rps,p50_ms,p99_ms,"
-          "batches,prefill_compiles,host_blocks_per_tok,"
-          "prefill_tok_computed,prefill_tok_submitted")
+    print(_CSV_HEADER)
     results = []
     scenarios = (("shared-prefix", "uniform")
                  if args.workload == "shared-prefix"
@@ -345,13 +551,7 @@ def main():
         r = run_scenario(scenario, server, bench, names,
                          args.requests, args.rate, args.seed)
         results.append(r)
-        print(f"{r['scenario']},{args.placement},{args.executor},"
-              f"{args.kv},{r['n']},{r['throughput_rps']:.1f},"
-              f"{r['p50_ms']:.1f},{r['p99_ms']:.1f},{r['batches']},"
-              f"{r['prefill_compiles']},"
-              f"{r['host_blocks_per_tok']:.3f},"
-              f"{r['prefill_tokens_computed']},"
-              f"{r['prefill_tokens_submitted']}", flush=True)
+        print(_csv_row(r, args), flush=True)
     from repro.serve.core import COMPILE_COUNTER_EXACT
     pf = total_prefill_tokens(server)
     totals = {

@@ -18,8 +18,17 @@ in the batched harvest), ``serial`` is the blocking per-tick reference.
 Both produce identical tokens — the run prints the host-sync counter so
 the difference is visible.
 
+With ``--hub`` the experts are served through an ``ExpertHub`` with
+only ``--resident`` device slots (fewer than the expert count): the
+matcher routes exactly as before, but a request landing on a
+non-resident expert *parks* (the ``NotResident`` outcome) while the
+hub stages the expert's checkpoint in the background and commits it
+into a slot — the demo walks one such cold-start request through
+park → load → serve and prints the ``HubStats`` ledger.
+
   PYTHONPATH=src python examples/serve_routing.py [--requests 48] \
-      [--banked] [--executor {serial,overlapped}]
+      [--banked] [--executor {serial,overlapped}] \
+      [--hub --resident 2]
 """
 import argparse
 import sys
@@ -35,8 +44,59 @@ from repro.core import ExpertRegistry, build_matcher, train_bank
 from repro.data import load_benchmark
 from repro.launch.mesh import make_expert_mesh
 from repro.models import build_model
-from repro.serve import (ExpertEngine, Request, RoutedServer,
+from repro.serve import (ExpertEngine, ExpertHub, Request, RoutedServer,
                          plan_placement)
+
+
+def hub_cold_start_demo(server, hub, bench, names, t0):
+    """Walk one request to a *non-resident* expert through the full
+    lifecycle: park (NotResident backpressure) → stage (checkpoint →
+    host) → commit (host → device slot) → serve."""
+    sched = server.scheduler
+    cold = [e for e in range(len(names)) if hub.slot_of(e) is None]
+    if not cold:
+        print("    (every expert is resident; raise the expert count "
+              "or lower --resident to see a cold start)")
+        return
+    # pick a cold expert AND a client feature the matcher really routes
+    # to it (coarse routing is ~90% accurate; a misroute would demo a
+    # different expert's path)
+    e, feat = cold[0], None
+    for cand_e in cold:
+        x, _ = bench[names[cand_e]]["client_a"]
+        for cand in x[:32]:
+            if int(server.router.route(cand[None]).coarse[0, 0]) == cand_e:
+                e, feat = cand_e, cand
+                break
+        if feat is not None:
+            break
+    if feat is None:
+        x, _ = bench[names[e]]["client_a"]
+        feat = x[0]
+    name = hub.catalog[e].name
+    print(f"[{time.time()-t0:5.1f}s] cold-start demo: expert {name!r} "
+          f"is {hub.catalog[e].state} (resident: "
+          f"{[hub.catalog[r].name for r in hub.resident_experts]})")
+    server.submit([Request(uid=999_000, features=feat,
+                           prompt=np.arange(12, dtype=np.int32),
+                           max_new_tokens=6)])
+    resp, step, seen = None, 0, []
+    while resp is None:
+        got = server.step()
+        step += 1
+        state = hub.catalog[e].state
+        if not seen or seen[-1][1] != state:
+            seen.append((step, state))
+        for r in got:
+            if r.uid == 999_000:
+                resp = r
+    for step_no, state in seen:
+        print(f"    step {step_no}: {name!r} {state}")
+    stalls = sched.stats["resident_stalls"]
+    print(f"[{time.time()-t0:5.1f}s] served by {resp.expert!r} after "
+          f"{step} steps ({stalls} resident-miss stalls so far); "
+          f"tokens {resp.tokens.tolist()}")
+    print(f"    {hub.stats!r}")
 
 
 def main():
@@ -49,7 +109,17 @@ def main():
                     default="overlapped",
                     help="dispatch executor (overlapped = async; serial "
                          "= blocking per-tick reference)")
+    ap.add_argument("--hub", action="store_true",
+                    help="serve through an ExpertHub with --resident "
+                         "device slots: non-resident experts cold-start "
+                         "on demand (park -> load -> serve)")
+    ap.add_argument("--resident", type=int, default=2,
+                    help="hub device slots (with --hub; fewer than the "
+                         "6 experts so evictions actually happen)")
     args = ap.parse_args()
+    if args.hub and args.banked:
+        ap.error("--hub and --banked are exclusive (the hub owns its "
+                 "own slot bank)")
 
     t0 = time.time()
     bench = load_benchmark(n_per_dataset=args.n_per_dataset, seed=0)
@@ -62,18 +132,32 @@ def main():
     matcher = build_matcher(aes, names, cents)
     print(f"[{time.time()-t0:5.1f}s] matcher bank trained (6 AEs)")
 
-    # three heterogeneous expert backends, cycled across the 6 datasets
-    backends = ["llama3.2-1b", "rwkv6-7b", "mixtral-8x22b"]
-    registry = ExpertRegistry()
-    for i, n in enumerate(names):
-        arch = backends[i % len(backends)]
-        cfg = get_config(arch).reduced(name=f"{arch}-expert-{n}")
+    hub = None
+    if args.hub:
+        # one homogeneous architecture: hub slots are shape-compatible
+        # by construction (equal ExpertSpec), so any expert can land in
+        # any slot without recompiling
+        cfg = get_config("llama3.2-1b").reduced(name="llama-expert")
         model = build_model(cfg)
-        params = model.init(jax.random.PRNGKey(i))
-        registry.add(n, ExpertEngine(model, params, max_len=96),
-                     arch=arch)
-    print(f"[{time.time()-t0:5.1f}s] {len(registry)} expert engines up "
-          f"(families: dense, rwkv, moe)")
+        hub = ExpertHub(model, n_slots=args.resident, max_len=96)
+        for i, n in enumerate(names):
+            hub.add_expert(n, model.init(jax.random.PRNGKey(i)))
+        registry = hub.build_registry()
+        print(f"[{time.time()-t0:5.1f}s] hub up: {len(registry)} "
+              f"experts catalogued, {args.resident} device slots")
+    else:
+        # three heterogeneous expert backends, cycled over the datasets
+        backends = ["llama3.2-1b", "rwkv6-7b", "mixtral-8x22b"]
+        registry = ExpertRegistry()
+        for i, n in enumerate(names):
+            arch = backends[i % len(backends)]
+            cfg = get_config(arch).reduced(name=f"{arch}-expert-{n}")
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(i))
+            registry.add(n, ExpertEngine(model, params, max_len=96),
+                         arch=arch)
+        print(f"[{time.time()-t0:5.1f}s] {len(registry)} expert engines "
+              f"up (families: dense, rwkv, moe)")
 
     plan = None
     if args.banked:
@@ -83,7 +167,7 @@ def main():
         for line in plan.describe(registry.names).splitlines():
             print(f"    {line}")
     server = RoutedServer(matcher, registry, max_batch=8, placement=plan,
-                          executor=args.executor)
+                          executor=args.executor, hub=hub)
     rng = np.random.default_rng(0)
     reqs, truth = [], []
     for uid in range(args.requests):
@@ -117,6 +201,9 @@ def main():
               f"{es.decode_steps} decode ticks, "
               f"{es.jit_cache_entries} compiled executables, "
               f"{es.host_blocks} host-blocking syncs")
+
+    if args.hub:
+        hub_cold_start_demo(server, hub, bench, names, t0)
 
     # second wave with repeated fingerprints rides the routing LRU and
     # the already-compiled bucket executables

@@ -2,12 +2,21 @@
 
 Leaves are flattened by tree path; shards capped at ``shard_bytes`` so large
 models split across files. No orbax dependency (offline container).
+
+On top of the single-pytree primitives sits the **expert store** — the
+cold tier of the serving hub's lifecycle (``serve/hub.py``): one
+directory per expert under a store root, each holding its params
+checkpoint plus a ``meta.json``. ``save_expert`` / ``load_expert`` /
+``list_experts`` are the whole store API; the hub stages experts from
+here into host memory and commits them into device bank slots on
+demand, so the expert catalog can grow far beyond device memory.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict
+import re
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +96,68 @@ def load_pytree(directory: str, like: PyTree = None) -> PyTree:
     ref = _paths(like)
     assert set(ref) == set(flat), "checkpoint/pytree structure mismatch"
     return _unflatten({k: flat[k] for k in ref})
+
+
+# ---------------------------------------------------------------------------
+# Expert store: <root>/<name>/{index.json, shard*.npz, meta.json}
+# ---------------------------------------------------------------------------
+
+
+_NAME_OK = re.compile(r"[A-Za-z0-9][A-Za-z0-9._\-@+]*\Z")
+
+
+def _expert_dir(root: str, name: str) -> str:
+    # expert names come from user-facing catalogs and become directory
+    # names; munging bad names would let two distinct experts collide
+    # onto one directory (silently overwriting each other's weights),
+    # so reject them instead
+    if not _NAME_OK.match(name):
+        raise ValueError(
+            f"expert name {name!r} is not a safe store directory name "
+            "(want [A-Za-z0-9][A-Za-z0-9._-@+]*)")
+    return os.path.join(root, name)
+
+
+def save_expert(root: str, name: str, params: PyTree,
+                meta: Optional[Dict[str, Any]] = None,
+                shard_bytes: int = 512 << 20) -> str:
+    """Write one expert's params (+ json-able ``meta``) under the store
+    root; returns the expert's directory (the hub catalog's cold
+    pointer)."""
+    d = _expert_dir(root, name)
+    save_pytree(params, d, shard_bytes=shard_bytes)
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        json.dump({"name": name, **(meta or {})}, f)
+    return d
+
+
+def load_expert(root: str, name: str, like: PyTree = None) -> PyTree:
+    """Stage one expert's params from the cold store into host memory."""
+    return load_pytree(_expert_dir(root, name), like=like)
+
+
+def load_expert_meta(root: str, name: str) -> Dict[str, Any]:
+    with open(os.path.join(_expert_dir(root, name), "meta.json")) as f:
+        return json.load(f)
+
+
+def list_experts(root: str) -> List[str]:
+    """Expert names present in the store (sorted, for determinism)."""
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for entry in sorted(os.listdir(root)):
+        if os.path.isfile(os.path.join(root, entry, "meta.json")):
+            with open(os.path.join(root, entry, "meta.json")) as f:
+                out.append(json.load(f)["name"])
+    return out
+
+
+def expert_nbytes(root: str, name: str) -> int:
+    """On-disk checkpoint size — the hub's stage-cost signal."""
+    d = _expert_dir(root, name)
+    return sum(os.path.getsize(os.path.join(d, f))
+               for f in os.listdir(d) if f.endswith(".npz"))
 
 
 def _unflatten(flat: Dict[str, np.ndarray]) -> PyTree:

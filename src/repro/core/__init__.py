@@ -11,13 +11,13 @@ from .autoencoder import (bank_encode, bank_scores, decode, encode, forward,
 from .matcher import (ExpertMatcher, MatcherConfig, build_matcher,
                       class_centroids)
 from .mlp_baseline import init_mlp
-from .registry import ExpertEntry, ExpertRegistry
+from .registry import ExpertEntry, ExpertRegistry, ExpertSpec
 from .trainer import train_ae, train_bank, train_mlp
 
 __all__ = [
     "init_ae", "encode", "decode", "forward", "recon_mse", "stack_bank",
     "bank_scores", "bank_encode",
     "ExpertMatcher", "MatcherConfig", "build_matcher", "class_centroids",
-    "init_mlp", "ExpertEntry", "ExpertRegistry",
+    "init_mlp", "ExpertEntry", "ExpertRegistry", "ExpertSpec",
     "train_ae", "train_bank", "train_mlp",
 ]

@@ -9,11 +9,69 @@ sub-experts for fine-grained routing.
 The registry is intentionally dumb: the matcher picks indices, the
 registry resolves them. New experts can be appended without retraining
 anything else — the paper's "modularity" property.
+
+``ExpertSpec`` is the one serving-facing description of an expert:
+architecture config plus engine geometry. The placement planner groups
+experts into banks by spec equality, the expert hub keys its catalog
+(and slot compatibility) on it, and registry entries carry it so every
+consumer reads the same catalog entry type instead of re-deriving
+ad-hoc signatures from live engine objects.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertSpec:
+    """Serving-relevant description of one expert.
+
+    Two experts with equal specs compile identical executables: same
+    architecture (``arch`` is the config with the per-expert ``name``
+    normalised out), same bucket ladders, same KV layout/pool geometry.
+    That equality is exactly what makes them co-residable — in one
+    ``BankedEngine`` (placement planning) or one hub slot bank (dynamic
+    residency) — so spec equality IS the banking/slot-compatibility
+    predicate, defined once here.
+    """
+
+    arch: Any                           # ArchConfig, name stripped
+    max_len: int
+    len_buckets: Tuple[int, ...]
+    batch_buckets: Tuple[int, ...]
+    kv_layout: str = "ring"
+    page: Optional[int] = None          # paged-layout pool geometry
+    pool_pages: Optional[int] = None
+
+    @classmethod
+    def of_engine(cls, engine) -> "ExpertSpec":
+        """The spec of a live ``ExpertEngine`` (or any engine exposing
+        the same geometry attributes)."""
+        kv = getattr(engine, "kv_layout", "ring")
+        page = pool_pages = None
+        if kv == "paged":
+            page = engine.core.page
+            pool_pages = engine.core.pool.n_pages
+        return cls(arch=engine.model.cfg.replace(name=""),
+                   max_len=engine.max_len,
+                   len_buckets=tuple(engine.len_buckets),
+                   batch_buckets=tuple(engine.batch_buckets),
+                   kv_layout=kv, page=page, pool_pages=pool_pages)
+
+    @property
+    def bankable(self) -> bool:
+        """Whether experts of this spec may share a stacked dispatch.
+
+        Banking is only sound for models whose per-row outputs don't
+        depend on batch padding: capacity-dispatch MoE computes its
+        expert capacity from the *total* (padded) token count and
+        padding rows consume capacity slots, so padding one member's
+        micro-batch to a wave-wide batch bucket could change a real
+        row's tokens vs the per-engine path.
+        """
+        return not (self.arch.n_experts and self.arch.moe_impl ==
+                    "dispatch")
 
 
 @dataclasses.dataclass
@@ -22,14 +80,17 @@ class ExpertEntry:
     backend: Any = None                     # serving engine / callable
     fine_backends: Optional[List[Any]] = None  # per-class sub-experts
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    spec: Optional[ExpertSpec] = None       # shared catalog entry type
 
 
 class ExpertRegistry:
     def __init__(self):
         self._entries: List[ExpertEntry] = []
 
-    def add(self, name: str, backend=None, fine_backends=None, **meta) -> int:
-        self._entries.append(ExpertEntry(name, backend, fine_backends, meta))
+    def add(self, name: str, backend=None, fine_backends=None,
+            spec: Optional[ExpertSpec] = None, **meta) -> int:
+        self._entries.append(
+            ExpertEntry(name, backend, fine_backends, meta, spec))
         return len(self._entries) - 1
 
     def __len__(self):

@@ -4,11 +4,19 @@ Trains the AE bank on the 6 synthetic benchmark datasets, registers one
 expert engine per dataset (reduced zoo architectures on CPU), and serves
 batches of mixed-modality requests.
 
+With ``--hub-slots K`` (K > 0) the experts are served through an
+``ExpertHub`` holding only K device slots: each expert is checkpointed
+to ``--store`` (or a temp dir), staged on demand and evicted by
+popularity-weighted LRU — the launcher prints the hub's lifecycle
+ledger after serving.
+
   PYTHONPATH=src python -m repro.launch.serve --requests 32
+  PYTHONPATH=src python -m repro.launch.serve --hub-slots 2
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import jax
@@ -18,7 +26,7 @@ from ..configs import ALL_ARCHS, get_config
 from ..core import ExpertRegistry, build_matcher, train_bank
 from ..data import load_benchmark
 from ..models import build_model
-from ..serve import ExpertEngine, Request, RoutedServer
+from ..serve import ExpertEngine, ExpertHub, Request, RoutedServer
 
 
 def main():
@@ -37,6 +45,14 @@ def main():
                          "pages per shard and shares prompt-prefix "
                          "pages between requests (dense-family experts "
                          "only; others keep the ring layout)")
+    ap.add_argument("--hub-slots", type=int, default=0,
+                    help="serve through an ExpertHub with this many "
+                         "device slots (0 = every expert resident, the "
+                         "per-engine path); experts are checkpointed "
+                         "cold and staged on demand")
+    ap.add_argument("--store", default=None,
+                    help="expert checkpoint store dir for --hub-slots "
+                         "(default: a temp dir)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -48,18 +64,37 @@ def main():
     matcher = build_matcher(aes, names, cents)
     print(f"[{time.time()-t0:.1f}s] matcher ready ({len(names)} experts)")
 
-    registry = ExpertRegistry()
-    for i, n in enumerate(names):
-        arch = ALL_ARCHS[i % len(ALL_ARCHS)]
-        cfg = get_config(arch).reduced(name=f"{arch}@{n}")
-        if cfg.family in ("encdec", "vlm"):  # token-only serving demo
-            cfg = get_config("llama3_2_1b").reduced(name=f"llama@{n}")
+    hub = None
+    if args.hub_slots > 0:
+        # the hub slot bank requires one homogeneous architecture
+        # (equal ExpertSpec = slot compatibility); checkpoint each
+        # expert cold so staging exercises the full lifecycle
+        cfg = get_config("llama3_2_1b").reduced(name="llama-hub")
         model = build_model(cfg)
         kv = args.kv if model.supports_paged_kv else "ring"
-        registry.add(n, ExpertEngine(model, model.init(
-            jax.random.PRNGKey(i)), max_len=64, kv_layout=kv),
-            arch=cfg.name)
-    server = RoutedServer(matcher, registry, executor=args.executor)
+        store = args.store or tempfile.mkdtemp(prefix="expert-store-")
+        hub = ExpertHub(model, n_slots=args.hub_slots, max_len=64,
+                        kv_layout=kv, store=store)
+        for i, n in enumerate(names):
+            hub.add_expert(n, model.init(jax.random.PRNGKey(i)),
+                           cold=True)
+        registry = hub.build_registry()
+        print(f"[{time.time()-t0:.1f}s] hub: {len(registry)} experts "
+              f"checkpointed to {store}, {args.hub_slots} device slots")
+    else:
+        registry = ExpertRegistry()
+        for i, n in enumerate(names):
+            arch = ALL_ARCHS[i % len(ALL_ARCHS)]
+            cfg = get_config(arch).reduced(name=f"{arch}@{n}")
+            if cfg.family in ("encdec", "vlm"):  # token-only demo
+                cfg = get_config("llama3_2_1b").reduced(name=f"llama@{n}")
+            model = build_model(cfg)
+            kv = args.kv if model.supports_paged_kv else "ring"
+            registry.add(n, ExpertEngine(model, model.init(
+                jax.random.PRNGKey(i)), max_len=64, kv_layout=kv),
+                arch=cfg.name)
+    server = RoutedServer(matcher, registry, executor=args.executor,
+                          hub=hub)
 
     rng = np.random.default_rng(0)
     reqs, truth = [], []
@@ -76,10 +111,17 @@ def main():
     acc = np.mean([r.expert == t for r, t in zip(resps, truth)])
     print(f"served {len(resps)} reqs in {dt:.2f}s "
           f"({len(resps)/dt:.1f} req/s); routing accuracy {acc:.1%}")
+    st = server.stats
     blocks = sum(es.host_blocks
-                 for es in server.stats["engines"].values())
+                 for es in {**st["engines"], **st["banks"]}.values())
     print(f"executor={args.executor}: {blocks} host-blocking syncs "
           f"across all engines")
+    if hub is not None:
+        print(f"hub: {hub.stats!r}")
+        print(f"resident now: "
+              f"{[hub.catalog[e].name for e in hub.resident_experts]} "
+              f"({server.scheduler.stats['resident_stalls']} "
+              "resident-miss stalls)")
 
 
 if __name__ == "__main__":

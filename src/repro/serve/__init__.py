@@ -22,6 +22,12 @@ The moving parts, front to back:
     ``PagePool`` of fixed-size pages with per-row page tables,
     refcounted prefix sharing, copy-on-write, and prefill deduplication
     — see ``kvcache``).
+  * ``ExpertHub`` — checkpoint-backed dynamic expert lifecycle: an
+    unbounded catalog (cold checkpoint store → host-staged params →
+    device bank slot), refcounted residency with popularity-weighted
+    LRU eviction fed by router hit counts, asynchronous prefetch, and
+    ``NotResident`` admission backpressure — the expert population is
+    no longer capped by device memory.
   * ``DispatchExecutor`` (``serial`` / ``overlapped``) — whether a
     scheduler step blocks per decode tick or enqueues all shards' work
     and harvests with one batched transfer per wave.
@@ -33,6 +39,8 @@ from .core import (DispatchExecutor, EngineCore, EngineStats,
                    OverlappedExecutor, SerialExecutor, bucket_for,
                    get_executor, make_buckets)
 from .engine import ExpertEngine
+from .hub import (CatalogEntry, ExpertHub, HubMember, HubStats,
+                  NotResident)
 from .kvcache import (PagePool, PagePoolExhausted, PrefixCache,
                       hash_chain)
 from .placement import (BankMember, BankedEngine, PlacementPlan, Shard,
@@ -46,6 +54,7 @@ __all__ = [
     "make_buckets",
     "DispatchExecutor", "SerialExecutor", "OverlappedExecutor",
     "get_executor",
+    "CatalogEntry", "ExpertHub", "HubMember", "HubStats", "NotResident",
     "PagePool", "PagePoolExhausted", "PrefixCache", "hash_chain",
     "BankedEngine", "BankMember", "PlacementPlan", "Shard",
     "plan_placement",

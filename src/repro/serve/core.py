@@ -838,19 +838,24 @@ class EngineCore:
 class DispatchExecutor:
     """How one scheduler step drives its shards.
 
-    ``run_step`` always issues every shard's prefill, then every
+    ``run_step`` first drives the expert hub's lifecycle (a no-op on
+    hubless schedulers), then issues every shard's prefill, then every
     shard's decode tick, then harvests — the ``defer`` flag decides
     whether each dispatch blocks on its own device→host copy (serial,
     the reference) or whether nothing blocks until the single batched
     harvest transfer per wave (overlapped). Because both orders run the
     identical compute graph, they are token-identical by construction;
-    only ``EngineStats.host_blocks`` differs.
+    only ``EngineStats.host_blocks`` differs. Hub slot installs ride
+    the same ordering: with the overlapped executor they are enqueued
+    ahead of the step's decode ticks, so checkpoint staging (a worker
+    thread) and the install scatter overlap in-flight decode.
     """
 
     name = "base"
     defer = False
 
     def run_step(self, sched) -> None:
+        sched._service_hub()
         sched._admit_batches(defer=self.defer)
         sched._tick_engines(defer=self.defer)
         sched._harvest_engines()

@@ -33,6 +33,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.registry import ExpertSpec
 from ..models.api import BaseModel
 from .core import EngineCore, EngineStats, bucket_for, make_buckets
 
@@ -65,6 +66,13 @@ class ExpertEngine:
     @property
     def stats(self) -> EngineStats:
         return self.core.stats
+
+    @property
+    def spec(self) -> ExpertSpec:
+        """The shared catalog entry type describing this engine
+        (``core.registry.ExpertSpec``): what the placement planner
+        groups banks by and the expert hub keys slot compatibility on."""
+        return ExpertSpec.of_engine(self)
 
     # -- admission -------------------------------------------------------
     def pad_shape(self, n_rows: int, prompt_len: int) -> Tuple[int, int]:

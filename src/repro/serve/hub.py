@@ -1,0 +1,605 @@
+"""Expert Hub: checkpoint-backed dynamic expert lifecycle with
+popularity-driven residency.
+
+Every server so far required its whole expert population to be built
+and device-resident before the first request — the catalog was capped
+by device memory at process start. The paper's premise is the opposite:
+a central server hosting *numerous* expert models for clients who
+cannot evaluate them locally, which at production scale means a
+long-tail catalog of hundreds of experts on a fixed device mesh. The
+hub makes residency a managed, demand-driven resource along the path
+
+    cold checkpoint store  →  host-staged params  →  device bank slot
+      (checkpoint/io.py         (numpy pytree,          (one slot of a
+       expert store)             staged by a             BankedEngine's
+                                 worker thread)          stacked params)
+
+Residency state machine (per catalog entry):
+
+    cold ──stage──▶ staging ──▶ staged ──commit──▶ resident
+                                  ▲                    │
+                                  └──────evict─────────┘
+
+  * **Catalog.** Unbounded: one ``CatalogEntry`` per known expert —
+    the shared ``ExpertSpec`` (core/registry.py), host params and/or a
+    cold checkpoint-store pointer, popularity/pins/last-use books.
+    Every hub expert shares one spec: equal specs are exactly what
+    makes experts co-residable in one slot bank (the same predicate
+    ``plan_placement`` banks by).
+  * **Slot bank.** A ``BankedEngine`` with ``n_slots`` experts whose
+    params are stacked on the leading ``expert`` axis (optionally
+    GSPMD-sharded over a mesh). Loading an expert is ONE jitted donated
+    per-slot scatter into the stacked params — executables are keyed on
+    bank shape, not expert identity, so swapping an expert into a slot
+    never recompiles prefill/decode.
+  * **Residency is refcounted.** Rows pin their expert at admission and
+    unpin at response; only pin-free residents are evictable, so a slot
+    is never recycled under live KV state (asserted for the paged
+    layout, whose per-slot prefix cache is invalidated on eviction).
+  * **Eviction is popularity-weighted LRU.** The victim is the
+    evictable resident with the fewest router hits (``Router.expert_hits``
+    — bind via ``bind_popularity``), ties broken least-recently-used:
+    a hot expert is never displaced while a colder candidate exists.
+  * **Prefetch is asynchronous.** Wanted-but-cold experts are staged by
+    a worker thread while resident waves keep decoding — the
+    ``DispatchExecutor`` seam runs ``Scheduler._service_hub`` before
+    admission, so commits are enqueued ahead of the step's decode ticks
+    and staging I/O overlaps device compute. ``service(block=True)``
+    (an idle engine) waits on staging instead of spinning.
+  * **Backpressure.** ``acquire`` on a non-resident expert enqueues the
+    want and raises ``NotResident``; the scheduler parks the rows in
+    their queues (mirroring ``PagePoolExhausted``) until the hub
+    commits the expert.
+
+``HubStats`` carries loads, evictions, stage/commit latencies and
+resident-miss stalls; ``benchmarks/serving_bench.py --hub`` drives a
+Zipf long-tail workload over a catalog far larger than the slot count
+and asserts token-identity to a fully-resident baseline.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from concurrent import futures
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..checkpoint import io as ckpt_io
+from ..core.registry import ExpertRegistry, ExpertSpec
+from .placement import BankedEngine
+
+
+class NotResident(RuntimeError):
+    """Admission outcome: the routed expert has no device slot yet.
+
+    Raising enqueues nothing by itself — ``ExpertHub.acquire`` records
+    the want before raising, so the scheduler's contract mirrors
+    ``PagePoolExhausted``: park the rows where they are and retry once
+    the hub commits the expert (a later ``service`` call).
+    """
+
+    def __init__(self, expert: int, name: str):
+        super().__init__(
+            f"expert {expert} ({name!r}) is not device-resident; "
+            "queued for staging")
+        self.expert = expert
+        self.name = name
+
+
+class HubStats:
+    """Lifecycle counters for one ``ExpertHub``.
+
+    ``loads`` counts slot commits (first load and every re-load),
+    ``evictions`` slot recycles, ``resident_misses`` every admission
+    that found its expert cold (the scheduler's stall signal), and the
+    latency accumulators time the two lifecycle edges: *stage* (cold
+    checkpoint → host numpy, worker thread) and *commit* (host → device
+    slot scatter enqueue).
+    """
+
+    def __init__(self):
+        self.loads = 0
+        self.evictions = 0
+        self.resident_misses = 0
+        self.stage_count = 0
+        self.stage_ms = 0.0
+        self.stage_cache_hits = 0       # wanted expert already staged
+        self.commit_count = 0
+        self.commit_ms = 0.0
+
+    @property
+    def stage_ms_avg(self) -> float:
+        return self.stage_ms / max(self.stage_count, 1)
+
+    @property
+    def commit_ms_avg(self) -> float:
+        return self.commit_ms / max(self.commit_count, 1)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"loads": self.loads, "evictions": self.evictions,
+                "resident_misses": self.resident_misses,
+                "stage_count": self.stage_count,
+                "stage_ms_avg": self.stage_ms_avg,
+                "stage_cache_hits": self.stage_cache_hits,
+                "commit_count": self.commit_count,
+                "commit_ms_avg": self.commit_ms_avg}
+
+    def __repr__(self) -> str:
+        return (f"HubStats(loads={self.loads}, "
+                f"evictions={self.evictions}, "
+                f"resident_misses={self.resident_misses}, "
+                f"stage={self.stage_count}x{self.stage_ms_avg:.1f}ms"
+                f"(+{self.stage_cache_hits} cached), "
+                f"commit={self.commit_count}x{self.commit_ms_avg:.1f}ms)")
+
+
+@dataclasses.dataclass
+class CatalogEntry:
+    """One known expert: where its weights live and who is using it."""
+    name: str
+    params: Any = None              # host-staged numpy pytree (or None)
+    store: Optional[str] = None     # cold-tier store root (checkpoint/io)
+    on_disk: bool = False           # a checkpoint exists in the store
+    state: str = "cold"             # cold | staging | staged | resident
+    slot: int = -1                  # device bank slot while resident
+    pins: int = 0                   # in-flight rows holding residency
+    last_used: int = 0              # hub clock at last admission
+
+
+@dataclasses.dataclass
+class HubMember:
+    """Registry-facing handle: one catalog expert served via the hub's
+    slot bank (the dynamic-residency analogue of ``BankMember``)."""
+    hub: "ExpertHub"
+    expert: int
+
+    def pad_shape(self, n_rows: int, prompt_len: int) -> Tuple[int, int]:
+        return self.hub.bank.pad_shape(n_rows, prompt_len)
+
+    @property
+    def batch_buckets(self) -> Tuple[int, ...]:
+        return self.hub.bank.batch_buckets
+
+    @property
+    def kv_layout(self) -> str:
+        return self.hub.bank.kv_layout
+
+    @property
+    def stats(self):
+        return self.hub.bank.stats
+
+    @property
+    def resident(self) -> bool:
+        return self.hub.slot_of(self.expert) is not None
+
+
+class ExpertHub:
+    """Dynamic expert residency over a fixed slot bank.
+
+    The hub owns one ``BankedEngine`` with ``n_slots`` expert slots and
+    an unbounded catalog; ``acquire``/``pin``/``unpin`` are the
+    scheduler's admission contract and ``service`` is the per-step
+    lifecycle driver (poll staging, commit wanted experts into slots,
+    kick prefetch). All catalog mutation happens on the scheduler
+    thread — the staging worker only reads checkpoints into numpy.
+    """
+
+    def __init__(self, model, *, n_slots: int, max_len: int = 256,
+                 min_len_bucket: int = 8,
+                 len_buckets: Optional[Sequence[int]] = None,
+                 batch_buckets: Optional[Sequence[int]] = None,
+                 mesh: Optional[Mesh] = None, kv_layout: str = "ring",
+                 page_size: int = 8, pool_pages: Optional[int] = None,
+                 store: Optional[str] = None, prefetch: bool = True,
+                 host_cache: Optional[int] = None):
+        if n_slots < 1:
+            raise ValueError(f"ExpertHub needs n_slots >= 1, got {n_slots}")
+        self.model = model
+        self.n_slots = n_slots
+        self.store = store
+        self.prefetch = prefetch
+        # bound on retained host-staged copies of *re-stageable*
+        # (cold-store-backed) non-resident experts; None = keep every
+        # staged copy (fastest reloads, host memory grows toward the
+        # catalog size — fine for laptop runs, set a cap for real
+        # long-tail catalogs)
+        self.host_cache = host_cache
+        # zero template params fill the slots until real experts commit;
+        # every executable is traced against this stacked shape, so
+        # later commits can never change a signature
+        shapes = model.param_shapes()
+        tmpl = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        self.bank = BankedEngine(
+            model, [tmpl] * n_slots, max_len=max_len,
+            min_len_bucket=min_len_bucket, len_buckets=len_buckets,
+            batch_buckets=batch_buckets, mesh=mesh, kv_layout=kv_layout,
+            page_size=page_size, pool_pages=pool_pages)
+        self.spec = ExpertSpec(
+            arch=model.cfg.replace(name=""), max_len=self.bank.max_len,
+            len_buckets=tuple(self.bank.len_buckets),
+            batch_buckets=tuple(self.bank.batch_buckets),
+            kv_layout=self.bank.kv_layout,
+            page=(self.bank.core.page if kv_layout == "paged" else None),
+            pool_pages=(self.bank.core.pool.n_pages
+                        if kv_layout == "paged" else None))
+        if not self.spec.bankable:
+            raise ValueError(
+                f"{model.cfg.family!r} capacity-dispatch MoE experts "
+                "cannot share a slot bank (outputs depend on batch "
+                "padding); serve them per-engine")
+        self._host_like = jax.tree_util.tree_map(
+            lambda s: np.zeros(s.shape, s.dtype), shapes)
+        self.catalog: List[CatalogEntry] = []
+        self._index: Dict[str, int] = {}
+        self._slot_expert: List[Optional[int]] = [None] * n_slots
+        self._wanted: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self._staging: Dict[int, Future] = {}
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._install = None
+        self._tick = 0
+        # router hit counts (rebound by bind_popularity when a Router
+        # fronts the hub; pre-routed schedulers feed it directly)
+        self.popularity: collections.Counter = collections.Counter()
+        self.stats = HubStats()
+
+    # -- catalog ---------------------------------------------------------
+    def add_expert(self, name: str, params: Any = None, *,
+                   cold: bool = False) -> int:
+        """Register one expert. ``params`` (a host pytree) stages it
+        immediately; ``cold=True`` writes the params to the checkpoint
+        store and drops the host copy (the full lifecycle path);
+        ``params=None`` points at an expert already in the store."""
+        if name in self._index:
+            raise ValueError(f"expert {name!r} already in the catalog")
+        entry = CatalogEntry(name=name, store=self.store)
+        if params is not None:
+            params = jax.tree_util.tree_map(np.asarray, params)
+            if cold:
+                if self.store is None:
+                    raise ValueError("cold=True needs a store directory")
+                ckpt_io.save_expert(self.store, name, params)
+                entry.on_disk = True
+            else:
+                entry.params = params
+                entry.state = "staged"
+        elif self.store is None:
+            raise ValueError(
+                f"expert {name!r}: no params and no checkpoint store")
+        else:
+            entry.on_disk = True          # pre-existing store checkpoint
+        e = len(self.catalog)
+        self.catalog.append(entry)
+        self._index[name] = e
+        return e
+
+    def add_from_store(self, names: Optional[Sequence[str]] = None
+                       ) -> List[int]:
+        """Catalog every expert found in the checkpoint store."""
+        if self.store is None:
+            raise ValueError("hub has no checkpoint store")
+        names = names if names is not None else \
+            ckpt_io.list_experts(self.store)
+        return [self.add_expert(n) for n in names]
+
+    def build_registry(self) -> ExpertRegistry:
+        """An ``ExpertRegistry`` over the catalog: every backend is a
+        ``HubMember`` and every entry carries the hub's shared spec."""
+        reg = ExpertRegistry()
+        for e, c in enumerate(self.catalog):
+            reg.add(c.name, HubMember(self, e), spec=self.spec)
+        return reg
+
+    def bind_popularity(self, counter: collections.Counter) -> None:
+        """Share the router's per-expert hit Counter as the eviction
+        policy's popularity signal (same object, zero plumbing)."""
+        counter.update(self.popularity)
+        self.popularity = counter
+
+    def __len__(self) -> int:
+        return len(self.catalog)
+
+    # -- residency -------------------------------------------------------
+    def slot_of(self, e: int) -> Optional[int]:
+        c = self.catalog[e]
+        return c.slot if c.state == "resident" else None
+
+    def expert_in(self, slot: int) -> Optional[int]:
+        return self._slot_expert[slot]
+
+    @property
+    def resident_experts(self) -> List[int]:
+        return [e for e in self._slot_expert if e is not None]
+
+    @property
+    def has_wanted(self) -> bool:
+        return bool(self._wanted)
+
+    def acquire(self, e: int) -> int:
+        """Slot serving expert ``e`` (touching its LRU clock), or queue
+        the want and raise ``NotResident`` — the scheduler's
+        park-and-retry backpressure signal."""
+        c = self.catalog[e]
+        if c.state == "resident":
+            c.last_used = self._tick
+            return c.slot
+        self.want(e)
+        self.stats.resident_misses += 1
+        raise NotResident(e, c.name)
+
+    def want(self, e: int) -> None:
+        c = self.catalog[e]
+        if c.state == "resident" or e in self._wanted:
+            return
+        if c.state == "staged":
+            # satisfiable from the host cache: no cold-tier stage needed
+            self.stats.stage_cache_hits += 1
+        self._wanted[e] = None
+
+    def pin(self, e: int, n: int = 1) -> None:
+        """Admitted rows hold their expert resident until harvested."""
+        c = self.catalog[e]
+        if c.state != "resident":
+            raise ValueError(f"pin of non-resident expert {c.name!r}")
+        c.pins += n
+
+    def unpin(self, e: int, n: int = 1) -> None:
+        c = self.catalog[e]
+        if c.pins < n:
+            raise ValueError(f"unpin below zero for expert {c.name!r}")
+        c.pins -= n
+
+    # -- lifecycle driver ------------------------------------------------
+    def service(self, *, block: bool = False) -> int:
+        """One lifecycle round: poll staging results, commit wanted
+        experts into slots, kick prefetch for the rest. Returns commits
+        made. ``block=True`` (nothing on device to overlap with) waits
+        for the oldest in-flight staging instead of busy-spinning.
+        """
+        self._tick += 1
+        self._poll_staging()
+        committed = self._commit_ready()
+        self._kick_staging()
+        if block and not committed and self._wanted and self._staging:
+            futures.wait([next(iter(self._staging.values()))])
+            # _poll_staging owns failure handling: it resets a failed
+            # entry to cold (retryable) before re-raising
+            self._poll_staging()
+            committed = self._commit_ready()
+        self._trim_host()
+        return committed
+
+    def _trim_host(self) -> None:
+        """Enforce ``host_cache``: drop the host params of the least
+        popular (then least recent) staged, unwanted, store-backed
+        entries beyond the cap — they return to ``cold`` and re-stage
+        from the checkpoint tier on their next want. Entries without a
+        store are never dropped (their params are the only copy)."""
+        if self.host_cache is None:
+            return
+        held = [e for e, c in enumerate(self.catalog)
+                if c.state == "staged" and c.on_disk
+                and e not in self._wanted]
+        drop = len(held) - self.host_cache
+        if drop <= 0:
+            return
+        held.sort(key=lambda e: (self.popularity[e],
+                                 self.catalog[e].last_used))
+        for e in held[:drop]:
+            c = self.catalog[e]
+            c.params = None
+            c.state = "cold"
+
+    def _poll_staging(self) -> None:
+        for e in [e for e, f in self._staging.items() if f.done()]:
+            fut = self._staging.pop(e)
+            c = self.catalog[e]
+            try:
+                params, dt = fut.result()
+            except Exception:
+                # surface the failure loudly, but leave the entry
+                # retryable (back to cold) and drop the want so other
+                # experts' traffic keeps flowing — a sticky 'staging'
+                # state would park this expert's rows forever
+                c.state = "cold"
+                self._wanted.pop(e, None)
+                raise
+            c.params = params
+            c.state = "staged"
+            self.stats.stage_count += 1
+            self.stats.stage_ms += dt * 1e3
+
+    def _commit_ready(self) -> int:
+        n = 0
+        for e in list(self._wanted):
+            c = self.catalog[e]
+            if c.state == "resident":     # raced: wanted twice
+                self._wanted.pop(e, None)
+                continue
+            if c.params is None:
+                continue                  # still cold/staging
+            slot = self._grab_slot()
+            if slot is None:
+                break                     # every slot pinned: decode on
+            self._commit(e, slot)
+            self._wanted.pop(e, None)
+            n += 1
+        return n
+
+    def _kick_staging(self) -> None:
+        for e in self._wanted:
+            c = self.catalog[e]
+            if c.state != "cold" or e in self._staging:
+                continue
+            c.state = "staging"
+            if self.prefetch:
+                if self._pool is None:
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=1,
+                        thread_name_prefix="hub-stage")
+                self._staging[e] = self._pool.submit(self._stage, e)
+            else:                         # synchronous staging
+                f: Future = Future()
+                try:
+                    f.set_result(self._stage(e))
+                except Exception:
+                    c.state = "cold"      # retryable, not wedged
+                    self._wanted.pop(e, None)
+                    raise
+                self._staging[e] = f
+
+    def _stage(self, e: int):
+        """Worker-thread half: cold checkpoint → host numpy pytree."""
+        c = self.catalog[e]
+        t0 = time.perf_counter()
+        params = ckpt_io.load_expert(c.store, c.name,
+                                     like=self._host_like)
+        return params, time.perf_counter() - t0
+
+    def _slot_in_wave(self, slot: int) -> bool:
+        """Whether any active wave still carries rows for ``slot``.
+
+        Pins alone are not enough to gate eviction: a row's pin drops
+        the moment it is harvested, but its KV pages (paged layout) are
+        only released when its *whole wave* retires — so an expert can
+        be pin-free while a mixed-``max_new`` wave still holds its
+        pages. The wave's row map is the source of truth.
+        """
+        return any(w.uids.get(slot) for w in self.bank.core._active)
+
+    def _grab_slot(self) -> Optional[int]:
+        for s, owner in enumerate(self._slot_expert):
+            if owner is None:
+                return s
+        victims = [e for e in self._slot_expert
+                   if e is not None and self.catalog[e].pins == 0
+                   and not self._slot_in_wave(self.catalog[e].slot)]
+        if not victims:
+            return None
+        # popularity-weighted LRU: fewest router hits first, oldest
+        # last-use breaking ties — a hot expert outlives cold ones
+        victim = min(victims, key=lambda e: (self.popularity[e],
+                                             self.catalog[e].last_used))
+        return self._evict(victim)
+
+    def _evict(self, e: int) -> int:
+        c = self.catalog[e]
+        slot = c.slot
+        core = self.bank.core
+        if core.kv_layout == "paged":
+            # the slot's cached prefixes describe the OLD expert's KV;
+            # drop them, then prove no live pages survive the eviction
+            core.prefix_cache.invalidate(slot)
+            used = core.pool.used_count(slot)
+            if used:
+                raise RuntimeError(
+                    f"evicting {c.name!r} from slot {slot} with {used} "
+                    "live page(s) — pin accounting broke")
+        c.state = "staged"                # host copy retained: reloads
+        c.slot = -1                       # skip the cold tier entirely
+        #                                   (bounded by host_cache)
+        self._slot_expert[slot] = None
+        self.stats.evictions += 1
+        return slot
+
+    def _commit(self, e: int, slot: int) -> None:
+        """Host-staged params → device bank slot: one jitted donated
+        per-slot scatter into the stacked params. Executables are keyed
+        on the bank's (E, ...) shape only, so this never invalidates
+        the prefill/decode jit caches — the no-recompile property the
+        bench asserts."""
+        c = self.catalog[e]
+        core = self.bank.core
+        t0 = time.perf_counter()
+        if self._install is None:
+            s = core._bank_sharding()
+            def fn(bank, new, at):
+                return jax.tree_util.tree_map(
+                    lambda a, b: a.at[at].set(b), bank, new)
+            if s is not None:
+                self._install = jax.jit(fn, donate_argnums=(0,),
+                                        out_shardings=s)
+            else:
+                self._install = jax.jit(fn, donate_argnums=(0,))
+        core.params = self._install(core.params, c.params,
+                                    jnp.asarray(slot, jnp.int32))
+        self.stats.commit_ms += (time.perf_counter() - t0) * 1e3
+        self.stats.commit_count += 1
+        self.stats.loads += 1
+        c.state = "resident"
+        c.slot = slot
+        c.last_used = self._tick
+        self._slot_expert[slot] = e
+
+    # -- warmup ----------------------------------------------------------
+    def warmup(self, max_batch: Optional[int] = None,
+               commit: bool = True) -> None:
+        """Compile the bank's whole executable ladder up front.
+
+        The steady-state contract the bench asserts — *zero new
+        executables after warmup, no matter which experts rotate
+        through the slots* — only holds if every (batch bucket, len
+        bucket) shape traffic can produce exists before measurement
+        starts. Admits one throwaway wave per ladder point (tuple uids:
+        the scheduler's orphan path discards any stragglers) and, with
+        ``commit=True``, faults the first ``n_slots`` catalog experts
+        into their slots so the install scatter is compiled too.
+        Warmup compute runs on whatever params the slots hold — shapes
+        are expert-agnostic, which is the very property that makes slot
+        swapping recompile-free.
+        """
+        from .core import bucket_for
+        bank = self.bank
+        cap = bucket_for(min(max_batch or bank.batch_buckets[-1],
+                             bank.batch_buckets[-1]),
+                         bank.batch_buckets)
+        rng = np.random.default_rng(0)
+        for Sb in bank.len_buckets:
+            for Bb in bank.batch_buckets:
+                if Bb > cap:
+                    break
+                uids = [("__warmup__", Sb, Bb, i) for i in range(Bb)]
+                prompts = [rng.integers(0, 100, size=Sb)
+                           for _ in range(Bb)]
+                bank.admit({0: (uids, prompts, [2] * Bb)})
+                while bank.n_active:
+                    bank.tick()
+                bank.poll()
+        if commit:
+            for e in range(min(self.n_slots, len(self.catalog))):
+                self.want(e)
+            while self.has_wanted:
+                if not self.service(block=True):
+                    break
+
+    # -- bookkeeping -----------------------------------------------------
+    def check(self) -> None:
+        """Invariant sweep (tests): slot maps and catalog agree, pins
+        only on residents, wanted entries never resident."""
+        for s, e in enumerate(self._slot_expert):
+            if e is not None:
+                c = self.catalog[e]
+                assert c.state == "resident" and c.slot == s, (s, c)
+        for e, c in enumerate(self.catalog):
+            if c.state == "resident":
+                assert self._slot_expert[c.slot] == e, (e, c)
+            else:
+                assert c.slot == -1, (e, c)
+                assert c.pins == 0, f"pins on non-resident {c.name!r}"
+        assert all(self.catalog[e].state != "resident"
+                   for e in self._wanted)
+
+    @property
+    def install_compiles(self) -> int:
+        """Real executables behind the slot-install wrapper (0 or 1 —
+        counted into the bench's steady-state recompile assert)."""
+        from .core import _wrapper_compiles
+        return 0 if self._install is None else \
+            _wrapper_compiles(self._install)

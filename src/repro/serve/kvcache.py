@@ -261,5 +261,12 @@ class PrefixCache:
             if self.pool.free_count(e) >= need:
                 return
 
+    def invalidate(self, e: int) -> None:
+        """Drop every entry of expert ``e`` — its slot is being recycled
+        for a different expert (hub eviction), so its cached prefixes
+        describe KV content that is about to be overwritten."""
+        for key in [k for k in self._lru if k[1] == e]:
+            self._drop(key)
+
     def clear(self) -> None:
         self._trim(0)

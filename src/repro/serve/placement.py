@@ -34,6 +34,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 from jax.sharding import Mesh
 
+from ..core.registry import ExpertSpec
 from .core import EngineCore, EngineStats
 from .engine import ExpertEngine
 
@@ -77,7 +78,14 @@ class BankedEngine:
         self.len_buckets = self.core.len_buckets
         self.batch_buckets = self.core.batch_buckets
         self.kv_layout = self.core.kv_layout
-        self.params = self.core.params      # stacked (E, ...) pytree
+
+    @property
+    def params(self):
+        """The stacked (E, ...) params pytree — read through the core,
+        which the expert hub may swap under us (a slot install donates
+        the previous stacked buffer, so a cached reference would be a
+        dead array)."""
+        return self.core.params
 
     @property
     def stats(self) -> EngineStats:
@@ -183,28 +191,12 @@ class PlacementPlan:
         return "\n".join(lines)
 
 
-def _bankable(engine: ExpertEngine) -> bool:
-    """Banking is only sound for models whose per-row outputs don't
-    depend on batch padding: capacity-dispatch MoE computes its expert
-    capacity from the *total* (padded) token count and padding rows
-    consume capacity slots, so padding one member's micro-batch to the
-    wave-wide batch bucket could change a real row's tokens vs the
-    per-engine path. Those experts keep singleton shards."""
-    cfg = engine.model.cfg
-    return not (cfg.n_experts and cfg.moe_impl == "dispatch")
-
-
-def _bank_signature(engine: ExpertEngine):
-    """Experts are bankable iff they share arch config (minus name),
-    bucket ladders and KV layout — identical shapes, identical
-    executables (a paged member additionally contributes its page pool
-    geometry, since the bank stacks pools on the expert axis)."""
-    cfg = engine.model.cfg.replace(name="")
-    kv = (engine.kv_layout,)
-    if engine.kv_layout == "paged":
-        kv += (engine.core.page, engine.core.pool.n_pages)
-    return (cfg, engine.max_len, engine.len_buckets, engine.batch_buckets,
-            kv)
+# Bank grouping is keyed on ``ExpertSpec`` (core/registry.py) — the one
+# catalog entry type the hub, router metadata and this planner share.
+# Equal specs mean identical shapes, identical executables (a paged
+# member's spec additionally carries its page-pool geometry, since the
+# bank stacks pools on the expert axis); ``spec.bankable`` excludes
+# capacity-dispatch MoE, whose outputs depend on batch padding.
 
 
 def _bank_submesh(n_experts: int, mesh: Optional[Mesh], offset: int = 0):
@@ -240,7 +232,7 @@ def plan_placement(registry, *, mesh: Optional[Mesh] = None,
     than ``min_bank`` and non-``ExpertEngine`` backends keep singleton
     shards. Returns the ``PlacementPlan`` the scheduler/router consume.
     """
-    by_sig: Dict[Any, List[int]] = {}
+    by_sig: Dict[ExpertSpec, List[int]] = {}
     for e in range(len(registry)):
         backend = registry[e].backend
         if isinstance(backend, BankMember):
@@ -248,8 +240,14 @@ def plan_placement(registry, *, mesh: Optional[Mesh] = None,
                 f"expert {registry[e].name!r} is already bank-placed; "
                 "plan_placement rebinds backends in place and cannot "
                 "re-plan a planned registry — rebuild it from engines")
-        if isinstance(backend, ExpertEngine) and _bankable(backend):
-            by_sig.setdefault(_bank_signature(backend), []).append(e)
+        if isinstance(backend, ExpertEngine):
+            # derive from the live engine (authoritative) and publish on
+            # the entry, so hub/router consumers read the same spec the
+            # plan grouped by
+            spec = backend.spec
+            registry[e].spec = spec
+            if spec.bankable:
+                by_sig.setdefault(spec, []).append(e)
 
     shards: List[Shard] = []
     shard_of: Dict[int, int] = {}

@@ -101,6 +101,10 @@ class Router:
             collections.OrderedDict()
         self.cache_size = cache_size
         self.stats = {"routed": 0, "cache_hits": 0, "score_calls": 0}
+        # per-expert top-1 hit counts — the popularity signal the expert
+        # hub's eviction policy reads (ExpertHub.bind_popularity shares
+        # this very Counter, so routing decisions feed residency)
+        self.expert_hits: collections.Counter = collections.Counter()
         self._coarse = jax.jit(matcher.assign_coarse_topk)
         self._fine_ref = jax.jit(matcher.assign_fine)
         # encode a group under ONE expert's AE (params sliced by index)
@@ -185,6 +189,8 @@ class Router:
 
         self.stats["routed"] += B
         self.stats["cache_hits"] += hits
+        for e in coarse[:, 0]:
+            self.expert_hits[int(e)] += 1
         shard = None
         if self.shard_of is not None:
             shard = np.asarray([self.shard_of.get(int(e), -1)

@@ -42,6 +42,7 @@ from ..core.matcher import ExpertMatcher
 from ..core.registry import ExpertRegistry
 from .core import DispatchExecutor, get_executor
 from .engine import ExpertEngine
+from .hub import ExpertHub, HubMember, NotResident
 from .kvcache import PagePoolExhausted
 from .placement import BankMember, PlacementPlan, Shard
 from .router import PrefixLRU, Router
@@ -53,6 +54,9 @@ class Request:
     features: np.ndarray            # (784,) matcher fingerprint
     prompt: np.ndarray              # (S,) int32 tokens
     max_new_tokens: int = 8
+    expert: Optional[int] = None    # pre-routed: skip the matcher (the
+    #                                 paper's repeat clients know their
+    #                                 expert; also the hub bench path)
 
 
 @dataclasses.dataclass
@@ -81,21 +85,52 @@ class _Pending:
     shard: int = -1
     seq: int = 0                    # submit order, for age promotion
     prefix_key: bytes = b""         # prompt-prefix cohort key (PrefixLRU)
+    expert: int = -1                # routed expert (hub demux + unpin)
 
 
 class Scheduler:
     """Routes, queues, batches and ticks a fleet of expert shards."""
 
-    def __init__(self, router: Router, registry: ExpertRegistry,
+    def __init__(self, router: Optional[Router],
+                 registry: ExpertRegistry,
                  config: Optional[SchedulerConfig] = None,
                  placement: Optional[PlacementPlan] = None,
-                 executor: "str | DispatchExecutor" = "overlapped"):
+                 executor: "str | DispatchExecutor" = "overlapped",
+                 hub: Optional[ExpertHub] = None):
         self.router = router
         self.registry = registry
         self.config = config or SchedulerConfig()
         self.placement = placement
+        self.hub = hub
         self.executor = get_executor(executor)
-        if placement is not None:
+        if hub is not None:
+            if placement is not None:
+                raise ValueError("hub and placement are exclusive: the "
+                                 "hub owns its own slot bank")
+            if len(hub) != len(registry):
+                raise ValueError(
+                    f"hub catalog ({len(hub)} experts) does not match "
+                    f"the registry ({len(registry)}); build the "
+                    "registry via hub.build_registry()")
+            for e in range(len(registry)):
+                be = registry[e].backend
+                if not (isinstance(be, HubMember) and be.hub is hub
+                        and be.expert == e):
+                    # same contract as the placement branch's
+                    # BankMember check: a same-length foreign registry
+                    # would silently serve through the hub's slots
+                    # under the wrong expert names / bucket ladders
+                    raise ValueError(
+                        f"registry entry {e} ({registry[e].name!r}) is "
+                        "not this hub's HubMember; build the registry "
+                        "via hub.build_registry()")
+            # one dispatch-group shard over the whole catalog: every
+            # wave is served by the hub's slot bank, groups keyed by
+            # device slot rather than registry index
+            self.shards = [Shard(sid=0,
+                                 experts=tuple(range(len(registry))),
+                                 bank=hub.bank)]
+        elif placement is not None:
             # the plan must describe THIS registry: plan_placement
             # rebound each banked expert's backend to a BankMember of
             # its shard's bank — a stale plan for another registry
@@ -140,7 +175,8 @@ class Scheduler:
             collections.defaultdict(int)   # (shard, bucket) skip rounds
         self.stats = {"submitted": 0, "rejected": 0, "batches": 0,
                       "ticks": 0, "responses": 0, "promotions": 0,
-                      "orphaned": 0, "kv_stalls": 0}
+                      "orphaned": 0, "kv_stalls": 0,
+                      "resident_stalls": 0}
         self._done: List[Response] = []
         self._meta: Dict[int, _Pending] = {}   # uid -> routing info
         # prompt-prefix cohort detection: keyed at the page granularity
@@ -160,7 +196,13 @@ class Scheduler:
         prefix of ``requests``, so callers can resubmit the tail later.
         Requests beyond the queue cap are rejected unrouted
         (backpressure). uids must be unique among in-flight requests —
-        they key response demultiplexing."""
+        they key response demultiplexing.
+
+        Requests carrying ``expert=`` are pre-routed: they skip the
+        matcher (and are the only kind a router-less hub scheduler
+        accepts) but still feed the popularity counter the hub's
+        eviction policy reads.
+        """
         if not requests:
             return 0
         batch_seen = set()
@@ -173,23 +215,46 @@ class Scheduler:
         requests = requests[:room]
         if not requests:
             return 0
-        routed = self.router.route(
-            np.stack([r.features for r in requests]))
+        miss = [i for i, r in enumerate(requests) if r.expert is None]
+        if miss and self.router is None:
+            raise ValueError(
+                "scheduler has no router: every request must be "
+                "pre-routed (Request.expert set)")
+        routed = self.router.route(np.stack(
+            [requests[i].features for i in miss])) if miss else None
+        routed_at = {i: j for j, i in enumerate(miss)}
+        pop = (self.router.expert_hits if self.router is not None
+               else self.hub.popularity if self.hub is not None else None)
+        top_k = routed.coarse.shape[1] if routed is not None else 1
         admitted = 0
         for i, r in enumerate(requests):
-            e = int(routed.coarse[i, 0])
+            if r.expert is not None:
+                e, fine = int(r.expert), 0
+                if not 0 <= e < len(self.registry):
+                    raise ValueError(f"pre-routed expert {e} out of "
+                                     f"range [0, {len(self.registry)})")
+                scores = np.zeros(top_k, np.float32)
+                sid = self._shard_of.get(e, -1)
+                if pop is not None:
+                    pop[e] += 1       # router.route counts its own rows
+            else:
+                j = routed_at[i]
+                e = int(routed.coarse[j, 0])
+                fine = int(routed.fine[j])
+                scores = routed.coarse_score[j]
+                # routed.shard is the placement-aware router's demux
+                # contract (identical to _shard_of when both come from
+                # one plan); the local map covers routers wired without
+                # a placement
+                sid = (int(routed.shard[j]) if routed.shard is not None
+                       else self._shard_of.get(e, -1))
             engine = self.registry[e].backend
             sb = (engine.pad_shape(1, len(r.prompt))[1]
                   if hasattr(engine, "pad_shape") else len(r.prompt))
-            # routed.shard is the placement-aware router's demux contract
-            # (identical to _shard_of when both come from one plan); the
-            # local map covers routers wired without a placement
-            sid = (int(routed.shard[i]) if routed.shard is not None
-                   else self._shard_of.get(e, -1))
             self._seq += 1
-            p = _Pending(r, int(routed.fine[i]), routed.coarse_score[i],
-                         shard=sid, seq=self._seq,
-                         prefix_key=self.prefix_lru.observe(r.prompt))
+            p = _Pending(r, fine, scores, shard=sid, seq=self._seq,
+                         prefix_key=self.prefix_lru.observe(r.prompt),
+                         expert=e)
             self.queues[e][sb].append(p)
             self._meta[r.uid] = p
             self.n_queued += 1
@@ -313,6 +378,21 @@ class Scheduler:
             q.appendleft(p)
         self.n_queued += len(take)
 
+    def _service_hub(self) -> None:
+        """Drive the expert hub's lifecycle one round (no-op without a
+        hub): poll staged checkpoints, commit wanted experts into bank
+        slots, kick prefetch. Runs at the *head* of every executor
+        step, so with the overlapped executor the slot-install
+        dispatches are enqueued before this step's decode ticks and
+        checkpoint staging overlaps device compute. When nothing is
+        resident (no decode to overlap with) the hub blocks on staging
+        instead of busy-spinning the drain loop."""
+        if self.hub is None:
+            return
+        idle = not any(eng is not None and eng.n_active
+                       for eng in map(self._shard_engine, self.shards))
+        self.hub.service(block=idle)
+
     def _admit_batches(self, *, defer: bool = False) -> None:
         """Issue one dispatch group per shard. With ``defer`` the
         prefills are only enqueued (tokens stay on device; the executor
@@ -321,10 +401,61 @@ class Scheduler:
             sb = self._pick_bucket(shard)
             if sb is None:
                 continue
-            if shard.banked:
+            if self.hub is not None:
+                self._admit_hub(shard, sb, defer=defer)
+            elif shard.banked:
                 self._admit_banked(shard, sb, defer=defer)
             else:
                 self._admit_single(shard.experts[0], sb, defer=defer)
+
+    def _admit_hub(self, shard: Shard, sb: int, *,
+                   defer: bool = False) -> None:
+        """One dispatch group over the hub's slot bank: resident
+        experts' micro-batches ride the wave keyed by *device slot*;
+        a non-resident expert's rows park in their queue (the
+        ``NotResident`` outcome — the residency analogue of
+        ``PagePoolExhausted`` backpressure) while the hub stages and
+        commits it in the background."""
+        hub, bank = self.hub, shard.bank
+        paged = self._paged_shard(shard)
+        cap = min(self.config.max_batch, bank.batch_buckets[-1])
+        groups, popped = {}, {}
+        stalled = 0
+        for e in shard.experts:
+            if not self.queues[e].get(sb):
+                continue
+            try:
+                slot = hub.acquire(e)
+            except NotResident:
+                stalled += 1        # rows stay parked in their queue
+                continue
+            take = self._pop(e, sb, cap, prefix_group=paged)
+            if not take:
+                continue
+            hub.pin(e, len(take))
+            popped[e] = take
+            groups[slot] = ([p.req.uid for p in take],
+                            [p.req.prompt for p in take],
+                            [p.req.max_new_tokens for p in take])
+        if stalled:
+            self.stats["resident_stalls"] += stalled
+        if not groups:
+            return
+        try:
+            bank.admit(groups, defer=defer)
+        except PagePoolExhausted:
+            # unwind pops and pins on BOTH exits: the fatal re-raise
+            # (pool too small for even one wave) must not strand rows
+            # out of their queues or leave residency pins that would
+            # make the experts permanently unevictable
+            for e, take in popped.items():
+                self._requeue(e, sb, take)
+                hub.unpin(e, len(take))
+            if not bank.n_active:
+                raise            # pool too small for even one wave
+            self.stats["kv_stalls"] += 1
+            return
+        self.stats["batches"] += 1
 
     def _admit_banked(self, shard: Shard, sb: int, *,
                       defer: bool = False) -> None:
@@ -430,10 +561,9 @@ class Scheduler:
             for item in eng.poll():
                 if shard.banked:
                     local, uid, toks = item
-                    name = self.registry[shard.experts[local]].name
                 else:
                     uid, toks = item
-                    name = self.registry[shard.experts[0]].name
+                    local = 0
                 if uid not in self._meta and isinstance(uid, tuple):
                     # generate()'s private tuple namespace: a call that
                     # raised mid-flight leaves its group resident, and
@@ -443,6 +573,17 @@ class Scheduler:
                     self.stats["orphaned"] += 1
                     continue
                 p = self._meta.pop(uid)
+                if self.hub is not None:
+                    # hub waves key groups by device slot, whose owner
+                    # changes over time — demux through the pending
+                    # row's routed expert and release its residency pin
+                    # (the slot is evictable once its last pin drops)
+                    name = self.registry[p.expert].name
+                    self.hub.unpin(p.expert)
+                elif shard.banked:
+                    name = self.registry[shard.experts[local]].name
+                else:
+                    name = self.registry[shard.experts[0]].name
                 self._done.append(self._response(
                     p, name, toks[:p.req.max_new_tokens]))
 
@@ -464,25 +605,47 @@ class RoutedServer:
     and ``executor`` (``"overlapped"`` — the default async dispatch —
     or ``"serial"``, the blocking reference) to pick how each step
     drives its shards; both executors are token-identical.
+
+    Pass ``hub`` (an ``ExpertHub`` whose ``build_registry()`` produced
+    ``registry``) for dynamic expert residency: the catalog may be far
+    larger than the hub's device slots, non-resident experts park their
+    rows while checkpoints stage in the background, and the router's
+    per-expert hit counts drive the hub's eviction policy. With a hub,
+    ``matcher=None`` is allowed when every request is pre-routed
+    (``Request.expert``) — the long-tail bench path.
     """
 
-    def __init__(self, matcher: ExpertMatcher, registry: ExpertRegistry,
+    def __init__(self, matcher: Optional[ExpertMatcher],
+                 registry: ExpertRegistry,
                  *, max_batch: int = 16, route_cache_size: int = 4096,
                  use_fine_kernel: bool = True,
                  placement: Optional[PlacementPlan] = None,
-                 executor: "str | DispatchExecutor" = "overlapped"):
-        assert len(registry) == matcher.n_experts, "registry/bank mismatch"
+                 executor: "str | DispatchExecutor" = "overlapped",
+                 hub: Optional[ExpertHub] = None):
         self.matcher = matcher
         self.registry = registry
         self.placement = placement
-        self.router = Router(
-            matcher, cache_size=route_cache_size,
-            use_fine_kernel=use_fine_kernel,
-            shard_of=placement.shard_of if placement else None)
+        self.hub = hub
+        if matcher is None:
+            if hub is None:
+                raise ValueError("matcher=None requires a hub serving "
+                                 "pre-routed requests")
+            self.router = None
+        else:
+            assert len(registry) == matcher.n_experts, \
+                "registry/bank mismatch"
+            self.router = Router(
+                matcher, cache_size=route_cache_size,
+                use_fine_kernel=use_fine_kernel,
+                shard_of=placement.shard_of if placement else None)
+        if hub is not None and self.router is not None:
+            # routing decisions feed residency: the eviction policy
+            # reads the very Counter route() increments
+            hub.bind_popularity(self.router.expert_hits)
         self.scheduler = Scheduler(self.router, registry,
                                    SchedulerConfig(max_batch=max_batch),
                                    placement=placement,
-                                   executor=executor)
+                                   executor=executor, hub=hub)
 
     def submit(self, requests: Sequence[Request]) -> int:
         return self.scheduler.submit(requests)
@@ -509,11 +672,19 @@ class RoutedServer:
                    if isinstance(self.registry[e].backend, ExpertEngine)}
         banks = {}
         for shard in self.scheduler.shards:
-            if shard.banked:
+            if not shard.banked:
+                continue
+            if self.hub is not None:
+                label = "hub(%d experts/%d slots)" % (
+                    len(self.registry), self.hub.n_slots)
+            else:
                 label = "bank%d(%s)" % (shard.sid, ",".join(
                     self.registry[e].name for e in shard.experts))
-                banks[label] = shard.bank.stats
-        return {"scheduler": self.scheduler.stats,
-                "router": self.router.stats, "engines": engines,
-                "banks": banks,
-                "executor": self.scheduler.executor.name}
+            banks[label] = shard.bank.stats
+        out = {"scheduler": self.scheduler.stats,
+               "router": self.router.stats if self.router else {},
+               "engines": engines, "banks": banks,
+               "executor": self.scheduler.executor.name}
+        if self.hub is not None:
+            out["hub"] = self.hub.stats
+        return out

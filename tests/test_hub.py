@@ -1,0 +1,425 @@
+"""Expert hub tests: lifecycle state machine, checkpoint-store
+round-trip, NotResident backpressure, refcounted residency,
+popularity-weighted eviction, paged slot recycling, and token identity
+against both a fully-resident hub and the per-engine serving path."""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (list_experts, load_expert, save_expert)
+from repro.configs import get_config
+from repro.core import ExpertRegistry, ExpertSpec
+from repro.models import build_model
+from repro.serve import (ExpertEngine, ExpertHub, HubMember, NotResident,
+                         Request, RoutedServer, Scheduler,
+                         plan_placement)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("smollm-135m").reduced(name="hub-t")
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def params4(model):
+    return [model.init(jax.random.PRNGKey(s)) for s in range(4)]
+
+
+def _mk_hub(model, params, n_slots, **kw):
+    hub = ExpertHub(model, n_slots=n_slots, max_len=32, **kw)
+    for i, p in enumerate(params):
+        hub.add_expert(f"ex{i}", p)
+    return hub
+
+
+def _reqs(rng, n, n_experts, max_len=28):
+    return [Request(uid=u, features=np.zeros(784, np.float32),
+                    prompt=rng.integers(0, 50,
+                                        size=int(rng.integers(3, max_len))),
+                    max_new_tokens=int(rng.integers(1, 5)),
+                    expert=int(rng.integers(n_experts)))
+            for u in range(n)]
+
+
+# -- checkpoint store --------------------------------------------------------
+
+
+def test_expert_store_roundtrip(tmp_path, model, params4):
+    root = str(tmp_path / "store")
+    save_expert(root, "alpha", params4[0], meta={"arch": "smollm"})
+    save_expert(root, "beta", params4[1])
+    assert list_experts(root) == ["alpha", "beta"]
+    back = load_expert(root, "alpha")
+    for a, b in zip(jax.tree_util.tree_leaves(params4[0]),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- shared catalog entry type ----------------------------------------------
+
+
+def test_expert_spec_is_the_shared_catalog_type(model, params4):
+    """Placement grouping, hub slot compatibility and registry entries
+    all read one ExpertSpec: equal geometry -> equal (hashable) specs;
+    the planner publishes the spec it grouped by on the entry."""
+    e0 = ExpertEngine(model, params4[0], max_len=64)
+    e1 = ExpertEngine(model, params4[1], max_len=64)
+    e2 = ExpertEngine(model, params4[2], max_len=32)   # different ladder
+    s0, s1, s2 = map(ExpertSpec.of_engine, (e0, e1, e2))
+    assert s0 == s1 and hash(s0) == hash(s1)
+    assert s0 != s2
+    assert s0.bankable
+    reg = ExpertRegistry()
+    reg.add("a", e0)
+    reg.add("b", e1)
+    plan = plan_placement(reg)
+    assert reg[0].spec == reg[1].spec == s0
+    assert len([s for s in plan.shards if s.banked]) == 1
+    hub = ExpertHub(model, n_slots=2, max_len=64)
+    assert hub.spec == s0          # same geometry -> same spec
+    hub.add_expert("c", params4[0])
+    assert hub.build_registry()[0].spec == s0
+
+
+def test_dispatch_moe_spec_not_bankable():
+    cfg = get_config("mixtral-8x22b").reduced(name="moe-spec")
+    assert cfg.n_experts and cfg.moe_impl == "dispatch"
+    moe = build_model(cfg)
+    spec = ExpertSpec(arch=cfg.replace(name=""), max_len=64,
+                      len_buckets=(8, 64), batch_buckets=(1, 16))
+    assert not spec.bankable
+    with pytest.raises(ValueError, match="slot bank"):
+        ExpertHub(moe, n_slots=2, max_len=64)
+
+
+# -- lifecycle state machine -------------------------------------------------
+
+
+def test_hub_lifecycle_cold_to_resident_to_evicted(tmp_path, model,
+                                                   params4):
+    store = str(tmp_path / "store")
+    hub = ExpertHub(model, n_slots=1, max_len=32, store=store)
+    e0 = hub.add_expert("cold0", params4[0], cold=True)
+    e1 = hub.add_expert("cold1", params4[1], cold=True)
+    assert [hub.catalog[e].state for e in (e0, e1)] == ["cold", "cold"]
+    assert list_experts(store) == ["cold0", "cold1"]
+    # acquire records the want and raises: the NotResident outcome
+    with pytest.raises(NotResident):
+        hub.acquire(e0)
+    assert hub.has_wanted and hub.stats.resident_misses == 1
+    while hub.has_wanted:
+        hub.service(block=True)
+    assert hub.catalog[e0].state == "resident"
+    assert hub.acquire(e0) == 0 and hub.slot_of(e0) == 0
+    assert hub.stats.loads == 1 and hub.stats.stage_count == 1
+    # faulting in the second expert evicts the first (single slot)
+    with pytest.raises(NotResident):
+        hub.acquire(e1)
+    while hub.has_wanted:
+        hub.service(block=True)
+    assert hub.catalog[e1].state == "resident"
+    assert hub.catalog[e0].state == "staged"   # host copy retained
+    assert hub.stats.evictions == 1
+    # re-acquiring e0 needs no cold-tier stage (host cache hit)
+    with pytest.raises(NotResident):
+        hub.acquire(e0)
+    while hub.has_wanted:
+        hub.service(block=True)
+    assert hub.stats.stage_count == 2          # e0+e1 staged once each
+    assert hub.stats.stage_cache_hits == 1
+    hub.check()
+
+
+def test_pinned_expert_is_not_evictable(model, params4):
+    hub = _mk_hub(model, params4[:2], 1)
+    hub.want(0)
+    hub.service(block=True)
+    hub.pin(0, 2)
+    hub.want(1)
+    assert hub.service(block=True) == 0        # slot pinned: no commit
+    assert hub.catalog[1].state != "resident"
+    hub.unpin(0)
+    assert hub.service() == 0                  # still one pin left
+    hub.unpin(0)
+    assert hub.service() == 1                  # now evictable
+    assert hub.catalog[1].state == "resident"
+    assert hub.catalog[0].state == "staged"
+    with pytest.raises(ValueError, match="unpin below zero"):
+        hub.unpin(0)
+    with pytest.raises(ValueError, match="non-resident"):
+        hub.pin(0)
+    hub.check()
+
+
+def test_active_wave_blocks_eviction_even_when_pin_free(model, params4):
+    """A row's pin drops at harvest, but its wave (and pages, when
+    paged) lives until every member row retires — the hub must not
+    recycle a slot an active wave still references."""
+    hub = _mk_hub(model, params4[:2], 1, kv_layout="paged")
+    hub.want(0)
+    hub.service(block=True)
+    rng = np.random.default_rng(0)
+    # two rows, one finishes at prefill: its pin would drop first
+    hub.bank.admit({0: ([("t", 1), ("t", 2)],
+                        [rng.integers(0, 50, 9), rng.integers(0, 50, 9)],
+                        [1, 4])}, defer=True)
+    hub.want(1)
+    assert hub.service() == 0, "evicted a slot with an active wave"
+    assert hub.catalog[0].state == "resident"
+    while hub.bank.n_active:
+        hub.bank.tick()
+    hub.bank.poll()
+    assert hub.service() == 1                  # wave retired: evictable
+    assert hub.catalog[1].state == "resident"
+    hub.bank.core.pool.check()
+    hub.check()
+
+
+# -- serving integration -----------------------------------------------------
+
+
+def test_hub_token_identical_to_resident_and_per_engine(model, params4):
+    """The acceptance property: a 2-slot hub over 4 experts serves
+    token-identically to (a) a fully-resident 4-slot hub and (b) the
+    plain per-engine path, with evictions and stalls actually
+    happening."""
+    rng = np.random.default_rng(7)
+    reqs = _reqs(rng, 20, 4)
+
+    hub_small = _mk_hub(model, params4, 2)
+    srv_small = RoutedServer(None, hub_small.build_registry(),
+                             max_batch=4, hub=hub_small)
+    hub_full = _mk_hub(model, params4, 4)
+    srv_full = RoutedServer(None, hub_full.build_registry(),
+                            max_batch=4, hub=hub_full)
+    reg = ExpertRegistry()
+    for i, p in enumerate(params4):
+        reg.add(f"ex{i}", ExpertEngine(model, p, max_len=32))
+    sched = Scheduler(None, reg)       # router-less per-engine path
+
+    got_small = srv_small.serve(reqs)
+    got_full = srv_full.serve(reqs)
+    sched.submit(reqs)
+    got_eng = {r.uid: r for r in sched.drain()}
+    for a, b in zip(got_small, got_full):
+        assert a.uid == b.uid and a.expert == b.expert
+        np.testing.assert_array_equal(a.tokens, b.tokens,
+                                      err_msg=str(a.uid))
+        c = got_eng[a.uid]
+        assert c.expert == a.expert
+        np.testing.assert_array_equal(a.tokens, c.tokens,
+                                      err_msg=str(a.uid))
+    assert hub_small.stats.evictions > 0
+    assert hub_full.stats.evictions == 0
+    assert srv_small.scheduler.stats["resident_stalls"] > 0
+    # pins all released, maps consistent
+    assert all(c.pins == 0 for c in hub_small.catalog)
+    hub_small.check()
+    st = srv_small.stats
+    assert "hub" in st and st["hub"].loads >= 2
+
+
+def test_cold_start_parks_then_serves(tmp_path, model, params4):
+    """A request routed to a cold expert must park (NotResident), stage
+    in the background, and complete with the same tokens a warm engine
+    produces."""
+    store = str(tmp_path / "store")
+    hub = ExpertHub(model, n_slots=1, max_len=32, store=store)
+    for i, p in enumerate(params4[:2]):
+        hub.add_expert(f"ex{i}", p, cold=True)
+    srv = RoutedServer(None, hub.build_registry(), max_batch=4, hub=hub)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, 50, size=10)
+    [r] = srv.serve([Request(uid=0, features=np.zeros(784, np.float32),
+                             prompt=prompt, max_new_tokens=4, expert=1)])
+    assert r.expert == "ex1" and r.tokens.shape == (4,)
+    assert srv.scheduler.stats["resident_stalls"] >= 1
+    assert hub.stats.stage_count >= 1
+    ref = ExpertEngine(model, params4[1], max_len=32)
+    np.testing.assert_array_equal(r.tokens,
+                                  ref.generate(prompt[None, :], 4)[0])
+
+
+def test_popularity_keeps_hot_expert_resident(model, params4):
+    """Eviction is popularity-weighted: the expert with the most hits
+    is never displaced while colder candidates exist."""
+    hub = _mk_hub(model, params4, 2)
+    srv = RoutedServer(None, hub.build_registry(), max_batch=4, hub=hub)
+    rng = np.random.default_rng(11)
+    uid = 0
+    for rnd in range(6):
+        batch = [Request(uid=uid + k, features=np.zeros(784, np.float32),
+                         prompt=rng.integers(0, 50, size=8),
+                         max_new_tokens=2,
+                         expert=0 if k < 3 else 1 + (rnd + k) % 3)
+                 for k in range(4)]
+        uid += 4
+        srv.serve(batch)
+        assert 0 in hub.resident_experts, \
+            f"hot expert evicted in round {rnd}"
+    assert hub.stats.evictions > 0
+    hub.check()
+
+
+def test_paged_slot_recycle_invalidates_prefix_cache(model, params4):
+    """Recycling a slot for a new expert must drop the old expert's
+    cached prefixes (they describe KV the new expert never computed)
+    and leave zero live pages; re-serving the first expert afterwards
+    is still token-identical to a fresh engine."""
+    hub = _mk_hub(model, params4[:2], 1, kv_layout="paged")
+    srv = RoutedServer(None, hub.build_registry(), max_batch=4, hub=hub)
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, 50, size=16)
+    mk = lambda uid, e: Request(uid=uid,
+                                features=np.zeros(784, np.float32),
+                                prompt=shared, max_new_tokens=3, expert=e)
+    srv.serve([mk(0, 0), mk(1, 0)])            # populates prefix cache
+    cache = hub.bank.core.prefix_cache
+    n_stale, drops0 = len(cache), cache.stats["evictions"]
+    assert n_stale > 0
+    # ex1 gets the slot AND sends the very prompt ex0 cached: without
+    # invalidation it would adopt ex0's KV pages and decode garbage
+    [r2] = srv.serve([mk(2, 1)])
+    assert hub.stats.evictions == 1
+    assert cache.stats["evictions"] >= drops0 + n_stale, \
+        "stale prefixes survived the slot recycle"
+    ref1 = ExpertEngine(model, params4[1], max_len=32, kv_layout="paged")
+    np.testing.assert_array_equal(
+        r2.tokens, ref1.generate(shared[None, :], 3)[0])
+    [r3] = srv.serve([mk(3, 0)])               # ex0 returns to the slot
+    ref0 = ExpertEngine(model, params4[0], max_len=32, kv_layout="paged")
+    np.testing.assert_array_equal(
+        r3.tokens, ref0.generate(shared[None, :], 3)[0])
+    hub.bank.core.pool.check()
+    hub.check()
+
+
+def test_hub_warmup_prevents_steady_state_compiles(model, params4):
+    hub = _mk_hub(model, params4, 2)
+    srv = RoutedServer(None, hub.build_registry(), max_batch=4, hub=hub)
+    hub.warmup(max_batch=4)
+    jit0 = hub.bank.stats.jit_cache_entries + hub.install_compiles
+    assert jit0 > 0
+    rng = np.random.default_rng(13)
+    srv.serve(_reqs(rng, 16, 4))
+    assert hub.bank.stats.jit_cache_entries + hub.install_compiles == jit0
+    assert srv.scheduler.stats["orphaned"] == 0, \
+        "warmup leaked rows into the scheduler's poll stream"
+
+
+def test_hub_pool_too_small_unwinds_pins_and_rows(model, params4):
+    """The fatal PagePoolExhausted (pool can't host even one wave) must
+    re-raise with the popped rows back in their queues and zero pins —
+    a leaked pin would make the expert permanently unevictable."""
+    hub = _mk_hub(model, params4[:2], 1, kv_layout="paged",
+                  pool_pages=2)
+    hub.want(0)
+    hub.service(block=True)
+    srv = RoutedServer(None, hub.build_registry(), max_batch=4, hub=hub)
+    srv.submit([Request(uid=0, features=np.zeros(784, np.float32),
+                        prompt=np.arange(30, dtype=np.int32),
+                        max_new_tokens=3, expert=0)])
+    with pytest.raises(Exception, match="pages"):
+        srv.scheduler.drain()
+    assert all(c.pins == 0 for c in hub.catalog), "leaked pins"
+    assert srv.scheduler.n_queued == 1          # row requeued, not lost
+    hub.check()
+
+
+def test_staging_failure_is_loud_but_retryable(tmp_path, model, params4):
+    """A broken checkpoint must raise out of service() — but leave the
+    entry retryable (back to cold, want dropped) instead of wedged in
+    'staging' forever with its rows parked."""
+    import shutil
+    store = str(tmp_path / "store")
+    hub = ExpertHub(model, n_slots=1, max_len=32, store=store)
+    e = hub.add_expert("frail", params4[0], cold=True)
+    shutil.rmtree(store)                      # corrupt the cold tier
+    with pytest.raises(NotResident):
+        hub.acquire(e)
+    with pytest.raises(Exception):
+        while hub.has_wanted:
+            hub.service(block=True)
+    assert hub.catalog[e].state == "cold"     # not wedged in 'staging'
+    assert not hub.has_wanted
+    # restore the checkpoint: the same expert stages fine on retry
+    from repro.checkpoint import save_expert
+    save_expert(store, "frail", params4[0])
+    with pytest.raises(NotResident):
+        hub.acquire(e)
+    while hub.has_wanted:
+        hub.service(block=True)
+    assert hub.catalog[e].state == "resident"
+    hub.check()
+
+
+def test_host_cache_bounds_staged_copies(tmp_path, model, params4):
+    """With host_cache set, evicted experts' host copies are trimmed
+    back to the cold tier (least popular first) instead of growing
+    toward the whole catalog."""
+    store = str(tmp_path / "store")
+    hub = ExpertHub(model, n_slots=1, max_len=32, store=store,
+                    host_cache=1)
+    for i, p in enumerate(params4):
+        hub.add_expert(f"ex{i}", p, cold=True)
+    srv = RoutedServer(None, hub.build_registry(), max_batch=4, hub=hub)
+    rng = np.random.default_rng(17)
+    for uid, e in enumerate([0, 1, 2, 3]):    # rotate all four through
+        srv.serve([Request(uid=uid, features=np.zeros(784, np.float32),
+                           prompt=rng.integers(0, 50, size=8),
+                           max_new_tokens=2, expert=e)])
+    held = [c for c in hub.catalog
+            if c.state == "staged" and c.params is not None]
+    assert len(held) <= 1, [c.name for c in held]
+    # trimmed entries went back to cold and can still be re-served
+    [r] = srv.serve([Request(uid=99, features=np.zeros(784, np.float32),
+                             prompt=rng.integers(0, 50, size=8),
+                             max_new_tokens=2, expert=0)])
+    assert r.expert == "ex0"
+    hub.check()
+
+
+def test_store_rejects_unsafe_expert_names(tmp_path, params4):
+    from repro.checkpoint import save_expert
+    root = str(tmp_path / "store")
+    for bad in ("a/b", "..", ".hidden", "", "a b"):
+        with pytest.raises(ValueError, match="safe store"):
+            save_expert(root, bad, params4[0])
+    save_expert(root, "ok-name_1.0@v2+x", params4[0])  # all allowed
+
+
+# -- wiring guards -----------------------------------------------------------
+
+
+def test_hub_wiring_guards(model, params4):
+    hub = _mk_hub(model, params4[:2], 1)
+    reg = hub.build_registry()
+    with pytest.raises(ValueError, match="matcher=None requires a hub"):
+        RoutedServer(None, ExpertRegistry())
+    with pytest.raises(ValueError, match="does not match"):
+        other = ExpertRegistry()
+        other.add("only-one", None)
+        Scheduler(None, other, hub=hub)
+    with pytest.raises(ValueError, match="HubMember"):
+        # same length, foreign backends: must be rejected, not served
+        # through the hub's slots under the wrong names
+        foreign = ExpertRegistry()
+        for i in range(len(hub)):
+            foreign.add(f"f{i}", None)
+        Scheduler(None, foreign, hub=hub)
+    with pytest.raises(ValueError, match="pre-routed"):
+        srv = RoutedServer(None, reg, hub=hub)
+        srv.submit([Request(uid=0, features=np.zeros(784, np.float32),
+                            prompt=np.arange(4), max_new_tokens=1)])
+    with pytest.raises(ValueError, match="out of range"):
+        srv = RoutedServer(None, hub.build_registry(), hub=hub)
+        srv.submit([Request(uid=1, features=np.zeros(784, np.float32),
+                            prompt=np.arange(4), max_new_tokens=1,
+                            expert=7)])
+    with pytest.raises(ValueError, match="already in the catalog"):
+        hub.add_expert("ex0", params4[0])
+    with pytest.raises(ValueError, match="no params and no checkpoint"):
+        ExpertHub(model, n_slots=1, max_len=32).add_expert("ghost")
+    with pytest.raises(ValueError, match="n_slots"):
+        ExpertHub(model, n_slots=0, max_len=32)

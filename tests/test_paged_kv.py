@@ -103,6 +103,41 @@ def test_prefix_cache_holds_refs_and_eviction_releases():
     assert pool.free_count(0) == 8
 
 
+def test_prefix_cache_lru_eviction_under_churn():
+    """Churn far past capacity: every LRU eviction must release its
+    pool pin (the pool never runs dry from cache pressure alone), the
+    live pin count must equal the page entries actually in the cache,
+    and a full-cache cycle must return every refcount to baseline."""
+    pool = PagePool(1, 32, 8)
+    cache = PrefixCache(pool, capacity=8)
+    baseline_free = pool.free_count(0)
+    for k in range(40):                      # 40 distinct 2-page chains
+        toks = np.full(16, k, np.int32)
+        chain = hash_chain(toks, 8)
+        pages = pool.alloc(0, 2)
+        cache.insert(0, 16, chain, pages, first_token=k)
+        pool.release(0, pages)               # the computing wave retires
+        pool.check()
+        # pinned pages == page entries currently indexed, exactly
+        n_pg = sum(1 for key in cache._lru if key[0] == "pg")
+        assert pool.used_count(0) == n_pg
+        assert len(cache) <= 8
+    assert cache.stats["evictions"] > 0
+    # an entry evicted while a live row still holds the page must not
+    # free it under the row
+    toks = np.full(16, 99, np.int32)
+    chain = hash_chain(toks, 8)
+    pages = pool.alloc(0, 2)
+    cache.insert(0, 16, chain, pages, first_token=1)
+    cache.clear()                            # cache pin released...
+    pool.check()
+    assert all(pool.refs[0, p] == 1 for p in pages)  # ...row pin holds
+    pool.release(0, pages)
+    pool.check()
+    assert pool.free_count(0) == baseline_free, \
+        "refcounts did not return to baseline after a full-cache cycle"
+
+
 def test_engine_rejects_unpageable_config():
     cfg = get_config("smollm-135m").reduced(name="odd-bucket")
     model = build_model(cfg)
