@@ -219,8 +219,21 @@ def assert_bounded_compiles(server) -> None:
     ``_cache_size`` sums): a wrapper that silently recompiled for a
     shape/dtype the bucket key didn't capture now trips this assert
     instead of hiding behind a one-count-per-wrapper scheme.
+
+    On a jax build without the private counter API
+    (``COMPILE_COUNTER_EXACT`` False) the counters degrade to one per
+    wrapper — a *lower* bound on real executables, so the ladder check
+    still holds but can no longer catch silent recompiles. That
+    downgrade is announced rather than silent.
     """
     from repro.serve import ExpertEngine
+    from repro.serve.core import COMPILE_COUNTER_EXACT
+    if not COMPILE_COUNTER_EXACT:
+        print("# WARNING: jit._cache_size() unavailable on this jax "
+              "build; compile counters fall back to one per wrapper "
+              "(>= semantics: a lower bound on real executables). The "
+              "ladder bound below still holds, but silent per-wrapper "
+              "recompiles cannot be detected.", flush=True)
     cores = [s.bank for s in server.scheduler.shards if s.banked]
     cores += [b for b in (server.registry[e].backend
                           for e in range(len(server.registry)))
@@ -284,6 +297,7 @@ def run_scenario(scenario: str, server, bench, names,
     stream (the hub bench feeds both servers the identical stream);
     ``collect`` (a dict) captures uid -> (expert, tokens) for token-
     identity comparison across servers."""
+    import jax
     from repro.serve import Request
     rng = np.random.default_rng(seed)
     t_arr = arrivals_for("bursty" if scenario == "bursty" else "uniform",
@@ -323,6 +337,14 @@ def run_scenario(scenario: str, server, bench, names,
             continue
         t0 = time.perf_counter()
         resps = sched.step()
+        # charge device completion of every harvested response to this
+        # step: without the sync the clock stops at enqueue time and
+        # the reported latency percentiles under-count device work
+        # still in flight (rule L004). In-flight waves of *unfinished*
+        # requests stay unsynced — their device time is charged to the
+        # step that eventually harvests them, preserving the overlap
+        # the async executor exists to provide.
+        jax.block_until_ready([r.tokens for r in resps])
         now += time.perf_counter() - t0
         for r in resps:  # completed during this step
             done_at[r.uid] = now
@@ -391,8 +413,12 @@ def run_hub_bench(args) -> None:
           f"kv={args.kv}, executor={args.executor}, "
           f"{hub.bank.mesh is not None and 'sharded' or 'unsharded'})",
           flush=True)
+    import jax
     t0 = time.time()
     hub.warmup(args.max_batch)
+    # warmup enqueues the whole ladder; sync before stopping the clock
+    # so the reported figure is compile+execute, not enqueue (L004)
+    jax.block_until_ready(hub.bank.core.params)
     jit_warm = hub.bank.stats.jit_cache_entries + hub.install_compiles
     print(f"# ladder warmup in {time.time()-t0:.1f}s "
           f"({jit_warm} executables)", flush=True)
@@ -430,6 +456,12 @@ def run_hub_bench(args) -> None:
           f"after the measured run", flush=True)
     # the ISSUE's acceptance criteria, asserted in-process so CI only
     # has to check the exit code
+    from repro.serve.core import COMPILE_COUNTER_EXACT
+    if not COMPILE_COUNTER_EXACT:
+        print("# WARNING: inexact compile counters (no _cache_size): "
+              "the steady-state check degrades to wrapper-count "
+              "equality and cannot see per-wrapper recompiles.",
+              flush=True)
     assert st.evictions > 0, "no evictions: catalog fits the slots?"
     assert jit_end == jit_warm, (
         f"steady-state recompiles: {jit_warm} executables post-warmup "

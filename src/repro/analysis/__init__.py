@@ -1,0 +1,138 @@
+"""Static contract checkers for the serving stack.
+
+Three cooperating passes, each runnable standalone
+(``python -m repro.analysis <pass>``) and as tier-1 pytest tests:
+
+  * ``lint``  — AST-based repo-specific linter (no jax import): host
+    syncs inside jit-traced code, tracer branches, private
+    ``_cache_size`` use, unsynced device timing, unpaired resource
+    lifecycles. Rules L001..L005.
+  * ``hlo``   — lowers the serving dispatches (prefill/decode ladder,
+    banked vmapped step, hub slot install) on a forced 8-device CPU
+    mesh and asserts contracts on the compiled HLO: donation took,
+    no host callbacks or dynamic reshapes in the decode tick, bank
+    shardings match the placement spec, executable count equals the
+    declared bucket bound. Rules H001..H004.
+  * ``pallas`` — validates every kernel's BlockSpec geometry (block
+    divisibility, index-map bounds over the grid, TPU memory-space
+    and VMEM-budget legality) without a TPU. Rules P001..P004.
+
+Intentional exceptions live in ``analysis/baseline.toml`` — one
+``[[baseline]]`` stanza per suppressed finding, each with a written
+justification. An unbaselined error fails ``--fail-on-violation``
+(and the CI ``analysis`` job); the failure message prints the exact
+stanza to paste if the finding is intentional.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baseline.toml")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding. ``func`` (enclosing def/kernel qualname) rather
+    than the line number is the baseline key, so baselines survive
+    unrelated edits to the file."""
+    rule: str                    # "L001" .. "P004"
+    path: str                    # repo-relative file
+    line: int
+    func: str                    # enclosing qualname or "<module>"
+    msg: str
+    severity: str = "error"      # "error" | "warning"
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.func)
+
+    def format(self) -> str:
+        sev = "" if self.severity == "error" else " (warning)"
+        return (f"{self.rule}{sev} {self.path}:{self.line} "
+                f"[{self.func}] {self.msg}")
+
+    def stanza(self, reason: str = "<why this is intentional>") -> str:
+        return ("[[baseline]]\n"
+                f'rule = "{self.rule}"\n'
+                f'file = "{self.path}"\n'
+                f'func = "{self.func}"\n'
+                f'reason = "{reason}"')
+
+
+# ---------------------------------------------------------------------------
+# baseline.toml — parsed with a tiny TOML-subset reader (the pinned
+# runtime is Python 3.10: no tomllib, and adding a dependency for four
+# string keys is not worth it). Supported grammar: comments, blank
+# lines, ``[[baseline]]`` array-of-tables headers, and
+# ``key = "string"`` pairs.
+# ---------------------------------------------------------------------------
+
+_KV = re.compile(r'^([A-Za-z_][\w-]*)\s*=\s*"((?:[^"\\]|\\.)*)"\s*(?:#.*)?$')
+
+
+def load_baseline(path: Optional[str] = None) -> List[Dict[str, str]]:
+    path = path or BASELINE_PATH
+    if not os.path.exists(path):
+        return []
+    entries: List[Dict[str, str]] = []
+    cur: Optional[Dict[str, str]] = None
+    with open(path, encoding="utf-8") as fh:
+        for n, raw in enumerate(fh, 1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            if line == "[[baseline]]":
+                cur = {}
+                entries.append(cur)
+                continue
+            m = _KV.match(line)
+            if m and cur is not None:
+                cur[m.group(1)] = m.group(2).replace('\\"', '"')
+                continue
+            raise ValueError(
+                f"{path}:{n}: unsupported baseline syntax {line!r} "
+                "(expected [[baseline]] or key = \"value\")")
+    for e in entries:
+        missing = {"rule", "file", "func", "reason"} - set(e)
+        if missing:
+            raise ValueError(
+                f"{path}: baseline entry {e} missing {sorted(missing)} "
+                "(every suppression needs a written justification)")
+    return entries
+
+
+def apply_baseline(violations: Sequence[Violation],
+                   entries: Iterable[Dict[str, str]]
+                   ) -> Tuple[List[Violation], List[Violation]]:
+    """Split findings into (active, suppressed)."""
+    keys = {(e["rule"], e["file"], e["func"]) for e in entries}
+    active = [v for v in violations if v.key() not in keys]
+    suppressed = [v for v in violations if v.key() in keys]
+    return active, suppressed
+
+
+def format_report(violations: Sequence[Violation],
+                  suppressed: Sequence[Violation] = (),
+                  *, show_stanzas: bool = True) -> str:
+    lines: List[str] = []
+    errors = [v for v in violations if v.severity == "error"]
+    warns = [v for v in violations if v.severity != "error"]
+    for v in errors + warns:
+        lines.append(v.format())
+    if suppressed:
+        lines.append(f"({len(suppressed)} finding(s) suppressed by "
+                     "baseline.toml)")
+    if errors and show_stanzas:
+        lines.append("")
+        lines.append("To suppress an intentional finding, add to "
+                     "src/repro/analysis/baseline.toml:")
+        for v in errors:
+            lines.append("")
+            lines.append(v.stanza())
+    if not violations:
+        lines.append("clean")
+    return "\n".join(lines)

@@ -1,0 +1,309 @@
+"""HLO contract gate (rules H001-H004): lower every serving dispatch
+on a forced 8-device CPU mesh and assert the compiled modules keep the
+stack's load-bearing promises.
+
+The serving invariants — in-place KV updates, a host-callback-free
+decode tick, GSPMD-sharded bank params, a bounded executable ladder —
+are all *silent* to Python: XLA drops an unusable donation with only a
+warning, a stray ``jax.debug`` or shape-dependent reshape lowers
+happily, and a sharding regression just makes everything slower. This
+pass reads the compiled HLO instead of trusting the call sites:
+
+  H001  buffer donation took: every donated argument (the prefill/
+        decode KV pool planes, the COW copy pool, the hub install's
+        slot stack) appears in the module's ``input_output_alias`` map
+        — no alias entry means XLA is double-buffering the engine's
+        largest array every dispatch.
+  H002  the decode tick is device-pure: no ``custom-call`` host
+        callbacks (``xla_python_cpu_callback`` et al.), no infeed/
+        outfeed, no ``dynamic-reshape``/``dynamic-pad`` (shape-dynamic
+        ops that force a host round-trip or defeat bucketing).
+  H003  sharding annotations on the bank params match the placement
+        spec: every param leaf of a mesh-built engine's dispatch is
+        ``PartitionSpec('expert', ...)`` on the leading axis.
+  H004  executable count equals the declared bucket bound after a full
+        warmup: ``len(len_buckets) * len(batch_buckets)`` prefills,
+        ``len(batch_buckets)`` decode steps, one hub install — the
+        zero-steady-state-recompile contract the benches assert, here
+        checked exactly and in seconds rather than minutes.
+
+Requires >= 8 devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+set before jax initialises — the ``python -m repro.analysis`` CLI
+re-execs itself into such an environment automatically; pytest callers
+use a subprocess, see ``tests/test_analysis.py``).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from . import Violation
+
+_CALLBACK_MARKERS = ("callback", "infeed", "outfeed", "send", "recv")
+_DYNAMIC_OPS = ("dynamic-reshape", "dynamic-pad")
+
+_HUB_PATH = "src/repro/serve/hub.py"
+_CORE_PATH = "src/repro/serve/core.py"
+
+
+def _require_devices(n: int = 8) -> None:
+    import jax
+    have = len(jax.devices())
+    if have < n:
+        raise EnvironmentError(
+            f"hlo contract pass needs {n} devices, found {have}; run "
+            "via `python -m repro.analysis hlo` (which re-execs with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8) or "
+            "set the flag before jax initialises")
+
+
+def _flat_arg_offsets(args: Sequence[Any]) -> List[Tuple[int, int]]:
+    """(first flat param index, leaf count) per positional argument."""
+    import jax
+    out: List[Tuple[int, int]] = []
+    off = 0
+    for a in args:
+        n = len(jax.tree_util.tree_leaves(a))
+        out.append((off, n))
+        off += n
+    return out
+
+
+def _avals(tree: Any) -> Any:
+    import jax
+
+    def aval(x):
+        return jax.ShapeDtypeStruct(tuple(x.shape), x.dtype,
+                                    sharding=getattr(x, "sharding", None))
+    return jax.tree_util.tree_map(aval, tree)
+
+
+def check_donation(jitted, args: Sequence[Any], donate: Sequence[int],
+                   label: str, path: str = _CORE_PATH,
+                   hlo: Optional[str] = None) -> List[Violation]:
+    """H001: every leaf of each donated argument must be aliased to an
+    output in the compiled module. ``args`` may be concrete or avals."""
+    from ..launch.hlo_analysis import input_output_aliases
+    out: List[Violation] = []
+    if hlo is None:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            hlo = jitted.lower(*args).compile().as_text()
+    aliased = set(input_output_aliases(hlo).values())
+    offsets = _flat_arg_offsets(args)
+    for argnum in donate:
+        off, n = offsets[argnum]
+        missing = [i for i in range(off, off + n) if i not in aliased]
+        if missing:
+            out.append(Violation(
+                "H001", path, 0, label,
+                f"donated argument {argnum} ({n} leaves) not aliased "
+                f"in the compiled module (flat params {missing} have "
+                "no input_output_alias entry) — XLA dropped the "
+                "donation and silently double-buffers the array"))
+    return out
+
+
+def check_clean_decode(hlo: str, label: str,
+                       path: str = _CORE_PATH) -> List[Violation]:
+    """H002: no host callbacks / infeed / dynamic-shape ops."""
+    from ..launch.hlo_analysis import custom_call_targets, op_kinds
+    out: List[Violation] = []
+    for tgt in custom_call_targets(hlo):
+        low = tgt.lower()
+        if any(m in low for m in _CALLBACK_MARKERS):
+            out.append(Violation(
+                "H002", path, 0, label,
+                f"decode-tick module calls back into the host "
+                f"(custom-call target {tgt!r}) — one host block per "
+                "decode step"))
+    kinds = op_kinds(hlo)
+    for op, n in kinds.items():
+        if op in _DYNAMIC_OPS or op.startswith(("infeed", "outfeed")):
+            out.append(Violation(
+                "H002", path, 0, label,
+                f"decode-tick module contains {n}x {op} — shape-"
+                "dynamic/host-coupled ops defeat the bucketed "
+                "executable contract"))
+    return out
+
+
+def check_bank_sharding(compiled, label: str,
+                        bank_args: Sequence[int] = (0,),
+                        path: str = _CORE_PATH) -> List[Violation]:
+    """H003: every leaf of each bank-stacked argument (stacked params,
+    KV pool planes) must be sharded ``PartitionSpec('expert', ...)``.
+    ``compiled.input_shardings[0]`` preserves per-argument pytree
+    structure, so each listed argument's subtree is flattened here."""
+    import jax
+    out: List[Violation] = []
+    args_shardings = compiled.input_shardings[0]
+    for argnum in bank_args:
+        leaves = jax.tree_util.tree_leaves(args_shardings[argnum])
+        for i, s in enumerate(leaves):
+            spec = getattr(s, "spec", None)
+            lead = spec[0] if spec is not None and len(spec) else None
+            if lead != "expert":
+                out.append(Violation(
+                    "H003", path, 0, label,
+                    f"bank arg {argnum} leaf {i} sharded {spec} — "
+                    "placement spec requires PartitionSpec('expert', "
+                    "...) on the stacked axis"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the serving dispatches
+# ---------------------------------------------------------------------------
+
+
+def _tiny_hub(kv_layout: str, with_experts: bool = True):
+    """An 8-slot hub on the full 8-device expert mesh, smallest
+    geometry the layout allows. Slots start on zero template params —
+    enough to lower every executable; real experts are only needed
+    when warmup must drive the install scatter."""
+    import jax
+    from ..configs import get_config
+    from ..launch.mesh import make_expert_mesh
+    from ..models import build_model
+    from ..serve import ExpertHub
+
+    cfg = get_config("smollm-135m").reduced(name=f"hlo-{kv_layout}")
+    model = build_model(cfg)
+    mesh = make_expert_mesh()
+    hub = ExpertHub(model, n_slots=8, max_len=32,
+                    len_buckets=(8, 16), batch_buckets=(1, 2),
+                    mesh=mesh, kv_layout=kv_layout)
+    if with_experts:
+        for i in range(8):
+            hub.add_expert(f"ex{i}", model.init(jax.random.PRNGKey(i)))
+    return hub
+
+
+def _lower_paged(core) -> List[Tuple[str, Any, tuple, tuple, str, tuple]]:
+    """(label, jitted, args(avals), donate_argnums, kind, bank_args)
+    for every ladder point of a paged engine; ``bank_args`` are the
+    expert-stacked positional arguments H003 checks."""
+    import jax.numpy as jnp
+    import jax
+    E, C = core.n_experts, core.max_len
+    nlp, npp_page = core.n_logical, core.page
+    p_av = _avals(core.params)
+    pool_av = _avals(core.kv_pool)
+    out = []
+    for Sb in core.len_buckets:
+        for Bb in core.batch_buckets:
+            toks = jax.ShapeDtypeStruct((E, Bb, Sb), jnp.int32)
+            stbl = jax.ShapeDtypeStruct((E, Bb, Sb // npp_page),
+                                        jnp.int32)
+            out.append((f"paged_prefill[B{Bb},S{Sb}]",
+                        core._prefill_fn(Bb, Sb),
+                        (p_av, {"tokens": toks}, pool_av, stbl),
+                        (2,), "prefill", (0, 2)))
+    for Bb in core.batch_buckets:
+        tbl = jax.ShapeDtypeStruct((E, Bb, nlp), jnp.int32)
+        pos = jax.ShapeDtypeStruct((E, C), jnp.int32)
+        t = jax.ShapeDtypeStruct((E,), jnp.int32)
+        tok = jax.ShapeDtypeStruct((E, Bb, 1), jnp.int32)
+        out.append((f"paged_decode[B{Bb}]", core._decode_fn(Bb),
+                    (p_av, pool_av, tbl, pos, t, {"token": tok}),
+                    (1,), "decode", (0, 1)))
+    m = 2
+    es = jax.ShapeDtypeStruct((m,), jnp.int32)
+    out.append((f"cow_copy[m{m}]", core._copy_pages_fn(m),
+                (pool_av, es, es, es), (0,), "copy", (0,)))
+    return out
+
+
+def run() -> List[Violation]:
+    """Lower/compile every serving dispatch and apply H001-H004."""
+    import warnings as _w
+    import jax
+    import jax.numpy as jnp
+    from ..serve.core import COMPILE_COUNTER_EXACT
+
+    _require_devices(8)
+    out: List[Violation] = []
+
+    hub = _tiny_hub("paged")
+    core = hub.bank.core
+
+    # H004 first: warmup drives the whole ladder through the *calling*
+    # path the compile counters watch; the AOT lower/compile passes
+    # below must not run before the counts are read, or they could
+    # perturb the very caches being counted.
+    hub.warmup(max_batch=core.batch_buckets[-1], commit=True)
+    want_prefill = len(core.len_buckets) * len(core.batch_buckets)
+    want_decode = len(core.batch_buckets)
+    got_p = core.stats.prefill_compiles
+    got_d = core.stats.decode_compiles
+    got_i = hub.install_compiles
+    cmp_name = "==" if COMPILE_COUNTER_EXACT else ">="
+
+    def bad(got, want):
+        return (got != want) if COMPILE_COUNTER_EXACT else (got < want)
+
+    if bad(got_p, want_prefill):
+        out.append(Violation(
+            "H004", _CORE_PATH, 0, "prefill_ladder",
+            f"prefill executables after full warmup: {got_p}, declared "
+            f"bound {cmp_name} {want_prefill} "
+            f"(len_buckets x batch_buckets)"))
+    if bad(got_d, want_decode):
+        out.append(Violation(
+            "H004", _CORE_PATH, 0, "decode_ladder",
+            f"decode executables after full warmup: {got_d}, declared "
+            f"bound {cmp_name} {want_decode} (batch_buckets)"))
+    if COMPILE_COUNTER_EXACT and got_i != 1:
+        out.append(Violation(
+            "H004", _HUB_PATH, 0, "hub_install",
+            f"hub install executables: {got_i}, expected exactly 1 "
+            "(slot installs are keyed on bank shape, not expert)"))
+
+    # H001/H002/H003 over the paged ladder
+    for label, jitted, args, donate, kind, bank_args in \
+            _lower_paged(core):
+        with _w.catch_warnings():
+            _w.simplefilter("ignore")
+            compiled = jitted.lower(*args).compile()
+        hlo = compiled.as_text()
+        out.extend(check_donation(jitted, args, donate, label, hlo=hlo))
+        if kind == "decode":
+            out.extend(check_clean_decode(hlo, label))
+        out.extend(check_bank_sharding(compiled, label, bank_args))
+
+    # hub slot-install scatter (exists after warmup(commit=True))
+    if hub._install is None:
+        out.append(Violation(
+            "H001", _HUB_PATH, 0, "hub_install",
+            "warmup(commit=True) made no commit — cannot lower the "
+            "slot install scatter"))
+    else:
+        iargs = (_avals(core.params), _avals(hub.catalog[0].params),
+                 jax.ShapeDtypeStruct((), jnp.int32))
+        out.extend(check_donation(hub._install, iargs, (0,),
+                                  "hub_install", path=_HUB_PATH))
+
+    # ring layout: the non-paged decode donates its dense cache the
+    # same way — template-param hub, lowering only, no warmup needed
+    ring = _tiny_hub("ring", with_experts=False)
+    rcore = ring.bank.core
+    p_av = _avals(rcore.params)
+    Bb = rcore.batch_buckets[0]
+    Sb = rcore.len_buckets[0]
+    toks = jax.ShapeDtypeStruct((rcore.n_experts, Bb, Sb), jnp.int32)
+    _, cache_av = jax.eval_shape(rcore._prefill_fn(Bb, Sb),
+                                 _avals(rcore.params), {"tokens": toks})
+    tok = jax.ShapeDtypeStruct((rcore.n_experts, Bb, 1), jnp.int32)
+    args = (p_av, cache_av, {"token": tok})
+    jitted = rcore._decode_fn(Bb)
+    with _w.catch_warnings():
+        _w.simplefilter("ignore")
+        compiled = jitted.lower(*args).compile()
+    hlo = compiled.as_text()
+    out.extend(check_donation(jitted, args, (1,),
+                              f"ring_decode[B{Bb}]", hlo=hlo))
+    out.extend(check_clean_decode(hlo, f"ring_decode[B{Bb}]"))
+    out.extend(check_bank_sharding(compiled, f"ring_decode[B{Bb}]",
+                                   (0, 1)))
+    return out

@@ -1,10 +1,17 @@
-"""Post-SPMD HLO analysis: collective traffic + loop-aware multipliers.
+"""Post-SPMD HLO analysis: collective traffic, loop-aware multipliers,
+and contract-oriented module introspection.
 
 ``collective_bytes(hlo_text)`` parses the compiled (per-device) HLO module,
 sums the result-shape bytes of every collective op, and multiplies ops that
 live inside ``while`` bodies by the loop trip count (scan-over-layers,
 KV-chunk scans). Trip counts are recovered from the loop-condition
 computation's comparison constant — best-effort but exact for lax.scan.
+
+``input_output_aliases`` / ``custom_call_targets`` / ``op_kinds`` read
+the facts the serving contract gate (``repro.analysis.hlo_contracts``)
+asserts on: whether buffer donation actually took (XLA drops unusable
+donations silently, leaving only a warning), whether a module calls back
+into the host, and which opcodes appear in a lowered dispatch.
 """
 from __future__ import annotations
 
@@ -200,6 +207,49 @@ def module_cost(hlo: str) -> Dict[str, float]:
     out.update({f"coll_{k}": v for k, v in coll.items()})
     out["coll_total"] = sum(coll.values())
     return out
+
+
+_ALIAS_BLOCK_RE = re.compile(r"input_output_alias=\{(.*?)\}\s*,\s*\w+=",
+                             re.DOTALL)
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([0-9,\s]*)\}:\s*\((\d+),\s*\{[0-9,\s]*\}(?:,\s*([\w-]+))?\)")
+
+
+def input_output_aliases(hlo: str) -> Dict[Tuple[int, ...], int]:
+    """Donation map of a compiled module: output tuple index ->
+    flat parameter number, parsed from the ``input_output_alias``
+    attribute on the ``HloModule`` header line. Empty when the module
+    donates nothing — including when every requested donation was
+    silently dropped as unusable, which is exactly the regression the
+    contract gate exists to catch."""
+    m = _ALIAS_BLOCK_RE.search(hlo)
+    if not m:
+        return {}
+    out: Dict[Tuple[int, ...], int] = {}
+    for e in _ALIAS_ENTRY_RE.finditer(m.group(1)):
+        key = tuple(int(x) for x in e.group(1).split(",") if x.strip())
+        out[key] = int(e.group(2))
+    return out
+
+
+_CUSTOM_CALL_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+
+def custom_call_targets(hlo: str) -> List[str]:
+    """Every custom-call target in the module (host callbacks lower to
+    ``xla_python_cpu_callback`` / ``xla_ffi_python_cpu_callback``)."""
+    return _CUSTOM_CALL_RE.findall(hlo)
+
+
+def op_kinds(hlo: str) -> Dict[str, int]:
+    """Opcode histogram over every computation in the module."""
+    out: Dict[str, int] = defaultdict(int)
+    for comp_lines in _split_computations(hlo).values():
+        for ln in comp_lines:
+            m = _OP_RE.match(ln)
+            if m:
+                out[m.group(3)] += 1
+    return dict(out)
 
 
 def collective_bytes(hlo: str) -> Dict[str, int]:

@@ -364,16 +364,23 @@ class ExpertHub:
         for the oldest in-flight staging instead of busy-spinning.
         """
         self._tick += 1
-        self._poll_staging()
-        committed = self._commit_ready()
-        self._kick_staging()
-        if block and not committed and self._wanted and self._staging:
-            futures.wait([next(iter(self._staging.values()))])
-            # _poll_staging owns failure handling: it resets a failed
-            # entry to cold (retryable) before re-raising
+        # the host-cache trim runs on EVERY exit, including the staging
+        # -failure re-raise out of _poll_staging: skipping it there let
+        # staged host copies outlive the host_cache cap for as long as
+        # a flaky cold tier kept raising (rule L005's unpaired-exit
+        # shape, found by the repro.analysis lifecycle review)
+        try:
             self._poll_staging()
             committed = self._commit_ready()
-        self._trim_host()
+            self._kick_staging()
+            if block and not committed and self._wanted and self._staging:
+                futures.wait([next(iter(self._staging.values()))])
+                # _poll_staging owns failure handling: it resets a
+                # failed entry to cold (retryable) before re-raising
+                self._poll_staging()
+                committed = self._commit_ready()
+        finally:
+            self._trim_host()
         return committed
 
     def _trim_host(self) -> None:

@@ -1,0 +1,290 @@
+"""repro.analysis contract-checker tests.
+
+Two directions per pass: the repo itself must be clean (modulo the
+justified ``baseline.toml`` entries), and a *planted* violation of each
+class must be caught — a checker that never fires is indistinguishable
+from one that works.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.analysis import (REPO_ROOT, Violation, apply_baseline,
+                            format_report, load_baseline)
+from repro.analysis import lint, pallas_check
+
+
+# -- lint: repo is clean -----------------------------------------------------
+
+
+def test_lint_repo_clean_under_baseline():
+    active, suppressed = apply_baseline(lint.run(), load_baseline())
+    errors = [v for v in active if v.severity == "error"]
+    assert not errors, "\n" + format_report(errors)
+    # the baseline must not rot: every stanza still matches a finding
+    assert len(suppressed) == len(load_baseline()), (
+        "stale baseline.toml stanza (suppresses nothing) — delete it")
+
+
+# -- lint: planted violations ------------------------------------------------
+
+
+def test_lint_catches_host_sync_in_jitted_fn():
+    src = textwrap.dedent("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            n = int(x.sum())        # host sync on a tracer
+            return x * n
+    """)
+    vs = lint.lint_source(src, "src/repro/serve/planted.py")
+    assert any(v.rule == "L001" for v in vs), vs
+
+
+def test_lint_catches_tracer_branch():
+    src = textwrap.dedent("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x.sum() > 0:         # python branch on a device value
+                return x
+            return -x
+    """)
+    vs = lint.lint_source(src, "src/repro/serve/planted.py")
+    assert any(v.rule == "L002" for v in vs), vs
+
+
+def test_lint_catches_private_cache_size_use():
+    src = textwrap.dedent("""
+        def count(fn):
+            return fn._cache_size()
+    """)
+    vs = lint.lint_source(src, "src/repro/launch/planted.py")
+    assert any(v.rule == "L003" for v in vs), vs
+    # ...but the guarded helper's home file is allowed to touch it
+    assert not lint.lint_source(src, "src/repro/serve/core.py")
+
+
+def test_lint_catches_unsynced_device_timing():
+    src = textwrap.dedent("""
+        import time
+        import jax.numpy as jnp
+
+        def bench(x):
+            t0 = time.perf_counter()
+            y = jnp.dot(x, x)       # enqueued, not executed
+            return time.perf_counter() - t0, y
+    """)
+    vs = lint.lint_source(src, "benchmarks/planted.py")
+    assert any(v.rule == "L004" for v in vs), vs
+
+
+def test_lint_synced_timing_passes():
+    src = textwrap.dedent("""
+        import time
+        import jax
+        import jax.numpy as jnp
+
+        def bench(x):
+            t0 = time.perf_counter()
+            y = jax.block_until_ready(jnp.dot(x, x))
+            return time.perf_counter() - t0, y
+    """)
+    assert not lint.lint_source(src, "benchmarks/planted.py")
+
+
+def test_lint_catches_lifecycle_leak():
+    src = textwrap.dedent("""
+        def admit(pool, local, stage):
+            pages = pool.alloc(local, 4)
+            stage(pages)            # can raise: pages leak
+            return pages
+    """)
+    vs = lint.lint_source(src, "src/repro/serve/scheduler.py")
+    assert any(v.rule == "L005" for v in vs), vs
+
+
+def test_lint_lifecycle_release_in_finally_passes():
+    src = textwrap.dedent("""
+        def admit(pool, local, stage):
+            pages = pool.alloc(local, 4)
+            try:
+                stage(pages)
+            finally:
+                pool.release(local, pages)
+    """)
+    assert not lint.lint_source(src, "src/repro/serve/scheduler.py")
+
+
+# -- baseline parsing --------------------------------------------------------
+
+
+def test_baseline_requires_reason(tmp_path):
+    p = tmp_path / "b.toml"
+    p.write_text('[[baseline]]\nrule = "L004"\nfile = "f.py"\n'
+                 'func = "g"\n')
+    with pytest.raises(ValueError, match="justification"):
+        load_baseline(str(p))
+    p.write_text('[[baseline]]\nrule = [1]\n')
+    with pytest.raises(ValueError, match="unsupported"):
+        load_baseline(str(p))
+
+
+def test_baseline_suppression_is_keyed_not_line_based():
+    v = Violation("L004", "f.py", 42, "Klass.fn", "msg")
+    active, supp = apply_baseline(
+        [v], [{"rule": "L004", "file": "f.py", "func": "Klass.fn",
+               "reason": "r"}])
+    assert not active and supp == [v]
+
+
+# -- pallas: repo kernels + planted geometry bugs ----------------------------
+
+
+def test_pallas_repo_kernels_have_no_errors():
+    vs = pallas_check.run()
+    errors = [v for v in vs if v.severity == "error"]
+    assert not errors, "\n" + format_report(errors)
+
+
+def _rec(grid, in_specs, in_shapes, **kw):
+    defaults = dict(kernel_name="planted", path="src/repro/kernels/x.py",
+                    line=1, grid=grid, in_specs=in_specs,
+                    out_specs=[], scratch_shapes=[],
+                    num_scalar_prefetch=0, in_shapes=in_shapes,
+                    out_shapes=[], scalar_args=[])
+    defaults.update(kw)
+    return pallas_check.PallasCallRecord(**defaults)
+
+
+class _Spec:
+    def __init__(self, block_shape, index_map):
+        self.block_shape = block_shape
+        self.index_map = index_map
+
+
+def test_pallas_catches_out_of_bounds_index_map():
+    # grid (4,) over a (4, 64) operand in (1, 64) blocks, but the map
+    # is off by one: the last grid point reads row 4 of 4
+    rec = _rec(grid=(4,),
+               in_specs=[_Spec((1, 64), lambda i: (i + 1, 0))],
+               in_shapes=[((4, 64), np.float32)])
+    vs = pallas_check.check_record(rec, "planted")
+    assert any(v.rule == "P002" for v in vs), vs
+
+
+def test_pallas_catches_nondividing_block():
+    rec = _rec(grid=(2,),
+               in_specs=[_Spec((10, 64), lambda i: (i, 0))],
+               in_shapes=[((32, 64), np.float32)])
+    vs = pallas_check.check_record(rec, "planted")
+    assert any(v.rule == "P001" for v in vs), vs
+
+
+def test_pallas_capture_sees_real_kernel_geometry():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.wkv_step import wkv_step_pallas
+    B, H, P = 2, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    args = [jax.random.normal(k, (B, H, P)) for k in ks[:4]]
+    u = jax.random.normal(ks[4], (H, P))
+    S = jax.random.normal(ks[5], (B, H, P, P))
+    with pallas_check.capture_pallas_calls() as recs:
+        wkv_step_pallas(*args, u, S)
+    assert len(recs) == 1
+    assert recs[0].grid == (B, H)
+    assert not [v for v in pallas_check.check_record(recs[0], "t")
+                if v.severity == "error"]
+
+
+# -- hlo: donation / callback checks (single-device, in-process) -------------
+
+
+def test_hlo_donation_check_passes_on_real_donation():
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.hlo_contracts import check_donation
+    f = jax.jit(lambda x: x + 1, donate_argnums=(0,))
+    x = jnp.zeros((128,), jnp.float32)
+    assert check_donation(f, (x,), (0,), "ok") == []
+
+
+def test_hlo_donation_check_catches_dropped_donation():
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.hlo_contracts import check_donation
+    # output dtype is narrower than the donated input: XLA cannot
+    # reuse the buffer and silently drops the donation (warning only)
+    f = jax.jit(lambda x: (x + 1).astype(jnp.bfloat16),
+                donate_argnums=(0,))
+    x = jnp.zeros((128,), jnp.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        vs = check_donation(f, (x,), (0,), "planted")
+    assert vs and vs[0].rule == "H001", vs
+
+
+def test_hlo_clean_decode_flags_host_callback():
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.hlo_contracts import check_clean_decode
+
+    def noisy(x):
+        jax.debug.print("x = {}", x.sum())
+        return x * 2
+
+    x = jnp.zeros((8,), jnp.float32)
+    hlo = jax.jit(noisy).lower(x).compile().as_text()
+    assert any(v.rule == "H002"
+               for v in check_clean_decode(hlo, "planted"))
+    clean = jax.jit(lambda x: x * 2).lower(x).compile().as_text()
+    assert not check_clean_decode(clean, "clean")
+
+
+# -- hlo: the full contract gate on a forced 8-device mesh -------------------
+
+
+def test_hlo_contract_gate_clean_on_forced_mesh():
+    """The real thing: every serving dispatch lowered on 8 forced CPU
+    devices, H001-H004 asserted. Runs in a subprocess so the forced
+    device count cannot leak into this process's jax runtime."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO_ROOT, "src"),
+                    env.get("PYTHONPATH")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "hlo",
+         "--fail-on-violation"],
+        env=env, cwd=REPO_ROOT, capture_output=True, text=True,
+        timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_all_passes_with_fail_gate():
+    """`python -m repro.analysis --all --fail-on-violation` exits 0 on
+    the repo: lint + pallas in-process, hlo re-exec'd onto the forced
+    mesh, baseline applied — the exact command the CI analysis job
+    runs."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO_ROOT, "src"),
+                    env.get("PYTHONPATH")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--all",
+         "--fail-on-violation"],
+        env=env, cwd=REPO_ROOT, capture_output=True, text=True,
+        timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "baselined" in proc.stdout

@@ -354,6 +354,53 @@ def test_staging_failure_is_loud_but_retryable(tmp_path, model, params4):
     hub.check()
 
 
+def test_staging_failure_still_trims_host_cache(tmp_path, model,
+                                                params4):
+    """The host-cache cap must hold on the staging-failure exit too:
+    service() re-raises a broken stage, but its finally-trim still
+    returns over-cap staged copies to the cold tier. Regression for
+    the exception-path leak the lifecycle review flagged — before the
+    fix, every raise skipped _trim_host() and a flaky cold tier could
+    pin the whole catalog in host memory."""
+    import shutil
+    store = str(tmp_path / "store")
+    hub = ExpertHub(model, n_slots=1, max_len=32, store=store)
+    e0 = hub.add_expert("ex0", params4[0], cold=True)
+    e1 = hub.add_expert("ex1", params4[1], cold=True)
+    e2 = hub.add_expert("ex2", params4[2], cold=True)
+    for e in (e0, e1):                  # rotate both through the slot
+        with pytest.raises(NotResident):
+            hub.acquire(e)
+        while hub.has_wanted:
+            hub.service(block=True)
+    # ex0 was evicted with its host copy retained (fast reloads)
+    assert hub.catalog[e0].state == "staged"
+    assert hub.catalog[e0].params is not None
+    hub.host_cache = 0                  # now cap the host tier
+    shutil.rmtree(store)                # and break the cold tier
+    with pytest.raises(NotResident):
+        hub.acquire(e2)
+    with pytest.raises(Exception):
+        while hub.has_wanted:
+            hub.service(block=True)
+    # the failing service still enforced the cap on its way out
+    assert hub.catalog[e0].state == "cold"
+    assert hub.catalog[e0].params is None
+    # and nothing leaked: failed entry retryable, no pins, no stragglers
+    assert hub.catalog[e2].state == "cold"
+    assert not hub.has_wanted and not hub._staging
+    assert all(c.pins == 0 for c in hub.catalog)
+    from repro.checkpoint import save_expert
+    for i, name in enumerate(("ex0", "ex1", "ex2")):
+        save_expert(store, name, params4[i])
+    with pytest.raises(NotResident):
+        hub.acquire(e2)                 # restored tier: full recovery
+    while hub.has_wanted:
+        hub.service(block=True)
+    assert hub.catalog[e2].state == "resident"
+    hub.check()
+
+
 def test_host_cache_bounds_staged_copies(tmp_path, model, params4):
     """With host_cache set, evicted experts' host copies are trimmed
     back to the cold tier (least popular first) instead of growing

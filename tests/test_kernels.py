@@ -199,3 +199,61 @@ def test_wkv_decode_step(B, H, P):
                                rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(np.asarray(S_k), np.asarray(S_ref),
                                rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("B,H", [(1, 2), (3, 4), (2, 8)])
+def test_wkv_step_parity_grid(B, H, dtype):
+    """Interpret-mode kernel vs oracle over the (batch, head, dtype)
+    grid the serving path actually exercises: both sides upcast to f32
+    in-kernel, so bf16 activations must agree to f32-rounding level,
+    not just bf16 precision — a regression here means the kernel
+    dropped its internal upcast."""
+    from repro.kernels.wkv_step import wkv_step_pallas
+    from repro.models.rwkv6 import wkv_step as wkv_oracle
+    P = 32
+    ks = jax.random.split(jax.random.PRNGKey(B * 100 + H), 6)
+    r = jax.random.normal(ks[0], (B, H, P)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, H, P)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, H, P)).astype(dtype)
+    logw = (-jnp.exp(jax.random.normal(ks[3], (B, H, P)) * 0.5)
+            ).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, P)) * 0.2).astype(dtype)
+    S = jax.random.normal(ks[5], (B, H, P, P))   # state stays f32
+    o_k, S_k = wkv_step_pallas(r, k, v, logw, u, S)
+    assert o_k.dtype == jnp.float32 and S_k.dtype == jnp.float32
+    S_ref, o_ref = wkv_oracle(S, r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(S_k), np.asarray(S_ref),
+                               rtol=5e-5, atol=5e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_wkv_step_chain_matches_scan(dtype):
+    """T chained kernel decode steps reproduce wkv_scan's outputs and
+    final state — the decode loop is the scan, one token at a time."""
+    from repro.kernels.wkv_step import wkv_step_pallas
+    from repro.models.rwkv6 import wkv_scan
+    B, T, H, P = 2, 5, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    r = jax.random.normal(ks[0], (B, T, H, P)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, H, P)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, H, P)).astype(dtype)
+    logw = (-jnp.exp(jax.random.normal(ks[3], (B, T, H, P)) * 0.5)
+            ).astype(dtype)
+    u = jnp.zeros((H, P), dtype) + 0.1
+    o_scan, S_scan = wkv_scan(r, k, v, logw, u)
+    S = jnp.zeros((B, H, P, P), jnp.float32)
+    outs = []
+    for t in range(T):
+        o, S = wkv_step_pallas(r[:, t], k[:, t], v[:, t],
+                               logw[:, t], u, S)
+        outs.append(o)
+    o_chain = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(o_chain), np.asarray(o_scan),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_scan),
+                               rtol=1e-4, atol=1e-4)
