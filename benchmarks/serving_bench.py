@@ -87,7 +87,7 @@ DATASETS = ["mnist", "har", "reuters"]
 
 def build_server(n_per_dataset: int, epochs: int, max_batch: int,
                  placement: str, executor: str = "overlapped",
-                 kv: str = "ring"):
+                 kv: str = "ring", check_every: int = 0):
     import jax
     from repro.configs import get_config
     from repro.core import ExpertRegistry, build_matcher, train_bank
@@ -119,14 +119,15 @@ def build_server(n_per_dataset: int, epochs: int, max_batch: int,
         for line in plan.describe(registry.names).splitlines():
             print(f"#   {line}", flush=True)
     server = RoutedServer(matcher, registry, max_batch=max_batch,
-                          placement=plan, executor=executor)
+                          placement=plan, executor=executor,
+                          check_every=check_every)
     return server, bench, names
 
 
 def build_hub_server(n_experts: int, resident: int, max_batch: int,
                      executor: str, kv: str, store: "str | None",
                      seed: int = 0, use_mesh: bool = True,
-                     max_len: int = 32):
+                     max_len: int = 32, check_every: int = 0):
     """An ExpertHub-fronted server: ``n_experts`` catalogued, only
     ``resident`` device slots. Requests are pre-routed (no matcher —
     the hub bench isolates the residency subsystem), and with ``store``
@@ -154,7 +155,7 @@ def build_hub_server(n_experts: int, resident: int, max_batch: int,
                        cold=store is not None)
     server = RoutedServer(None, hub.build_registry(),
                           max_batch=max_batch, hub=hub,
-                          executor=executor)
+                          executor=executor, check_every=check_every)
     return server, hub
 
 
@@ -404,10 +405,12 @@ def run_hub_bench(args) -> None:
     store = args.store or tempfile.mkdtemp(prefix="expert-store-")
     server, hub = build_hub_server(
         args.n_experts, args.resident, args.max_batch, args.executor,
-        args.kv, store, seed=args.seed)
+        args.kv, store, seed=args.seed,
+        check_every=args.check_invariants)
     base_srv, base_hub = build_hub_server(
         args.n_experts, args.n_experts, args.max_batch, args.executor,
-        args.kv, None, seed=args.seed, use_mesh=False)
+        args.kv, None, seed=args.seed, use_mesh=False,
+        check_every=args.check_invariants)
     print(f"# hub server up in {time.time()-t0:.1f}s "
           f"({args.n_experts} experts, {args.resident} slots, "
           f"kv={args.kv}, executor={args.executor}, "
@@ -480,6 +483,16 @@ def run_hub_bench(args) -> None:
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", flush=True)
+    if args.check_invariants:
+        checks = (server.scheduler.stats["invariant_checks"]
+                  + base_srv.scheduler.stats["invariant_checks"])
+        print(f"# invariants: {checks} mid-run sweeps "
+              f"(every {args.check_invariants} steps), all held",
+              flush=True)
+    # join the staging workers: a bench that leaks its hub thread
+    # would mask exactly the shutdown bugs the concurrency gate polices
+    server.close()
+    base_srv.close()
 
 
 def main():
@@ -529,6 +542,11 @@ def main():
                     help="also write machine-readable results (per-"
                          "scenario metrics + corrected compile counts + "
                          "sync counters) to this path")
+    ap.add_argument("--check-invariants", type=int, default=0,
+                    metavar="N",
+                    help="run the concurrency-gate conservation sweep "
+                         "(PagePool.check + hub state machine + pin "
+                         "accounting) every N scheduler steps; 0 = off")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host CPU devices (multi-device dry-run "
                          "for the banked placement path); 0 = leave the "
@@ -560,7 +578,8 @@ def main():
     t0 = time.time()
     server, bench, names = build_server(args.n_per_dataset, args.epochs,
                                         args.max_batch, args.placement,
-                                        args.executor, args.kv)
+                                        args.executor, args.kv,
+                                        check_every=args.check_invariants)
     print(f"# server up in {time.time()-t0:.1f}s "
           f"({len(names)} experts, placement={args.placement}, "
           f"executor={args.executor}, kv={args.kv})", flush=True)

@@ -1,6 +1,6 @@
-"""Static contract checkers for the serving stack.
+"""Contract checkers for the serving stack.
 
-Three cooperating passes, each runnable standalone
+Five cooperating passes, each runnable standalone
 (``python -m repro.analysis <pass>``) and as tier-1 pytest tests:
 
   * ``lint``  — AST-based repo-specific linter (no jax import): host
@@ -16,6 +16,18 @@ Three cooperating passes, each runnable standalone
   * ``pallas`` — validates every kernel's BlockSpec geometry (block
     divisibility, index-map bounds over the grid, TPU memory-space
     and VMEM-budget legality) without a TPU. Rules P001..P004.
+  * ``races`` — static lockset/race analysis of the expert-lifecycle
+    threading contract (``THREAD_CONTRACT`` in ``serve/hub.py``):
+    per-thread reachability over the call graph, cross-thread shared
+    state guarded by the designated lock / queue handoffs /
+    single-writer annotations, consistent lock order, no blocking
+    work under the lock, safe publication order. Rules R001..R004.
+  * ``sanitizer`` — *dynamic* schedule fuzzer for the same contract:
+    runs the hub's two threads under a seeded deterministic
+    cooperative scheduler, replays interleavings byte-identically,
+    and asserts the conservation invariants after each one (plus a
+    planted lost-update that must keep reproducing). Rules
+    S001..S002.
 
 Intentional exceptions live in ``analysis/baseline.toml`` — one
 ``[[baseline]]`` stanza per suppressed finding, each with a written

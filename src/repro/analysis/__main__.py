@@ -1,18 +1,22 @@
-"""CLI for the static contract checkers.
+"""CLI for the contract checkers.
 
     python -m repro.analysis --all --fail-on-violation
-    python -m repro.analysis lint pallas
-    python -m repro.analysis hlo
+    python -m repro.analysis lint pallas races
+    python -m repro.analysis sanitizer
+    python -m repro.analysis --emit-baseline races
 
 The ``hlo`` pass needs >= 8 devices, which on a CPU-only runner means
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` set *before*
 jax initialises. The CLI handles that itself: the parent process runs
-``lint``/``pallas`` in-process (they need no device mesh) and re-execs
-``hlo`` as a child with the forced-device environment, collecting the
-child's findings over a JSON pipe. Exit status with
-``--fail-on-violation``: 0 when every error-severity finding is
-covered by ``baseline.toml``, 1 otherwise (the report prints a ready
-to paste baseline stanza per unbaselined error).
+``lint``/``pallas``/``races`` in-process (they need no device mesh),
+runs the ``sanitizer`` schedule fuzzer in-process too (its stub-model
+hubs are CPU-friendly), and re-execs ``hlo`` as a child with the
+forced-device environment, collecting the child's findings over a
+JSON pipe. Exit status with ``--fail-on-violation``: 0 when every
+error-severity finding is covered by ``baseline.toml``, 1 otherwise
+(the report prints a ready to paste baseline stanza per unbaselined
+error; ``--emit-baseline`` prints *only* those stanzas, for piping
+straight into the file).
 """
 from __future__ import annotations
 
@@ -27,7 +31,7 @@ from typing import List
 from . import (Violation, apply_baseline, format_report, load_baseline,
                REPO_ROOT)
 
-_PASSES = ("lint", "hlo", "pallas")
+_PASSES = ("lint", "hlo", "pallas", "races", "sanitizer")
 _CHILD_FLAG = "--emit-json"
 
 
@@ -39,6 +43,16 @@ def _run_lint() -> List[Violation]:
 def _run_pallas() -> List[Violation]:
     from . import pallas_check
     return pallas_check.run()
+
+
+def _run_races() -> List[Violation]:
+    from . import races
+    return races.run()
+
+
+def _run_sanitizer() -> List[Violation]:
+    from . import sanitizer
+    return sanitizer.run()
 
 
 def _run_hlo_inprocess() -> List[Violation]:
@@ -87,6 +101,9 @@ def main(argv=None) -> int:
                     help="exit 1 if any unbaselined error remains")
     ap.add_argument("--no-baseline", action="store_true",
                     help="ignore baseline.toml (show every finding)")
+    ap.add_argument("--emit-baseline", action="store_true",
+                    help="print only ready-to-paste baseline stanzas "
+                         "for the unbaselined errors, nothing else")
     ap.add_argument(_CHILD_FLAG, dest="emit_json", action="store_true",
                     help=argparse.SUPPRESS)   # internal child protocol
     args = ap.parse_args(argv)
@@ -101,6 +118,10 @@ def main(argv=None) -> int:
             violations += _run_lint()
         elif p == "pallas":
             violations += _run_pallas()
+        elif p == "races":
+            violations += _run_races()
+        elif p == "sanitizer":
+            violations += _run_sanitizer()
         elif p == "hlo":
             if args.emit_json:
                 violations += _run_hlo_inprocess()
@@ -114,6 +135,12 @@ def main(argv=None) -> int:
 
     entries = [] if args.no_baseline else load_baseline()
     active, suppressed = apply_baseline(violations, entries)
+    if args.emit_baseline:
+        for v in active:
+            if v.severity == "error":
+                print(v.stanza())
+                print()
+        return 0
     print(f"repro.analysis: {' '.join(passes)} — "
           f"{len(active)} active finding(s), "
           f"{len(suppressed)} baselined")

@@ -51,18 +51,39 @@ Residency state machine (per catalog entry):
     their queues (mirroring ``PagePoolExhausted``) until the hub
     commits the expert.
 
-``HubStats`` carries loads, evictions, stage/commit latencies and
-resident-miss stalls; ``benchmarks/serving_bench.py --hub`` drives a
-Zipf long-tail workload over a catalog far larger than the slot count
-and asserts token-identity to a fully-resident baseline.
+Threading model (machine-checked — see ``THREAD_CONTRACT`` below and
+``docs/architecture.md`` § Threading model):
+
+  Two threads touch hub state. The **scheduler thread** drives the
+  whole lifecycle (``service``/``acquire``/``pin``/``unpin``/eviction/
+  commit) and owns the bank, the page pool and the prefix cache. The
+  **staging worker** (one ``hub-stage`` thread, spawned lazily, joined
+  by ``close()``) receives ``(expert, name, store)`` jobs over
+  ``_stage_q`` — a queue handoff, never a catalog read — performs the
+  blocking checkpoint I/O with no lock held, and publishes the result
+  (params first, then the ``staged`` state, or the ``cold`` reset +
+  recorded error on failure) under ``_lock``. Everything both threads
+  touch — catalog entry fields, the wanted/staging books, the shared
+  popularity ``Counter``, ``HubStats`` — is guarded by ``_lock``;
+  ``_cv`` (a condition on that same lock) is the one sanctioned
+  blocking point (``service(block=True)`` waits on it, releasing the
+  lock). ``repro.analysis races`` (rules R001–R004) statically enforces
+  this contract; ``repro.analysis sanitizer`` (S001–S002) fuzzes real
+  interleavings of the two threads under a deterministic schedule.
+
+``HubStats`` carries loads, evictions, stage/commit latencies,
+stage-failure counts and resident-miss stalls;
+``benchmarks/serving_bench.py --hub`` drives a Zipf long-tail workload
+over a catalog far larger than the slot count and asserts
+token-identity to a fully-resident baseline.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import queue
+import threading
 import time
-from concurrent import futures
-from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -73,6 +94,82 @@ from jax.sharding import Mesh
 from ..checkpoint import io as ckpt_io
 from ..core.registry import ExpertRegistry, ExpertSpec
 from .placement import BankedEngine
+
+# ---------------------------------------------------------------------------
+# The concurrency contract, as data. ``repro.analysis races`` parses this
+# literal out of the module AST and statically verifies the code against
+# it; the schedule-fuzzing sanitizer exercises the same contract
+# dynamically. Keep it in lockstep with docs/architecture.md
+# ("Threading model") — the checker fails the CI gate when code and
+# contract drift.
+#
+#   * ``threads``       — entry-point qualnames per thread; everything
+#                         reachable from them over the call graph is
+#                         attributed to that thread.
+#                         (``Scheduler._service_hub``/``_admit_batches``/
+#                         ``_tick_engines``/``_harvest_engines`` are
+#                         roots of their own because the executor seam
+#                         in serve/core.py — outside this unit — is
+#                         what calls them.)
+#   * ``lock_guarded``  — state both threads touch: every access must
+#                         hold the designated lock (lexically, or from
+#                         a ``*_locked`` helper, whose call sites are
+#                         themselves verified).
+#   * ``queue_handoffs``— cross-thread channels that need no lock.
+#   * ``single_writer`` — owned by exactly one thread; the checker
+#                         proves the other thread never reaches them.
+#   * ``blocking_calls``— calls that may block the host; forbidden
+#                         under the lock (R003). ``_cv.wait``/
+#                         ``wait_for`` are exempt: a condition wait
+#                         releases the lock it blocks on.
+#   * ``publish_order`` — R004: a ``state`` write publishing the named
+#                         value must come *after* writes to its payload
+#                         fields (params before ``staged``, slot before
+#                         ``resident``) so no thread can observe a
+#                         half-constructed entry.
+# ---------------------------------------------------------------------------
+THREAD_CONTRACT = {
+    "lock": "_lock",
+    "lock_aliases": ["_lock", "_cv"],
+    "threads": {
+        "scheduler": [
+            "Scheduler.submit", "Scheduler.step", "Scheduler.drain",
+            "Scheduler.check_invariants", "Scheduler.close",
+            "Scheduler._service_hub", "Scheduler._admit_batches",
+            "Scheduler._tick_engines", "Scheduler._harvest_engines",
+            "ExpertHub.service", "ExpertHub.warmup", "ExpertHub.acquire",
+            "ExpertHub.want", "ExpertHub.pin", "ExpertHub.unpin",
+            "ExpertHub.note_hit", "ExpertHub.bind_popularity",
+            "ExpertHub.slot_of", "ExpertHub.expert_in",
+            "ExpertHub.resident_experts", "ExpertHub.has_wanted",
+            "ExpertHub.total_pins", "ExpertHub.check", "ExpertHub.close",
+            "ExpertHub.__len__",
+        ],
+        "stager": ["ExpertHub._stage_loop"],
+    },
+    "lock_guarded": {
+        "entry_fields": ["state", "params", "slot", "pins", "last_used"],
+        "fields": ["catalog", "_wanted", "_staging", "_stage_errors",
+                   "popularity", "_stage_thread", "_closed"],
+        "stats_fields": ["loads", "evictions", "resident_misses",
+                         "stage_attempts", "stage_count", "stage_ms",
+                         "stage_cache_hits", "stage_failures",
+                         "commit_count", "commit_ms"],
+    },
+    "queue_handoffs": ["_stage_q"],
+    "single_writer": {
+        "scheduler": ["_index", "_slot_expert", "_install", "_tick",
+                      "host_cache",
+                      "queues", "n_queued", "_meta", "_done", "_seq",
+                      "_skips", "_steps", "prefix_lru",
+                      "refs", "_free", "_lru", "_active"],
+    },
+    "blocking_calls": ["load_expert", "save_expert", "load_pytree",
+                       "save_pytree", "block_until_ready", "device_get",
+                       "result", "join", "sleep", "wait"],
+    "publish_order": {"state": {"staged": ["params"],
+                                "resident": ["slot"]}},
+}
 
 
 class NotResident(RuntimeError):
@@ -101,13 +198,21 @@ class HubStats:
     latency accumulators time the two lifecycle edges: *stage* (cold
     checkpoint → host numpy, worker thread) and *commit* (host → device
     slot scatter enqueue).
+
+    Conservation (asserted by ``ExpertHub.check`` and fuzzed by the
+    sanitizer): ``loads == commit_count`` always, and every stage
+    attempt is accounted for —
+    ``stage_attempts == stage_count + stage_failures + in-flight``.
+    All counters are mutated under the hub lock only.
     """
 
     def __init__(self):
         self.loads = 0
         self.evictions = 0
         self.resident_misses = 0
-        self.stage_count = 0
+        self.stage_attempts = 0         # staging jobs handed to a worker
+        self.stage_count = 0            # ... that published params
+        self.stage_failures = 0         # ... that failed (entry reset)
         self.stage_ms = 0.0
         self.stage_cache_hits = 0       # wanted expert already staged
         self.commit_count = 0
@@ -124,7 +229,9 @@ class HubStats:
     def as_dict(self) -> Dict[str, float]:
         return {"loads": self.loads, "evictions": self.evictions,
                 "resident_misses": self.resident_misses,
+                "stage_attempts": self.stage_attempts,
                 "stage_count": self.stage_count,
+                "stage_failures": self.stage_failures,
                 "stage_ms_avg": self.stage_ms_avg,
                 "stage_cache_hits": self.stage_cache_hits,
                 "commit_count": self.commit_count,
@@ -135,13 +242,18 @@ class HubStats:
                 f"evictions={self.evictions}, "
                 f"resident_misses={self.resident_misses}, "
                 f"stage={self.stage_count}x{self.stage_ms_avg:.1f}ms"
-                f"(+{self.stage_cache_hits} cached), "
+                f"(+{self.stage_cache_hits} cached, "
+                f"{self.stage_failures} failed), "
                 f"commit={self.commit_count}x{self.commit_ms_avg:.1f}ms)")
 
 
 @dataclasses.dataclass
 class CatalogEntry:
-    """One known expert: where its weights live and who is using it."""
+    """One known expert: where its weights live and who is using it.
+
+    All fields below ``on_disk`` are shared between the scheduler
+    thread and the staging worker and are guarded by the hub lock
+    (``THREAD_CONTRACT["lock_guarded"]["entry_fields"]``)."""
     name: str
     params: Any = None              # host-staged numpy pytree (or None)
     store: Optional[str] = None     # cold-tier store root (checkpoint/io)
@@ -185,9 +297,12 @@ class ExpertHub:
     The hub owns one ``BankedEngine`` with ``n_slots`` expert slots and
     an unbounded catalog; ``acquire``/``pin``/``unpin`` are the
     scheduler's admission contract and ``service`` is the per-step
-    lifecycle driver (poll staging, commit wanted experts into slots,
-    kick prefetch). All catalog mutation happens on the scheduler
-    thread — the staging worker only reads checkpoints into numpy.
+    lifecycle driver (commit staged experts into slots, kick prefetch,
+    surface staging failures). Cold staging runs on one ``hub-stage``
+    worker thread which publishes results under the hub lock — see the
+    module docstring's threading model and ``THREAD_CONTRACT``. Call
+    ``close()`` (or use the hub as a context manager) to join the
+    worker on shutdown.
     """
 
     def __init__(self, model, *, n_slots: int, max_len: int = 256,
@@ -197,13 +312,17 @@ class ExpertHub:
                  mesh: Optional[Mesh] = None, kv_layout: str = "ring",
                  page_size: int = 8, pool_pages: Optional[int] = None,
                  store: Optional[str] = None, prefetch: bool = True,
-                 host_cache: Optional[int] = None):
+                 host_cache: Optional[int] = None,
+                 stage_timeout: float = 120.0):
         if n_slots < 1:
             raise ValueError(f"ExpertHub needs n_slots >= 1, got {n_slots}")
         self.model = model
         self.n_slots = n_slots
         self.store = store
         self.prefetch = prefetch
+        # how long service(block=True) waits for staging progress
+        # before declaring the worker wedged (fail-fast, not a hang)
+        self.stage_timeout = stage_timeout
         # bound on retained host-staged copies of *re-stageable*
         # (cold-store-backed) non-resident experts; None = keep every
         # staged copy (fastest reloads, host memory grows toward the
@@ -241,14 +360,28 @@ class ExpertHub:
         self._slot_expert: List[Optional[int]] = [None] * n_slots
         self._wanted: "collections.OrderedDict[int, None]" = \
             collections.OrderedDict()
-        self._staging: Dict[int, Future] = {}
-        self._pool: Optional[ThreadPoolExecutor] = None
+        # experts with a staging job in flight (insertion-ordered set)
+        self._staging: Dict[int, None] = {}
+        # failures recorded by the worker, re-raised by service()
+        self._stage_errors: List[Tuple[int, BaseException]] = []
         self._install = None
         self._tick = 0
         # router hit counts (rebound by bind_popularity when a Router
-        # fronts the hub; pre-routed schedulers feed it directly)
+        # fronts the hub; pre-routed schedulers feed it via note_hit)
         self.popularity: collections.Counter = collections.Counter()
         self.stats = HubStats()
+        # -- concurrency plumbing (THREAD_CONTRACT) ----------------------
+        # the designated lock; _cv (same lock) is the one sanctioned
+        # blocking point. _stage_q is the scheduler->worker job handoff.
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._stage_q: "queue.Queue[Optional[Tuple[int, str, str]]]" = \
+            queue.Queue()
+        self._stage_thread: Optional[threading.Thread] = None
+        self._closed = False
+        # seam for the schedule-fuzzing sanitizer: it swaps in managed
+        # thread/lock/queue shims before the worker first spawns
+        self._thread_factory = threading.Thread
 
     # -- catalog ---------------------------------------------------------
     def add_expert(self, name: str, params: Any = None, *,
@@ -265,6 +398,9 @@ class ExpertHub:
             if cold:
                 if self.store is None:
                     raise ValueError("cold=True needs a store directory")
+                # checkpoint write happens before the lock: blocking
+                # I/O never runs under _lock (rule R003's discipline,
+                # even on this setup path)
                 ckpt_io.save_expert(self.store, name, params)
                 entry.on_disk = True
             else:
@@ -275,9 +411,10 @@ class ExpertHub:
                 f"expert {name!r}: no params and no checkpoint store")
         else:
             entry.on_disk = True          # pre-existing store checkpoint
-        e = len(self.catalog)
-        self.catalog.append(entry)
-        self._index[name] = e
+        with self._lock:
+            e = len(self.catalog)
+            self.catalog.append(entry)
+            self._index[name] = e
         return e
 
     def add_from_store(self, names: Optional[Sequence[str]] = None
@@ -297,44 +434,78 @@ class ExpertHub:
             reg.add(c.name, HubMember(self, e), spec=self.spec)
         return reg
 
-    def bind_popularity(self, counter: collections.Counter) -> None:
+    def bind_popularity(self, counter: collections.Counter, *,
+                        router=None) -> None:
         """Share the router's per-expert hit Counter as the eviction
-        policy's popularity signal (same object, zero plumbing)."""
-        counter.update(self.popularity)
-        self.popularity = counter
+        policy's popularity signal (same object, zero plumbing). The
+        Counter becomes lock-guarded shared state: pass the ``Router``
+        via ``router=`` so its own ``route()`` increments take the
+        hub lock too (``Router.hits_lock``)."""
+        with self._lock:
+            counter.update(self.popularity)
+            self.popularity = counter
+        if router is not None:
+            router.hits_lock = self._lock
+
+    def note_hit(self, e: int, n: int = 1) -> None:
+        """Record routing hits for the eviction policy. This is the
+        designated mutation point for the shared popularity Counter —
+        an unlocked ``popularity[e] += 1`` is a read-modify-write race
+        against the eviction ranking (rule R001; the sanitizer's
+        planted lost-update demonstrates the loss)."""
+        with self._lock:
+            self.popularity[e] += n
 
     def __len__(self) -> int:
-        return len(self.catalog)
+        with self._lock:
+            return len(self.catalog)
 
     # -- residency -------------------------------------------------------
     def slot_of(self, e: int) -> Optional[int]:
-        c = self.catalog[e]
-        return c.slot if c.state == "resident" else None
+        with self._lock:
+            c = self.catalog[e]
+            return c.slot if c.state == "resident" else None
 
     def expert_in(self, slot: int) -> Optional[int]:
-        return self._slot_expert[slot]
+        with self._lock:
+            return self._slot_expert[slot]
 
     @property
     def resident_experts(self) -> List[int]:
-        return [e for e in self._slot_expert if e is not None]
+        with self._lock:
+            return [e for e in self._slot_expert if e is not None]
 
     @property
     def has_wanted(self) -> bool:
-        return bool(self._wanted)
+        with self._lock:
+            return bool(self._wanted)
+
+    def total_pins(self) -> int:
+        """Sum of residency pins over the catalog (the scheduler's
+        pin-conservation check compares this against its in-flight
+        row count)."""
+        with self._lock:
+            return sum(c.pins for c in self.catalog)
 
     def acquire(self, e: int) -> int:
         """Slot serving expert ``e`` (touching its LRU clock), or queue
         the want and raise ``NotResident`` — the scheduler's
         park-and-retry backpressure signal."""
-        c = self.catalog[e]
-        if c.state == "resident":
-            c.last_used = self._tick
-            return c.slot
-        self.want(e)
-        self.stats.resident_misses += 1
-        raise NotResident(e, c.name)
+        with self._lock:
+            c = self.catalog[e]
+            if c.state == "resident":
+                c.last_used = self._tick
+                return c.slot
+            self._want_locked(e)
+            self.stats.resident_misses += 1
+            name = c.name
+        raise NotResident(e, name)
 
     def want(self, e: int) -> None:
+        with self._lock:
+            self._want_locked(e)
+
+    def _want_locked(self, e: int) -> None:
         c = self.catalog[e]
         if c.state == "resident" or e in self._wanted:
             return
@@ -345,45 +516,84 @@ class ExpertHub:
 
     def pin(self, e: int, n: int = 1) -> None:
         """Admitted rows hold their expert resident until harvested."""
-        c = self.catalog[e]
-        if c.state != "resident":
-            raise ValueError(f"pin of non-resident expert {c.name!r}")
-        c.pins += n
+        with self._lock:
+            c = self.catalog[e]
+            if c.state != "resident":
+                raise ValueError(f"pin of non-resident expert {c.name!r}")
+            c.pins += n
 
     def unpin(self, e: int, n: int = 1) -> None:
-        c = self.catalog[e]
-        if c.pins < n:
-            raise ValueError(f"unpin below zero for expert {c.name!r}")
-        c.pins -= n
+        with self._lock:
+            c = self.catalog[e]
+            if c.pins < n:
+                raise ValueError(f"unpin below zero for expert {c.name!r}")
+            c.pins -= n
 
     # -- lifecycle driver ------------------------------------------------
     def service(self, *, block: bool = False) -> int:
-        """One lifecycle round: poll staging results, commit wanted
-        experts into slots, kick prefetch for the rest. Returns commits
-        made. ``block=True`` (nothing on device to overlap with) waits
-        for the oldest in-flight staging instead of busy-spinning.
+        """One lifecycle round: surface staging failures, commit staged
+        wanted experts into slots, kick prefetch for the rest. Returns
+        commits made. ``block=True`` (nothing on device to overlap
+        with) waits on ``_cv`` for staging progress instead of
+        busy-spinning; the wait releases the lock, and a worker that
+        makes no progress within ``stage_timeout`` fails fast instead
+        of hanging the server. A recorded staging failure re-raises the
+        original exception here, on the scheduler thread — loudly, but
+        with the entry already reset to cold (retryable) by the worker.
         """
-        self._tick += 1
-        # the host-cache trim runs on EVERY exit, including the staging
-        # -failure re-raise out of _poll_staging: skipping it there let
-        # staged host copies outlive the host_cache cap for as long as
-        # a flaky cold tier kept raising (rule L005's unpaired-exit
-        # shape, found by the repro.analysis lifecycle review)
+        committed = 0
         try:
-            self._poll_staging()
-            committed = self._commit_ready()
-            self._kick_staging()
-            if block and not committed and self._wanted and self._staging:
-                futures.wait([next(iter(self._staging.values()))])
-                # _poll_staging owns failure handling: it resets a
-                # failed entry to cold (retryable) before re-raising
-                self._poll_staging()
-                committed = self._commit_ready()
+            with self._lock:
+                self._tick += 1
+                self._raise_stage_failure_locked()
+                committed = self._commit_ready_locked()
+                sync_jobs = self._kick_staging_locked()
+            # prefetch=False staging runs inline, through the exact
+            # code path the worker uses — and, like the worker, with
+            # no lock held across the checkpoint read (R003)
+            for job in sync_jobs:
+                self._stage_one(job)
+            if sync_jobs or (block and not committed):
+                with self._lock:
+                    if (block and not committed and not sync_jobs
+                            and self._wanted and self._staging
+                            and not self._stage_errors):
+                        if not self._cv.wait_for(
+                                self._progress_locked,
+                                timeout=self.stage_timeout):
+                            raise RuntimeError(
+                                "hub staging made no progress in "
+                                f"{self.stage_timeout}s — worker "
+                                "wedged? (see faulthandler dump)")
+                    self._raise_stage_failure_locked()
+                    committed += self._commit_ready_locked()
         finally:
-            self._trim_host()
+            # the host-cache trim runs on EVERY exit, including the
+            # staging-failure re-raise: skipping it there let staged
+            # host copies outlive the host_cache cap for as long as a
+            # flaky cold tier kept raising (rule L005's unpaired-exit
+            # shape, found by the repro.analysis lifecycle review)
+            with self._lock:
+                self._trim_host_locked()
         return committed
 
-    def _trim_host(self) -> None:
+    def _progress_locked(self) -> bool:
+        """service(block=True)'s wake predicate: a failure to surface,
+        a wanted expert staged and ready to commit, or nothing left in
+        flight."""
+        return (bool(self._stage_errors) or not self._staging
+                or any(self.catalog[e].state == "staged"
+                       for e in self._wanted))
+
+    def _raise_stage_failure_locked(self) -> None:
+        """Re-raise the oldest recorded staging failure (one per
+        service round: traffic keeps flowing between raises). The
+        worker already reset the entry to cold and dropped its want."""
+        if self._stage_errors:
+            _, exc = self._stage_errors.pop(0)
+            raise exc
+
+    def _trim_host_locked(self) -> None:
         """Enforce ``host_cache``: drop the host params of the least
         popular (then least recent) staged, unwanted, store-backed
         entries beyond the cap — they return to ``cold`` and re-stage
@@ -404,26 +614,7 @@ class ExpertHub:
             c.params = None
             c.state = "cold"
 
-    def _poll_staging(self) -> None:
-        for e in [e for e, f in self._staging.items() if f.done()]:
-            fut = self._staging.pop(e)
-            c = self.catalog[e]
-            try:
-                params, dt = fut.result()
-            except Exception:
-                # surface the failure loudly, but leave the entry
-                # retryable (back to cold) and drop the want so other
-                # experts' traffic keeps flowing — a sticky 'staging'
-                # state would park this expert's rows forever
-                c.state = "cold"
-                self._wanted.pop(e, None)
-                raise
-            c.params = params
-            c.state = "staged"
-            self.stats.stage_count += 1
-            self.stats.stage_ms += dt * 1e3
-
-    def _commit_ready(self) -> int:
+    def _commit_ready_locked(self) -> int:
         n = 0
         for e in list(self._wanted):
             c = self.catalog[e]
@@ -432,45 +623,132 @@ class ExpertHub:
                 continue
             if c.params is None:
                 continue                  # still cold/staging
-            slot = self._grab_slot()
+            slot = self._grab_slot_locked()
             if slot is None:
                 break                     # every slot pinned: decode on
-            self._commit(e, slot)
+            self._commit_locked(e, slot)
             self._wanted.pop(e, None)
             n += 1
         return n
 
-    def _kick_staging(self) -> None:
+    def _kick_staging_locked(self) -> List[Tuple[int, str, str]]:
+        """Queue a staging job for every wanted cold expert. With
+        prefetch the jobs go to the worker over ``_stage_q`` (spawning
+        it on first use); without, they are returned for the caller to
+        run inline *after releasing the lock* — checkpoint reads never
+        happen under ``_lock`` either way (R003)."""
+        sync_jobs: List[Tuple[int, str, str]] = []
         for e in self._wanted:
             c = self.catalog[e]
             if c.state != "cold" or e in self._staging:
                 continue
             c.state = "staging"
+            self._staging[e] = None
+            self.stats.stage_attempts += 1
+            job = (e, c.name, c.store)
             if self.prefetch:
-                if self._pool is None:
-                    self._pool = ThreadPoolExecutor(
-                        max_workers=1,
-                        thread_name_prefix="hub-stage")
-                self._staging[e] = self._pool.submit(self._stage, e)
-            else:                         # synchronous staging
-                f: Future = Future()
-                try:
-                    f.set_result(self._stage(e))
-                except Exception:
-                    c.state = "cold"      # retryable, not wedged
-                    self._wanted.pop(e, None)
-                    raise
-                self._staging[e] = f
+                self._ensure_worker_locked()
+                self._stage_q.put(job)
+            else:
+                sync_jobs.append(job)
+        return sync_jobs
 
-    def _stage(self, e: int):
-        """Worker-thread half: cold checkpoint → host numpy pytree."""
-        c = self.catalog[e]
+    def _ensure_worker_locked(self) -> None:
+        if self._stage_thread is not None:
+            return
+        if self._closed:
+            raise RuntimeError("ExpertHub is closed: no staging worker")
+        t = self._thread_factory(target=self._stage_loop,
+                                 name="hub-stage", daemon=True)
+        t.start()
+        self._stage_thread = t
+
+    # -- staging worker --------------------------------------------------
+    def _stage_loop(self) -> None:
+        """Staging-worker thread entry point (THREAD_CONTRACT thread
+        ``stager``). Jobs arrive by queue handoff — the worker never
+        reads the catalog to find its work — and ``None`` is the
+        shutdown sentinel ``close()`` sends."""
+        while True:
+            job = self._stage_q.get()
+            if job is None:
+                break
+            self._stage_one(job)
+
+    def _stage_one(self, job: Tuple[int, str, str]) -> None:
+        """Stage one expert: cold checkpoint → host numpy, then publish
+        under the hub lock. Runs on the worker thread (prefetch) or
+        inline on the scheduler thread (prefetch=False) — identical
+        protocol either way: the blocking read holds no lock, and both
+        the success publication and the failure reset are lock-guarded
+        state transitions (the pre-gate code reset failed entries to
+        cold with no lock at all — rule R001's finding)."""
+        e, name, store = job
         t0 = time.perf_counter()
-        params = ckpt_io.load_expert(c.store, c.name,
-                                     like=self._host_like)
-        return params, time.perf_counter() - t0
+        try:
+            params = ckpt_io.load_expert(store, name,
+                                         like=self._host_like)
+        except Exception as exc:
+            with self._lock:
+                self._stage_fail_locked(e, exc)
+                self._cv.notify_all()
+            return
+        ms = (time.perf_counter() - t0) * 1e3
+        with self._lock:
+            self._stage_publish_locked(e, params, ms)
+            self._cv.notify_all()
 
-    def _slot_in_wave(self, slot: int) -> bool:
+    def _stage_publish_locked(self, e: int, params: Any,
+                              ms: float) -> None:
+        c = self.catalog[e]
+        self._staging.pop(e, None)
+        c.params = params             # payload before the publish (R004)
+        c.state = "staged"
+        self.stats.stage_count += 1
+        self.stats.stage_ms += ms
+
+    def _stage_fail_locked(self, e: int,
+                           exc: BaseException) -> None:
+        """Failure is loud but retryable: the entry returns to cold
+        (not wedged in 'staging' forever with its rows parked), the
+        want drops so other experts' traffic keeps flowing, and the
+        exception is queued for service() to re-raise on the scheduler
+        thread."""
+        c = self.catalog[e]
+        self._staging.pop(e, None)
+        c.params = None
+        c.state = "cold"
+        self._wanted.pop(e, None)
+        self.stats.stage_failures += 1
+        self._stage_errors.append((e, exc))
+
+    # -- shutdown --------------------------------------------------------
+    def close(self, timeout: float = 10.0) -> None:
+        """Join the staging worker (idempotent). Sends the queue
+        sentinel, then joins with ``timeout`` — a worker that fails to
+        exit raises instead of leaking a thread silently. After close
+        the hub serves residents fine but can no longer stage cold
+        experts."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            t, self._stage_thread = self._stage_thread, None
+        if t is not None:
+            self._stage_q.put(None)
+            t.join(timeout)
+            if t.is_alive():
+                raise RuntimeError(
+                    f"hub staging worker did not exit within {timeout}s")
+
+    def __enter__(self) -> "ExpertHub":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- slot management (scheduler thread, under the hub lock) ----------
+    def _slot_in_wave_locked(self, slot: int) -> bool:
         """Whether any active wave still carries rows for ``slot``.
 
         Pins alone are not enough to gate eviction: a row's pin drops
@@ -481,22 +759,25 @@ class ExpertHub:
         """
         return any(w.uids.get(slot) for w in self.bank.core._active)
 
-    def _grab_slot(self) -> Optional[int]:
+    def _grab_slot_locked(self) -> Optional[int]:
         for s, owner in enumerate(self._slot_expert):
             if owner is None:
                 return s
         victims = [e for e in self._slot_expert
                    if e is not None and self.catalog[e].pins == 0
-                   and not self._slot_in_wave(self.catalog[e].slot)]
+                   and not self._slot_in_wave_locked(self.catalog[e].slot)]
         if not victims:
             return None
         # popularity-weighted LRU: fewest router hits first, oldest
-        # last-use breaking ties — a hot expert outlives cold ones
+        # last-use breaking ties — a hot expert outlives cold ones.
+        # The ranking reads the shared popularity Counter, which is
+        # why it must run under the hub lock (R001: submit/route feed
+        # the very same Counter)
         victim = min(victims, key=lambda e: (self.popularity[e],
                                              self.catalog[e].last_used))
-        return self._evict(victim)
+        return self._evict_locked(victim)
 
-    def _evict(self, e: int) -> int:
+    def _evict_locked(self, e: int) -> int:
         c = self.catalog[e]
         slot = c.slot
         core = self.bank.core
@@ -516,12 +797,14 @@ class ExpertHub:
         self.stats.evictions += 1
         return slot
 
-    def _commit(self, e: int, slot: int) -> None:
+    def _commit_locked(self, e: int, slot: int) -> None:
         """Host-staged params → device bank slot: one jitted donated
         per-slot scatter into the stacked params. Executables are keyed
         on the bank's (E, ...) shape only, so this never invalidates
         the prefill/decode jit caches — the no-recompile property the
-        bench asserts."""
+        bench asserts. Publication order is payload-first (R004): the
+        slot is recorded before ``state`` flips to resident, so no
+        reader can see a resident entry with ``slot == -1``."""
         c = self.catalog[e]
         core = self.bank.core
         t0 = time.perf_counter()
@@ -540,9 +823,9 @@ class ExpertHub:
         self.stats.commit_ms += (time.perf_counter() - t0) * 1e3
         self.stats.commit_count += 1
         self.stats.loads += 1
-        c.state = "resident"
         c.slot = slot
         c.last_used = self._tick
+        c.state = "resident"
         self._slot_expert[slot] = e
 
     # -- warmup ----------------------------------------------------------
@@ -580,7 +863,7 @@ class ExpertHub:
                     bank.tick()
                 bank.poll()
         if commit:
-            for e in range(min(self.n_slots, len(self.catalog))):
+            for e in range(min(self.n_slots, len(self))):
                 self.want(e)
             while self.has_wanted:
                 if not self.service(block=True):
@@ -588,20 +871,38 @@ class ExpertHub:
 
     # -- bookkeeping -----------------------------------------------------
     def check(self) -> None:
-        """Invariant sweep (tests): slot maps and catalog agree, pins
-        only on residents, wanted entries never resident."""
-        for s, e in enumerate(self._slot_expert):
-            if e is not None:
-                c = self.catalog[e]
-                assert c.state == "resident" and c.slot == s, (s, c)
-        for e, c in enumerate(self.catalog):
-            if c.state == "resident":
-                assert self._slot_expert[c.slot] == e, (e, c)
-            else:
-                assert c.slot == -1, (e, c)
-                assert c.pins == 0, f"pins on non-resident {c.name!r}"
-        assert all(self.catalog[e].state != "resident"
-                   for e in self._wanted)
+        """Invariant sweep (tests, the sanitizer, and the scheduler's
+        ``--check-invariants`` mode): slot maps and catalog agree, pins
+        only on residents, wanted entries never resident, and the
+        HubStats conservation laws hold — every load is a commit, and
+        every stage attempt is published, failed, or still in flight."""
+        with self._lock:
+            for s, e in enumerate(self._slot_expert):
+                if e is not None:
+                    c = self.catalog[e]
+                    assert c.state == "resident" and c.slot == s, (s, c)
+            for e, c in enumerate(self.catalog):
+                if c.state == "resident":
+                    assert self._slot_expert[c.slot] == e, (e, c)
+                else:
+                    assert c.slot == -1, (e, c)
+                    assert c.pins == 0, \
+                        f"pins on non-resident {c.name!r}"
+                if c.state in ("staged", "resident"):
+                    assert c.params is not None, \
+                        f"{c.state} entry {c.name!r} published no params"
+            assert all(self.catalog[e].state != "resident"
+                       for e in self._wanted)
+            st = self.stats
+            assert st.loads == st.commit_count, \
+                f"loads {st.loads} != commits {st.commit_count}"
+            in_flight = len(self._staging)
+            assert st.stage_attempts == (st.stage_count
+                                         + st.stage_failures
+                                         + in_flight), (
+                f"stage conservation broke: {st.stage_attempts} "
+                f"attempts vs {st.stage_count} published + "
+                f"{st.stage_failures} failed + {in_flight} in flight")
 
     @property
     def install_compiles(self) -> int:

@@ -18,6 +18,13 @@ machinery). Keeping the allocator free of device state makes the
 refcount / free-list invariants property-testable in isolation
 (``tests/test_paged_kv.py``).
 
+Threading ownership: every structure here — ``PagePool.refs``, the
+``_free`` stacks, the ``PrefixCache`` LRU — is **single-writer,
+scheduler thread only** (``THREAD_CONTRACT["single_writer"]`` in
+``serve/hub.py``; the hub's staging worker never reaches this module).
+None of it is locked, and ``repro.analysis races`` proves statically
+that no other thread can observe it.
+
 Layout contract (shared with ``EngineCore``):
 
   * every length bucket (and ``max_len``) is a multiple of
@@ -101,6 +108,13 @@ class PagePool:
 
     def used_count(self, e: int) -> int:
         return self.n_pages - len(self._free[e])
+
+    def counters(self) -> Dict[str, int]:
+        """Pool-wide {free, used} page totals — the conservation pair
+        the scheduler's ``--check-invariants`` mode samples (free + used
+        == E * n_pages always; ``check()`` proves the per-page books)."""
+        free = sum(len(f) for f in self._free)
+        return {"free": free, "used": self.n_experts * self.n_pages - free}
 
     def alloc(self, e: int, n: int) -> List[int]:
         """Take ``n`` pages for expert ``e`` (each at refcount 1), or

@@ -21,8 +21,10 @@ see ``ExpertMatcher.coarse_scores``), otherwise the vmapped reference.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import hashlib
+import threading
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -103,8 +105,12 @@ class Router:
         self.stats = {"routed": 0, "cache_hits": 0, "score_calls": 0}
         # per-expert top-1 hit counts — the popularity signal the expert
         # hub's eviction policy reads (ExpertHub.bind_popularity shares
-        # this very Counter, so routing decisions feed residency)
+        # this very Counter, so routing decisions feed residency).
+        # Once hub-bound the Counter is cross-thread shared state:
+        # bind_popularity(..., router=self) installs the hub lock here
+        # and route() increments under it (rule R001)
         self.expert_hits: collections.Counter = collections.Counter()
+        self.hits_lock: Optional[threading.Lock] = None
         self._coarse = jax.jit(matcher.assign_coarse_topk)
         self._fine_ref = jax.jit(matcher.assign_fine)
         # encode a group under ONE expert's AE (params sliced by index)
@@ -189,8 +195,10 @@ class Router:
 
         self.stats["routed"] += B
         self.stats["cache_hits"] += hits
-        for e in coarse[:, 0]:
-            self.expert_hits[int(e)] += 1
+        with (self.hits_lock if self.hits_lock is not None
+              else contextlib.nullcontext()):
+            for e in coarse[:, 0]:
+                self.expert_hits[int(e)] += 1
         shard = None
         if self.shard_of is not None:
             shard = np.asarray([self.shard_of.get(int(e), -1)

@@ -75,6 +75,12 @@ class SchedulerConfig:
     max_queue: int = 4096           # admission queue cap (backpressure)
     promote_after: int = 4          # rounds a waiting bucket may be
     #                                 skipped before it wins admission
+    check_every: int = 0            # >0: run check_invariants() every N
+    #                                 steps (PagePool.check + hub state
+    #                                 machine + pin conservation) — the
+    #                                 sanitizer's invariants under real
+    #                                 traffic (serving_bench
+    #                                 --check-invariants)
 
 
 @dataclasses.dataclass
@@ -176,7 +182,8 @@ class Scheduler:
         self.stats = {"submitted": 0, "rejected": 0, "batches": 0,
                       "ticks": 0, "responses": 0, "promotions": 0,
                       "orphaned": 0, "kv_stalls": 0,
-                      "resident_stalls": 0}
+                      "resident_stalls": 0, "invariant_checks": 0}
+        self._steps = 0
         self._done: List[Response] = []
         self._meta: Dict[int, _Pending] = {}   # uid -> routing info
         # prompt-prefix cohort detection: keyed at the page granularity
@@ -223,8 +230,6 @@ class Scheduler:
         routed = self.router.route(np.stack(
             [requests[i].features for i in miss])) if miss else None
         routed_at = {i: j for j, i in enumerate(miss)}
-        pop = (self.router.expert_hits if self.router is not None
-               else self.hub.popularity if self.hub is not None else None)
         top_k = routed.coarse.shape[1] if routed is not None else 1
         admitted = 0
         for i, r in enumerate(requests):
@@ -235,8 +240,15 @@ class Scheduler:
                                      f"range [0, {len(self.registry)})")
                 scores = np.zeros(top_k, np.float32)
                 sid = self._shard_of.get(e, -1)
-                if pop is not None:
-                    pop[e] += 1       # router.route counts its own rows
+                # router.route counts its own rows; pre-routed hits go
+                # through the hub's locked mutation point — the shared
+                # popularity Counter races with the eviction ranking
+                # otherwise (races.py R001; the sanitizer's lost-update
+                # seed demonstrates the dropped increments)
+                if self.hub is not None:
+                    self.hub.note_hit(e)
+                elif self.router is not None:
+                    self.router.expert_hits[e] += 1
             else:
                 j = routed_at[i]
                 e = int(routed.coarse[j, 0])
@@ -268,6 +280,10 @@ class Scheduler:
         self._harvest()
         out, self._done = self._done, []
         self.stats["responses"] += len(out)
+        self._steps += 1
+        if (self.config.check_every
+                and self._steps % self.config.check_every == 0):
+            self.check_invariants()
         return out
 
     def drain(self) -> List[Response]:
@@ -285,6 +301,34 @@ class Scheduler:
         # engine's finished buffer — they still need a harvest step
         return any(eng is not None and eng.has_pending
                    for eng in map(self._shard_engine, self.shards))
+
+    def check_invariants(self) -> None:
+        """The sanitizer's conservation invariants, under real traffic:
+        page-pool refcount books balance (``PagePool.check``), the hub
+        catalog/slot state machine is legal (``ExpertHub.check``), and
+        residency pins conserve — every pin is held by exactly one
+        in-flight admitted row, so pins == in-flight - queued. Enabled
+        every N steps via ``SchedulerConfig.check_every`` (the bench's
+        ``--check-invariants`` flag)."""
+        for shard in self.shards:
+            eng = self._shard_engine(shard)
+            if eng is not None and \
+                    getattr(eng, "kv_layout", "ring") == "paged":
+                eng.core.pool.check()
+        if self.hub is not None:
+            self.hub.check()
+            pins = self.hub.total_pins()
+            in_flight = len(self._meta) - self.n_queued
+            assert pins == in_flight, (
+                f"pin conservation broke: hub holds {pins} pins but "
+                f"{in_flight} rows are admitted and unharvested")
+        self.stats["invariant_checks"] += 1
+
+    def close(self) -> None:
+        """Shut down background machinery (the hub's staging worker);
+        idempotent, safe without a hub."""
+        if self.hub is not None:
+            self.hub.close()
 
     # -- internals -------------------------------------------------------
     def _shard_engine(self, shard: Shard):
@@ -621,7 +665,8 @@ class RoutedServer:
                  use_fine_kernel: bool = True,
                  placement: Optional[PlacementPlan] = None,
                  executor: "str | DispatchExecutor" = "overlapped",
-                 hub: Optional[ExpertHub] = None):
+                 hub: Optional[ExpertHub] = None,
+                 check_every: int = 0):
         self.matcher = matcher
         self.registry = registry
         self.placement = placement
@@ -640,12 +685,26 @@ class RoutedServer:
                 shard_of=placement.shard_of if placement else None)
         if hub is not None and self.router is not None:
             # routing decisions feed residency: the eviction policy
-            # reads the very Counter route() increments
-            hub.bind_popularity(self.router.expert_hits)
+            # reads the very Counter route() increments — which makes
+            # that Counter cross-thread state, so the router's own
+            # increments take the hub lock from here on (hits_lock)
+            hub.bind_popularity(self.router.expert_hits,
+                                router=self.router)
         self.scheduler = Scheduler(self.router, registry,
-                                   SchedulerConfig(max_batch=max_batch),
+                                   SchedulerConfig(max_batch=max_batch,
+                                                   check_every=check_every),
                                    placement=placement,
                                    executor=executor, hub=hub)
+
+    def close(self) -> None:
+        """Join background threads (hub staging worker); idempotent."""
+        self.scheduler.close()
+
+    def __enter__(self) -> "RoutedServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def submit(self, requests: Sequence[Request]) -> int:
         return self.scheduler.submit(requests)

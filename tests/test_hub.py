@@ -470,3 +470,91 @@ def test_hub_wiring_guards(model, params4):
         ExpertHub(model, n_slots=1, max_len=32).add_expert("ghost")
     with pytest.raises(ValueError, match="n_slots"):
         ExpertHub(model, n_slots=0, max_len=32)
+
+
+# -- worker lifecycle / thread hygiene --------------------------------------
+
+
+@pytest.fixture(autouse=True, scope="module")
+def no_dangling_nondaemon_threads():
+    """Concurrency-gate satellite: nothing in this module may leak a
+    non-daemon thread (a leaked staging worker would hang interpreter
+    shutdown). Baselined against the threads alive before the module."""
+    import threading
+    before = {t.ident for t in threading.enumerate()}
+    yield
+    leaked = [t for t in threading.enumerate()
+              if t.ident not in before and t.is_alive() and not t.daemon]
+    assert leaked == [], f"non-daemon threads leaked: {leaked}"
+
+
+def test_hub_close_joins_worker_and_is_idempotent(tmp_path, model, params4):
+    import threading
+    root = str(tmp_path / "store")
+    for i, p in enumerate(params4):
+        save_expert(root, f"ex{i}", p)
+    hub = ExpertHub(model, n_slots=2, max_len=32, store=root,
+                    prefetch=True)
+    for i in range(4):
+        hub.add_expert(f"ex{i}")
+    hub.want(2)
+    hub.service(block=True)
+    assert hub.expert_in(hub.slot_of(2)) == 2
+    worker = hub._stage_thread
+    assert worker is not None and worker.is_alive()
+    assert worker.name == "hub-stage"
+
+    hub.close()
+    assert not worker.is_alive(), "close() returned with the worker alive"
+    hub.close()                                        # idempotent
+    assert hub._stage_thread is None
+
+    # a closed hub still serves residents but refuses to stage
+    assert hub.acquire(2) == hub.slot_of(2)
+    hub.want(3)
+    with pytest.raises(RuntimeError, match="closed"):
+        hub.service(block=True)
+
+
+def test_hub_context_manager_closes(tmp_path, model, params4):
+    root = str(tmp_path / "store")
+    for i, p in enumerate(params4):
+        save_expert(root, f"ex{i}", p)
+    with ExpertHub(model, n_slots=2, max_len=32, store=root,
+                   prefetch=True) as hub:
+        for i in range(4):
+            hub.add_expert(f"ex{i}")
+        hub.want(0)
+        hub.service(block=True)
+        worker = hub._stage_thread
+        assert worker is not None and worker.is_alive()
+    assert hub._closed and not worker.is_alive()
+
+
+def test_popularity_counter_reads_under_hub_lock(model, params4):
+    """Seeded regression for the unguarded popularity read (races
+    R001): once bind_popularity shares the router Counter, the
+    router's hit increments take the hub lock, so an eviction ranking
+    running concurrently can never see torn counts. Locking is
+    structural (the router is handed the hub lock), so assert the
+    wiring rather than racing the threads — the sanitizer's
+    demo_lost_update covers the dynamic half."""
+    hub = _mk_hub(model, params4, n_slots=2)
+    try:
+        import collections
+        from repro.serve.router import Router
+
+        class _Stub(Router):
+            def __init__(self):
+                self.expert_hits = collections.Counter()
+                self.hits_lock = None
+
+        router = _Stub()
+        hub.bind_popularity(router.expert_hits, router=router)
+        assert router.hits_lock is hub._lock
+        assert hub.popularity is router.expert_hits
+        # note_hit goes through the same lock-guarded counter
+        hub.note_hit(1, 3)
+        assert router.expert_hits[1] == 3
+    finally:
+        hub.close()

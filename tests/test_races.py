@@ -1,0 +1,255 @@
+"""Static lockset/race pass (rules R001-R004).
+
+Two halves, mirroring the other analysis-pass tests:
+
+  * the real serving unit (hub / scheduler / kvcache) is clean — the
+    refactored expert lifecycle honours its own THREAD_CONTRACT;
+  * every rule fires on a planted synthetic unit and stays quiet on
+    the matching clean variant, so the checker's teeth are themselves
+    under test.
+
+The planted units are tiny self-contained modules sharing one contract
+header; ``analyze_unit`` consumes {path: source} directly, so no files
+are written.
+"""
+import textwrap
+
+from repro.analysis import races
+from repro.analysis.races import analyze_unit
+
+CONTRACT = textwrap.dedent('''
+    THREAD_CONTRACT = {
+        "lock": "_lock",
+        "lock_aliases": ["_lock", "_cv"],
+        "threads": {
+            "scheduler": ["Hub.step"],
+            "stager": ["Hub._stage_loop"],
+        },
+        "lock_guarded": {
+            "fields": ["catalog", "_wanted"],
+            "entry_fields": ["state", "params", "slot"],
+            "stats_fields": ["loads"],
+        },
+        "queue_handoffs": ["_stage_q"],
+        "single_writer": {"scheduler": ["_index"]},
+        "blocking_calls": ["load_expert", "join", "sleep", "wait"],
+        "publish_order": {"state": {"staged": ["params"],
+                                    "resident": ["slot"]}},
+    }
+''')
+
+CLEAN = CONTRACT + textwrap.dedent('''
+    class Hub:
+        def __init__(self):
+            self._wanted = {}
+            self.catalog = []
+            self._index = {}
+
+        def step(self, e):
+            with self._lock:
+                self._wanted[e] = True
+                c = self.catalog[e]
+                c.slot = e
+                c.state = "resident"
+            self._index[e] = 1
+
+        def _stage_loop(self):
+            job = self._stage_q.get()
+            p = load_expert(job)
+            with self._lock:
+                c = self.catalog[job]
+                c.params = p
+                c.state = "staged"
+                self.stats.loads += 1
+                self._cv.wait(1.0)
+''')
+
+
+def _check(src):
+    return analyze_unit({"unit/hub.py": src})
+
+
+def _rules(vs):
+    return sorted({v.rule for v in vs})
+
+
+# -- the real unit -----------------------------------------------------
+
+
+def test_repo_unit_is_clean():
+    assert races.run() == []
+
+
+def test_repo_contract_is_declared_and_literal():
+    sources = {}
+    import os
+    for rel in races.DEFAULT_UNIT:
+        with open(os.path.join(races.REPO_ROOT, rel)) as fh:
+            sources[rel] = fh.read()
+    contract, path, _ = races._find_contract(sources)
+    assert path == "src/repro/serve/hub.py"
+    assert contract is not None
+    for key in ("lock", "threads", "lock_guarded", "single_writer",
+                "queue_handoffs", "blocking_calls", "publish_order"):
+        assert key in contract, key
+    assert set(contract["threads"]) == {"scheduler", "stager"}
+
+
+# -- planted positives / clean negatives -------------------------------
+
+
+def test_clean_synthetic_unit():
+    assert _check(CLEAN) == []
+
+
+def test_missing_contract_is_r001():
+    vs = _check("class Hub:\n    pass\n")
+    assert _rules(vs) == ["R001"]
+    assert "THREAD_CONTRACT" in vs[0].msg
+
+
+def test_non_literal_contract_is_r001():
+    vs = _check("THREAD_CONTRACT = {'lock': make_lock()}\n")
+    assert _rules(vs) == ["R001"]
+    assert "literal" in vs[0].msg
+
+
+def test_r001_unguarded_lock_guarded_field():
+    src = CLEAN.replace(
+        "        self._index[e] = 1",
+        "        self._index[e] = 1\n"
+        "        self._wanted.pop(e, None)")
+    vs = _check(src)
+    assert any(v.rule == "R001" and "_wanted" in v.msg for v in vs)
+
+
+def test_r001_unguarded_entry_field():
+    src = CLEAN.replace(
+        "        self._index[e] = 1",
+        "        self._index[e] = 1\n"
+        "        self.catalog[e].state = 'cold'")
+    vs = _check(src)
+    # the unlocked catalog access and the unlocked entry-state write
+    assert any(v.rule == "R001" and "'state'" in v.msg for v in vs)
+
+
+def test_r001_single_writer_reached_from_wrong_thread():
+    src = CLEAN.replace(
+        "            self.stats.loads += 1",
+        "            self.stats.loads += 1\n"
+        "            n = len(self._index)")
+    vs = _check(src)
+    assert any(v.rule == "R001" and "single-writer" in v.msg
+               for v in vs)
+
+
+def test_r001_locked_helper_called_without_lock():
+    src = CLEAN.replace(
+        "        self._index[e] = 1",
+        "        self._index[e] = 1\n"
+        "        self._drop_locked(e)") + textwrap.dedent('''
+        class Hub2(Hub):
+            def _drop_locked(self, e):
+                pass
+    ''')
+    vs = _check(src)
+    assert any(v.rule == "R001" and "_locked" in v.msg for v in vs)
+
+
+def test_r001_shared_attr_missing_from_contract():
+    src = CLEAN.replace(
+        "        self._index[e] = 1",
+        "        self._index[e] = 1\n"
+        "        self._scratch = e").replace(
+        "            self._cv.wait(1.0)",
+        "            self._cv.wait(1.0)\n"
+        "            x = self._scratch")
+    vs = _check(src)
+    assert any(v.rule == "R001" and "_scratch" in v.msg
+               and "no THREAD_CONTRACT category" in v.msg for v in vs)
+
+
+def test_r001_contract_drift_on_dead_entry_point():
+    src = CLEAN.replace('"Hub.step"', '"Hub.step_gone"')
+    vs = _check(src)
+    assert any(v.rule == "R001" and "drift" in v.msg for v in vs)
+
+
+def test_r002_reacquire_designated_lock():
+    src = CLEAN.replace(
+        "            c.state = \"resident\"",
+        "            c.state = \"resident\"\n"
+        "            with self._lock:\n"
+        "                pass")
+    vs = _check(src)
+    assert any(v.rule == "R002" and "re-acquiring" in v.msg for v in vs)
+
+
+def test_r002_transitive_self_deadlock():
+    src = CLEAN.replace(
+        "            c.state = \"resident\"",
+        "            c.state = \"resident\"\n"
+        "            self.helper()") + textwrap.dedent('''
+        class Hub3(Hub):
+            def helper(self):
+                with self._lock:
+                    pass
+    ''')
+    vs = _check(src)
+    assert any(v.rule == "R002" and "transitive" in v.msg for v in vs)
+
+
+def test_r002_inconsistent_lock_order():
+    src = CLEAN + textwrap.dedent('''
+        class Two:
+            def ab(self):
+                with self.a_lock:
+                    with self.b_lock:
+                        pass
+
+            def ba(self):
+                with self.b_lock:
+                    with self.a_lock:
+                        pass
+    ''')
+    vs = _check(src)
+    assert any(v.rule == "R002" and "inconsistent lock order" in v.msg
+               for v in vs)
+
+
+def test_r003_blocking_io_under_lock():
+    src = CLEAN.replace(
+        "        p = load_expert(job)\n"
+        "        with self._lock:",
+        "        with self._lock:\n"
+        "            p = load_expert(job)")
+    vs = _check(src)
+    assert any(v.rule == "R003" and "load_expert" in v.msg for v in vs)
+
+
+def test_r003_condition_wait_is_exempt():
+    # CLEAN already waits on self._cv (a designated-lock alias) while
+    # holding the lock: a cv wait *releases* the lock, so no R003
+    assert not any(v.rule == "R003" for v in _check(CLEAN))
+
+
+def test_r004_publish_before_payload():
+    src = CLEAN.replace(
+        "            c.params = p\n"
+        "            c.state = \"staged\"",
+        "            c.state = \"staged\"\n"
+        "            c.params = p")
+    vs = _check(src)
+    assert any(v.rule == "R004" and "half-constructed" in v.msg
+               for v in vs)
+
+
+def test_r004_publish_after_payload_cleared():
+    src = CLEAN.replace(
+        "            c.params = p\n"
+        "            c.state = \"staged\"",
+        "            c.params = None\n"
+        "            c.state = \"staged\"")
+    vs = _check(src)
+    assert any(v.rule == "R004" and "cleared to None" in v.msg
+               for v in vs)

@@ -1,0 +1,164 @@
+"""Deterministic schedule fuzzer (rules S001-S002).
+
+The suite is armed with a faulthandler hard timeout: a real deadlock
+in the cooperative scheduler dumps every thread's stack and kills the
+run instead of hanging CI (the interleaver's own structural deadlock
+detection plus its watchdog should always fire first — the
+faulthandler is the backstop behind the backstop).
+"""
+import faulthandler
+import threading
+
+import pytest
+
+from repro.analysis import sanitizer as S
+
+SUITE_TIMEOUT = 240.0
+
+
+@pytest.fixture(autouse=True, scope="module")
+def hard_timeout():
+    on_main = threading.current_thread() is threading.main_thread()
+    if on_main:
+        faulthandler.dump_traceback_later(SUITE_TIMEOUT, exit=True)
+    yield
+    if on_main:
+        faulthandler.cancel_dump_traceback_later()
+
+
+# -- determinism -------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_replay_is_byte_deterministic(seed):
+    r1 = S.fuzz_hub(seed)
+    r2 = S.fuzz_hub(seed)
+    assert r1.trace == r2.trace, S._diverge(r1.trace, r2.trace)
+    assert r1.failures == [] and r2.failures == []
+    assert r1.errors == [] and r2.errors == []
+    # the workload really exercised the lifecycle
+    assert r1.stats["loads"] >= 1
+
+
+def test_different_seeds_take_different_schedules():
+    assert S.fuzz_hub(0).trace != S.fuzz_hub(1).trace
+
+
+# -- the planted negative ----------------------------------------------
+
+
+def test_planted_lost_update_reproduces_under_documented_seed():
+    got, want, tr1 = S.demo_lost_update(S.LOST_UPDATE_SEED,
+                                        locked=False)
+    assert got < want, (
+        f"the planted unlocked read-modify-write conserved ({got} of "
+        f"{want}) under seed {S.LOST_UPDATE_SEED} — the sanitizer "
+        "lost its teeth")
+    _, _, tr2 = S.demo_lost_update(S.LOST_UPDATE_SEED, locked=False)
+    assert tr1 == tr2
+
+
+def test_planted_lost_update_fixed_by_lock():
+    got, want, _ = S.demo_lost_update(S.LOST_UPDATE_SEED, locked=True)
+    assert got == want
+
+
+# -- lifecycle invariants under interleavings --------------------------
+
+
+def test_staging_failure_path_recovers(tmp_path):
+    """Seeded regression for the staging-failure fix: the missing
+    expert's load fails mid-fuzz; the worker's cold reset must happen
+    under the hub lock, the failure must re-raise on the scheduler
+    side, and every conservation invariant must still hold after."""
+    r = S.fuzz_hub(S.FAIL_SEED, fail_expert=True)
+    assert r.stats["stage_failures"] >= 1, \
+        "workload never wanted the broken expert — dead seed"
+    assert r.failures == []
+    assert r.errors and set(r.errors) == {"FileNotFoundError"}
+    # and the failure path replays deterministically too
+    assert r.trace == S.fuzz_hub(S.FAIL_SEED, fail_expert=True).trace
+
+
+def test_fuzz_leaves_no_threads_behind():
+    before = {t.ident for t in threading.enumerate()}
+    S.fuzz_hub(3)
+    leftover = [t for t in threading.enumerate()
+                if t.ident not in before and t.is_alive()]
+    assert leftover == [], leftover
+
+
+# -- scheduler machinery -----------------------------------------------
+
+
+def test_deadlock_is_detected_not_hung():
+    """Classic ABBA deadlock, forced via queue rendezvous so it occurs
+    under every seed: the interleaver must abort structurally (no
+    runnable thread) instead of wedging."""
+    itl = S.Interleaver(0, watchdog=10.0)
+    l1, l2 = S.ShimLock(itl), S.ShimLock(itl)
+    q1, q2 = S.ShimQueue(itl), S.ShimQueue(itl)
+
+    def peer_fn():
+        with l2:
+            q1.put(1)
+            q2.get()
+            l1.acquire()
+
+    peer = S._ManagedThread(itl, target=peer_fn, name="peer")
+
+    def driver():
+        peer.start()
+        with l1:
+            q1.get()
+            q2.put(1)
+            l2.acquire()
+
+    with pytest.raises(S._AbortError, match="deadlock"):
+        itl.run(driver)
+    itl.shutdown()
+    assert "deadlock" in itl.aborted
+
+
+def test_shim_lock_enforces_mutual_exclusion():
+    itl = S.Interleaver(5)
+    lock = S.ShimLock(itl)
+    out = []
+
+    def peer_fn():
+        for _ in range(5):
+            with lock:
+                out.append(("peer", lock.owner))
+                itl.yield_point("peer-crit")
+                assert lock.owner == "peer"
+
+    peer = S._ManagedThread(itl, target=peer_fn, name="peer")
+
+    def driver():
+        peer.start()
+        for _ in range(5):
+            with lock:
+                out.append(("main", lock.owner))
+                itl.yield_point("main-crit")
+                assert lock.owner == "main"
+        peer.join()
+
+    itl.run(driver)
+    itl.shutdown()
+    assert len(out) == 10
+    assert all(who == owner for who, owner in out)
+
+
+def test_instrument_refuses_after_worker_spawn():
+    class FakeHub:
+        _stage_thread = object()
+
+    with pytest.raises(RuntimeError, match="too late"):
+        S.instrument(FakeHub(), S.Interleaver(0))
+
+
+# -- the pass ----------------------------------------------------------
+
+
+def test_sanitizer_pass_is_clean():
+    assert S.run(seeds=(0,)) == []
