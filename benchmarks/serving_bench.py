@@ -19,6 +19,18 @@ Traffic scenarios (the ISSUE's acceptance matrix):
              cohort prefills and serves repeats from the prefix cache,
              so prefill tokens *computed* drop strictly below prefill
              tokens *submitted* — the CI-asserted savings signal.
+  long-prompt (``--workload long-prompt``) — mixed-length Poisson
+             traffic where every few requests is a *whale* (a prompt
+             near ``max_len``, far past ``chunk_len``). The bench runs
+             the identical stream against a chunked server (suffix
+             chunks budgeted per step via
+             ``SchedulerConfig.prefill_tokens_per_step``) and a
+             monolithic reference, asserts token identity, and reports
+             the p99 latency of the *short* (decode-dominated)
+             requests on both — the disaggregation signal: with
+             chunking, decode ticks keep running while a whale
+             prefills, so the short-request tail stays bounded
+             (asserted, and emitted to the ``--json`` payload).
   zipf (``--hub``) — the long-tail catalog workload: ``--n-experts N``
              experts served through an ExpertHub with only
              ``--resident K`` device slots (N >> K). Traffic is one
@@ -61,7 +73,8 @@ reported per scenario and in ``--json`` output.
   PYTHONPATH=src python benchmarks/serving_bench.py [--requests 60] \
       [--placement {per-device,banked}] [--devices 8] \
       [--executor {serial,overlapped}] [--kv {ring,paged}] \
-      [--workload {standard,shared-prefix}] [--json OUT.json] \
+      [--workload {standard,shared-prefix,long-prompt}] \
+      [--chunk-len 32 --prefill-budget 32] [--json OUT.json] \
       [--hub --n-experts 64 --resident 8]
 
 Output: one CSV-ish line per scenario,
@@ -87,7 +100,9 @@ DATASETS = ["mnist", "har", "reuters"]
 
 def build_server(n_per_dataset: int, epochs: int, max_batch: int,
                  placement: str, executor: str = "overlapped",
-                 kv: str = "ring", check_every: int = 0):
+                 kv: str = "ring", check_every: int = 0,
+                 max_len: int = 64, chunk_len: "int | None" = None,
+                 prefill_budget: int = 0):
     import jax
     from repro.configs import get_config
     from repro.core import ExpertRegistry, build_matcher, train_bank
@@ -108,8 +123,8 @@ def build_server(n_per_dataset: int, epochs: int, max_batch: int,
         cfg = get_config("smollm-135m").reduced(name=f"expert-{n}")
         model = build_model(cfg)
         registry.add(n, ExpertEngine(
-            model, model.init(jax.random.PRNGKey(i)), max_len=64,
-            kv_layout=kv))
+            model, model.init(jax.random.PRNGKey(i)), max_len=max_len,
+            kv_layout=kv, chunk_len=chunk_len))
     plan = None
     if placement == "banked":
         mesh = make_expert_mesh()
@@ -120,7 +135,8 @@ def build_server(n_per_dataset: int, epochs: int, max_batch: int,
             print(f"#   {line}", flush=True)
     server = RoutedServer(matcher, registry, max_batch=max_batch,
                           placement=plan, executor=executor,
-                          check_every=check_every)
+                          check_every=check_every,
+                          prefill_tokens_per_step=prefill_budget)
     return server, bench, names
 
 
@@ -194,6 +210,11 @@ def total_decode_compiles(server) -> int:
     return sum(e.decode_compiles for e in _engine_stats(server))
 
 
+def total_suffix_compiles(server) -> int:
+    """Suffix-chunk executables (zero on unchunked/ring engines)."""
+    return sum(e.suffix_compiles for e in _engine_stats(server))
+
+
 def total_host_blocks(server) -> int:
     """Host-blocking device→host syncs across all engines (the
     executor-sensitive counter: serial blocks once per decode tick per
@@ -235,16 +256,21 @@ def assert_bounded_compiles(server) -> None:
               "(>= semantics: a lower bound on real executables). The "
               "ladder bound below still holds, but silent per-wrapper "
               "recompiles cannot be detected.", flush=True)
-    cores = [s.bank for s in server.scheduler.shards if s.banked]
-    cores += [b for b in (server.registry[e].backend
-                          for e in range(len(server.registry)))
+    cores = [s.bank.core for s in server.scheduler.shards if s.banked]
+    cores += [b.core for b in (server.registry[e].backend
+                               for e in range(len(server.registry)))
               if isinstance(b, ExpertEngine)]
-    p_bound = sum(len(c.len_buckets) * len(c.batch_buckets) for c in cores)
-    d_bound = sum(len(c.batch_buckets) for c in cores)
-    got_p, got_d = total_prefill_compiles(server), total_decode_compiles(server)
-    assert got_p <= p_bound and got_d <= d_bound, (
+    bounds = [c.executable_bounds() for c in cores]
+    p_bound = sum(b["prefill"] for b in bounds)
+    s_bound = sum(b["suffix"] for b in bounds)
+    d_bound = sum(b["decode"] for b in bounds)
+    got_p = total_prefill_compiles(server)
+    got_s = total_suffix_compiles(server)
+    got_d = total_decode_compiles(server)
+    assert got_p <= p_bound and got_s <= s_bound and got_d <= d_bound, (
         f"compile bound violated: {got_p} prefill (bound {p_bound}), "
-        f"{got_d} decode (bound {d_bound}) real executables")
+        f"{got_s} suffix (bound {s_bound}), {got_d} decode (bound "
+        f"{d_bound}) real executables")
 
 
 def arrivals_for(scenario: str, n: int, rate: float,
@@ -290,14 +316,45 @@ def cohort_requests(bench, names, n: int, rng) -> list:
     return reqs
 
 
+def long_prompt_requests(bench, names, n: int, rng,
+                         max_len: int = 128,
+                         whale_every: int = 6) -> "tuple[list, set]":
+    """Mixed-length traffic: mostly short decode-dominated requests,
+    with every ``whale_every``-th request a whale prompt near
+    ``max_len`` (far past ``chunk_len``, so it prefills through the
+    suffix-chunk ladder). Returns (requests, whale_uids) — the bench
+    reports decode-tail latency over the *non*-whale uids."""
+    from repro.serve import Request
+    reqs, whales = [], set()
+    for uid in range(n):
+        x, _ = bench[names[uid % len(names)]]["client_a"]
+        if uid % whale_every == whale_every - 1:
+            size = int(rng.integers(3 * max_len // 4, max_len - 7))
+            max_new = int(rng.integers(2, 5))
+            whales.add(uid)
+        else:
+            size = int(rng.integers(3, 25))
+            max_new = int(rng.integers(2, 11))
+        reqs.append(Request(
+            uid=uid, features=x[int(rng.integers(len(x)))],
+            prompt=rng.integers(0, 100, size=size),
+            max_new_tokens=max_new))
+    return reqs, whales
+
+
 def run_scenario(scenario: str, server, bench, names,
                  n: int, rate: float, seed: int,
                  reqs: "list | None" = None,
-                 collect: "dict | None" = None) -> dict:
+                 collect: "dict | None" = None,
+                 whale_uids: "set | None" = None) -> dict:
     """Drive one scenario. ``reqs`` overrides the generated request
     stream (the hub bench feeds both servers the identical stream);
     ``collect`` (a dict) captures uid -> (expert, tokens) for token-
-    identity comparison across servers."""
+    identity comparison across servers; ``whale_uids`` splits the
+    latency report — the result gains ``decode_p50_ms``/
+    ``decode_p99_ms`` over the non-whale uids, plus counters for how
+    many steps ran with prefill chunks pending and how many of those
+    also advanced a decode wave (the disaggregation signal)."""
     import jax
     from repro.serve import Request
     rng = np.random.default_rng(seed)
@@ -319,6 +376,7 @@ def run_scenario(scenario: str, server, bench, names,
                 max_new_tokens=int(rng.integers(2, 12))))
 
     now, i, done_at = 0.0, 0, {}
+    chunk_steps, overlap_steps = 0, 0
     sched = server.scheduler
     batches0 = sched.stats["batches"]
     stalls0 = sched.stats["kv_stalls"]
@@ -336,6 +394,11 @@ def run_scenario(scenario: str, server, bench, names,
         if not sched.has_work:
             now = max(now, t_arr[i])  # idle: jump to next arrival
             continue
+        pending_chunks = any(
+            eng is not None and getattr(eng, "core", None) is not None
+            and eng.core.has_pending_chunks
+            for eng in map(sched._shard_engine, sched.shards))
+        ticks0 = sched.stats["ticks"]
         t0 = time.perf_counter()
         resps = sched.step()
         # charge device completion of every harvested response to this
@@ -347,6 +410,10 @@ def run_scenario(scenario: str, server, bench, names,
         # the async executor exists to provide.
         jax.block_until_ready([r.tokens for r in resps])
         now += time.perf_counter() - t0
+        if pending_chunks:
+            chunk_steps += 1
+            if sched.stats["ticks"] > ticks0:
+                overlap_steps += 1
         for r in resps:  # completed during this step
             done_at[r.uid] = now
             if collect is not None:
@@ -355,7 +422,15 @@ def run_scenario(scenario: str, server, bench, names,
     toks = total_tokens(server) - tokens0
     blocks = total_host_blocks(server) - blocks0
     pf1 = total_prefill_tokens(server)
-    return {"scenario": scenario, "n": n,
+    extra = {}
+    if whale_uids is not None:
+        dec = np.asarray([done_at[u] - t_arr[u] for u in range(n)
+                          if u not in whale_uids])
+        extra = {"decode_p50_ms": float(np.percentile(dec, 50) * 1e3),
+                 "decode_p99_ms": float(np.percentile(dec, 99) * 1e3),
+                 "prefill_chunk_steps": chunk_steps,
+                 "decode_overlap_steps": overlap_steps}
+    return {**extra, "scenario": scenario, "n": n,
             "throughput_rps": n / max(now, 1e-9),
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p95_ms": float(np.percentile(lat, 95) * 1e3),
@@ -495,6 +570,110 @@ def run_hub_bench(args) -> None:
     base_srv.close()
 
 
+def run_long_prompt_bench(args) -> None:
+    """The whale-prompt disaggregation benchmark: one mixed short/whale
+    Poisson stream against a chunked server (suffix prefill, per-step
+    chunk budget) and a monolithic reference built from identical
+    params. Asserts token identity, that decode waves advanced while
+    whale chunks were pending, and that the short-request (decode) p99
+    stays bounded relative to the monolithic reference — the numbers
+    and the bound land in the ``--json`` payload for CI."""
+    from repro.serve import Request
+
+    cl = args.chunk_len or 32
+    budget = args.prefill_budget or cl
+    max_len = 128
+    t0 = time.time()
+    server, bench, names = build_server(
+        args.n_per_dataset, args.epochs, args.max_batch, args.placement,
+        args.executor, "paged", check_every=args.check_invariants,
+        max_len=max_len, chunk_len=cl, prefill_budget=budget)
+    mono, _, _ = build_server(
+        args.n_per_dataset, args.epochs, args.max_batch, args.placement,
+        args.executor, "paged", check_every=args.check_invariants,
+        max_len=max_len)
+    print(f"# long-prompt servers up in {time.time()-t0:.1f}s "
+          f"(chunk_len={cl}, prefill budget={budget} tok/step, "
+          f"max_len={max_len}, placement={args.placement}, "
+          f"executor={args.executor})", flush=True)
+
+    # warm both servers' hot ladder points (one whale + one short per
+    # expert) so the measured run charges the same residual compiles
+    # to both sides
+    wrng = np.random.default_rng(1)
+    warm = []
+    for k in range(len(names)):
+        x = bench[names[k]]["client_a"][0]
+        warm.append(Request(uid=-(2 * k + 1), features=x[k],
+                            prompt=wrng.integers(0, 100, size=max_len - 8),
+                            max_new_tokens=2))
+        warm.append(Request(uid=-(2 * k + 2), features=x[k + 1],
+                            prompt=wrng.integers(0, 100, size=12),
+                            max_new_tokens=4))
+    server.serve(list(warm))
+    mono.serve(list(warm))
+    print("# warmup done", flush=True)
+
+    rng = np.random.default_rng(args.seed)
+    reqs, whales = long_prompt_requests(bench, names, args.requests,
+                                        rng, max_len=max_len)
+    got, want = {}, {}
+    print(_CSV_HEADER)
+    r = run_scenario("long-prompt", server, bench, names, args.requests,
+                     args.rate, args.seed, reqs=reqs, collect=got,
+                     whale_uids=whales)
+    print(_csv_row(r, args), flush=True)
+    rm = run_scenario("long-prompt-mono", mono, bench, names,
+                      args.requests, args.rate, args.seed, reqs=reqs,
+                      collect=want, whale_uids=whales)
+    print(_csv_row(rm, args), flush=True)
+
+    diverged = [u for u in want if got.get(u) != want[u]]
+    assert not diverged, (
+        f"chunked server diverged from the monolithic reference on "
+        f"uids {diverged[:5]} (of {len(diverged)})")
+    assert r["prefill_chunk_steps"] > 0, (
+        "no scheduler step ran with prefill chunks pending — whale "
+        "prompts never went through the chunk ladder")
+    assert r["decode_overlap_steps"] > 0, (
+        "decode never advanced while a whale prefilled — the "
+        "disaggregation seam is not interleaving")
+    # the acceptance bound: a generous relative envelope, so the assert
+    # catches a decode tail that collapsed back to whale-serialized
+    # behaviour without being sensitive to CI machine noise
+    bound = max(2.0 * rm["decode_p99_ms"], rm["decode_p99_ms"] + 250.0)
+    assert r["decode_p99_ms"] <= bound, (
+        f"short-request p99 {r['decode_p99_ms']:.1f}ms with chunking "
+        f"exceeds the bound {bound:.1f}ms derived from the monolithic "
+        f"reference ({rm['decode_p99_ms']:.1f}ms)")
+    assert_bounded_compiles(server)
+    assert_bounded_compiles(mono)
+    print(f"# decode p99 while whales prefill: "
+          f"{r['decode_p99_ms']:.1f}ms chunked vs "
+          f"{rm['decode_p99_ms']:.1f}ms monolithic "
+          f"(bound {bound:.1f}ms)", flush=True)
+    print(f"# steps with chunks pending: {r['prefill_chunk_steps']}, "
+          f"of which advanced decode: {r['decode_overlap_steps']}",
+          flush=True)
+    if args.json:
+        payload = {"workload": "long-prompt",
+                   "placement": args.placement,
+                   "executor": args.executor, "kv": "paged",
+                   "chunk_len": cl, "prefill_budget": budget,
+                   "max_len": max_len, "requests": args.requests,
+                   "rate": args.rate, "seed": args.seed,
+                   "whales": len(whales),
+                   "scenarios": [r, rm],
+                   "decode_p99_ms": r["decode_p99_ms"],
+                   "decode_p99_bound_ms": bound,
+                   "decode_p99_bounded": bool(
+                       r["decode_p99_ms"] <= bound),
+                   "token_identity": True}
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=60)
@@ -517,12 +696,24 @@ def main():
                     help="KV cache layout: ring = dense per-wave "
                          "buffers (reference); paged = per-shard page "
                          "pool with refcounted shared-prefix reuse")
-    ap.add_argument("--workload", choices=("standard", "shared-prefix"),
+    ap.add_argument("--workload",
+                    choices=("standard", "shared-prefix", "long-prompt"),
                     default="standard",
                     help="standard: uniform/skewed/bursty grid; "
                          "shared-prefix: cohort traffic re-sending the "
                          "same prompts (asserts prefill-compute savings "
-                         "when --kv paged)")
+                         "when --kv paged); long-prompt: mixed traffic "
+                         "with whale prompts, chunked vs monolithic "
+                         "prefill (asserts token identity and a bounded "
+                         "short-request decode tail; implies --kv paged)")
+    ap.add_argument("--chunk-len", type=int, default=0,
+                    help="prefill chunk length for the long-prompt "
+                         "workload (0 = the default 32); must divide "
+                         "the length buckets above it")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="prompt tokens of pending chunks each shard "
+                         "may dispatch per scheduler step (0 = one "
+                         "chunk_len per step for long-prompt)")
     ap.add_argument("--hub", action="store_true",
                     help="serve a long-tail expert catalog through an "
                          "ExpertHub: --n-experts catalogued, --resident "
@@ -571,6 +762,14 @@ def main():
         if args.resident < 1 or args.resident > args.n_experts:
             ap.error("--resident must be in [1, --n-experts]")
         run_hub_bench(args)
+        return
+
+    if args.workload == "long-prompt":
+        if args.kv != "paged":
+            print("# long-prompt requires the paged layout; "
+                  "forcing --kv paged", flush=True)
+            args.kv = "paged"
+        run_long_prompt_bench(args)
         return
 
     from repro.serve import Request

@@ -26,9 +26,17 @@ hub stages the expert's checkpoint in the background and commits it
 into a slot — the demo walks one such cold-start request through
 park → load → serve and prints the ``HubStats`` ledger.
 
+With ``--long-prompt`` the demo instead drives whale prompts through
+the chunked suffix-prefill path: cohorts of long prompts share a
+32-token head, the chunked server adopts the cached head pages and
+computes only the uncached suffix chunks (budgeted per scheduler step,
+so short requests keep decoding while a whale prefills), and the run
+prints the prefill-tokens-computed savings against a storage-only
+paged baseline serving the identical stream.
+
   PYTHONPATH=src python examples/serve_routing.py [--requests 48] \
       [--banked] [--executor {serial,overlapped}] \
-      [--hub --resident 2]
+      [--hub --resident 2] [--long-prompt]
 """
 import argparse
 import sys
@@ -99,6 +107,74 @@ def hub_cold_start_demo(server, hub, bench, names, t0):
     print(f"    {hub.stats!r}")
 
 
+def long_prompt_demo(matcher, bench, names, t0, n_requests=36):
+    """Whale prompts through the chunked suffix-prefill path: two
+    cohorts of long prompts share a 32-token head, so after a priming
+    wave the chunked server adopts the cached head pages and computes
+    only the uncached suffix chunk of each whale, while the storage-only
+    paged baseline recomputes every whale in full."""
+    cfg = get_config("llama3.2-1b").reduced(name="lp-expert")
+    model = build_model(cfg)
+    params = {n: model.init(jax.random.PRNGKey(i))
+              for i, n in enumerate(names)}
+
+    def make_server(chunked):
+        registry = ExpertRegistry()
+        for n in names:
+            registry.add(n, ExpertEngine(
+                model, params[n], max_len=128, kv_layout="paged",
+                chunk_len=32 if chunked else None))
+        return RoutedServer(matcher, registry, max_batch=8,
+                            prefill_tokens_per_step=32 if chunked else 0)
+
+    rng = np.random.default_rng(7)
+    cohorts = names[::3]  # two whale cohorts, one shared head each
+    heads = {n: rng.integers(0, 200, size=32) for n in cohorts}
+
+    def whale(uid, n):
+        x, _ = bench[n]["client_a"]
+        tail = rng.integers(0, 200, size=int(rng.integers(20, 29)))
+        return Request(uid=uid, features=x[int(rng.integers(len(x)))],
+                       prompt=np.concatenate([heads[n], tail]),
+                       max_new_tokens=6)
+
+    def short(uid):
+        n = names[int(rng.integers(len(names)))]
+        x, _ = bench[n]["client_a"]
+        return Request(uid=uid, features=x[int(rng.integers(len(x)))],
+                       prompt=rng.integers(0, 200,
+                                           size=int(rng.integers(4, 20))),
+                       max_new_tokens=6)
+
+    prime = [whale(900 + i, n) for i, n in enumerate(cohorts)]
+    stream = [whale(uid, cohorts[(uid // 3) % len(cohorts)])
+              if uid % 3 == 0 else short(uid)
+              for uid in range(n_requests)]
+    n_whales = sum(1 for r in stream if len(r.prompt) > 32)
+    print(f"[{time.time()-t0:5.1f}s] long-prompt demo: "
+          f"{len(prime)} priming whales, then {len(stream)} requests "
+          f"({n_whales} cohort whales interleaved with short traffic)")
+
+    results = {}
+    for label, chunked in (("chunked+suffix", True), ("storage-only", False)):
+        srv = make_server(chunked)
+        toks = {}
+        for wave in (prime, stream):
+            for r in srv.serve(list(wave)):
+                toks[r.uid] = r.tokens.tolist()
+        es = list(srv.stats["engines"].values())
+        computed = sum(e.prefill_tokens_computed for e in es)
+        submitted = sum(e.prefill_tokens_submitted for e in es)
+        results[label] = (computed, toks)
+        print(f"[{time.time()-t0:5.1f}s] {label:>14}: computed {computed} "
+              f"prompt tokens ({submitted} submitted before padding)")
+    (c1, t1), (c0, t0_) = results["chunked+suffix"], results["storage-only"]
+    assert t1 == t0_, "token divergence between chunked and storage-only"
+    print(f"    suffix prefill over cached cohort heads computed "
+          f"{c0 - c1} fewer prompt tokens ({1 - c1 / max(c0, 1):.0%} less "
+          f"than storage-only paged); tokens identical across both servers")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=48)
@@ -116,10 +192,17 @@ def main():
     ap.add_argument("--resident", type=int, default=2,
                     help="hub device slots (with --hub; fewer than the "
                          "6 experts so evictions actually happen)")
+    ap.add_argument("--long-prompt", action="store_true",
+                    help="whale-prompt demo: chunked suffix prefill "
+                         "over cached cohort heads vs storage-only "
+                         "paged, printing prefill-tokens-computed "
+                         "savings")
     args = ap.parse_args()
     if args.hub and args.banked:
         ap.error("--hub and --banked are exclusive (the hub owns its "
                  "own slot bank)")
+    if args.long_prompt and (args.hub or args.banked):
+        ap.error("--long-prompt is a standalone demo (no --hub/--banked)")
 
     t0 = time.time()
     bench = load_benchmark(n_per_dataset=args.n_per_dataset, seed=0)
@@ -131,6 +214,11 @@ def main():
     cents = [(bench[n]["server"][0], bench[n]["server"][1]) for n in names]
     matcher = build_matcher(aes, names, cents)
     print(f"[{time.time()-t0:5.1f}s] matcher bank trained (6 AEs)")
+
+    if args.long_prompt:
+        long_prompt_demo(matcher, bench, names, t0,
+                         n_requests=args.requests)
+        return
 
     hub = None
     if args.hub:

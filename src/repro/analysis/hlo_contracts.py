@@ -22,10 +22,14 @@ pass reads the compiled HLO instead of trusting the call sites:
         spec: every param leaf of a mesh-built engine's dispatch is
         ``PartitionSpec('expert', ...)`` on the leading axis.
   H004  executable count equals the declared bucket bound after a full
-        warmup: ``len(len_buckets) * len(batch_buckets)`` prefills,
-        ``len(batch_buckets)`` decode steps, one hub install — the
-        zero-steady-state-recompile contract the benches assert, here
-        checked exactly and in seconds rather than minutes.
+        warmup — ``EngineCore.executable_bounds()``, the one source of
+        the ladder arithmetic: monolithic prefills for buckets up to
+        ``chunk_len``, one suffix executable per (batch bucket, chunk
+        index) pair, ``len(batch_buckets)`` decode steps, one hub
+        install. The paged hub here is built *chunked* so the gate
+        exercises the chunk-ladder bound the serving bench asserts —
+        the zero-steady-state-recompile contract, checked exactly and
+        in seconds rather than minutes.
 
 Requires >= 8 devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 set before jax initialises — the ``python -m repro.analysis`` CLI
@@ -157,7 +161,8 @@ def check_bank_sharding(compiled, label: str,
 # ---------------------------------------------------------------------------
 
 
-def _tiny_hub(kv_layout: str, with_experts: bool = True):
+def _tiny_hub(kv_layout: str, with_experts: bool = True,
+              chunk_len: "int | None" = None):
     """An 8-slot hub on the full 8-device expert mesh, smallest
     geometry the layout allows. Slots start on zero template params —
     enough to lower every executable; real experts are only needed
@@ -173,7 +178,8 @@ def _tiny_hub(kv_layout: str, with_experts: bool = True):
     mesh = make_expert_mesh()
     hub = ExpertHub(model, n_slots=8, max_len=32,
                     len_buckets=(8, 16), batch_buckets=(1, 2),
-                    mesh=mesh, kv_layout=kv_layout)
+                    mesh=mesh, kv_layout=kv_layout,
+                    chunk_len=chunk_len)
     if with_experts:
         for i in range(8):
             hub.add_expert(f"ex{i}", model.init(jax.random.PRNGKey(i)))
@@ -190,8 +196,12 @@ def _lower_paged(core) -> List[Tuple[str, Any, tuple, tuple, str, tuple]]:
     nlp, npp_page = core.n_logical, core.page
     p_av = _avals(core.params)
     pool_av = _avals(core.kv_pool)
+    cl = core.chunk_len
     out = []
     for Sb in core.len_buckets:
+        if cl is not None and Sb > cl:
+            continue    # chunked engines never build monolithic
+            #             prefills past chunk_len (executable_bounds)
         for Bb in core.batch_buckets:
             toks = jax.ShapeDtypeStruct((E, Bb, Sb), jnp.int32)
             stbl = jax.ShapeDtypeStruct((E, Bb, Sb // npp_page),
@@ -200,6 +210,20 @@ def _lower_paged(core) -> List[Tuple[str, Any, tuple, tuple, str, tuple]]:
                         core._prefill_fn(Bb, Sb),
                         (p_av, {"tokens": toks}, pool_av, stbl),
                         (2,), "prefill", (0, 2)))
+    if cl is not None:
+        # the suffix ladder: chunk index k >= 1, chunk_len tokens at
+        # static offset k * chunk_len, prefix pages gathered read-only
+        ppc = cl // npp_page
+        for k in range(1, max(core.len_buckets) // cl):
+            for Bb in core.batch_buckets:
+                toks = jax.ShapeDtypeStruct((E, Bb, cl), jnp.int32)
+                ptbl = jax.ShapeDtypeStruct((E, Bb, k * ppc), jnp.int32)
+                stbl = jax.ShapeDtypeStruct((E, Bb, ppc), jnp.int32)
+                out.append((f"paged_suffix[B{Bb},k{k}]",
+                            core._suffix_fn(Bb, k),
+                            (p_av, {"tokens": toks}, pool_av, ptbl,
+                             stbl),
+                            (2,), "prefill", (0, 2)))
     for Bb in core.batch_buckets:
         tbl = jax.ShapeDtypeStruct((E, Bb, nlp), jnp.int32)
         pos = jax.ShapeDtypeStruct((E, C), jnp.int32)
@@ -225,7 +249,10 @@ def run() -> List[Violation]:
     _require_devices(8)
     out: List[Violation] = []
 
-    hub = _tiny_hub("paged")
+    # chunk_len = one page: the hub's 16-bucket prompts split into a
+    # chunk-0 prefill plus one suffix chunk, so the warmup ladder
+    # drives every executable family the chunked engine owns
+    hub = _tiny_hub("paged", chunk_len=8)
     core = hub.bank.core
 
     # H004 first: warmup drives the whole ladder through the *calling*
@@ -233,9 +260,9 @@ def run() -> List[Violation]:
     # below must not run before the counts are read, or they could
     # perturb the very caches being counted.
     hub.warmup(max_batch=core.batch_buckets[-1], commit=True)
-    want_prefill = len(core.len_buckets) * len(core.batch_buckets)
-    want_decode = len(core.batch_buckets)
+    bounds = core.executable_bounds()
     got_p = core.stats.prefill_compiles
+    got_s = core.stats.suffix_compiles
     got_d = core.stats.decode_compiles
     got_i = hub.install_compiles
     cmp_name = "==" if COMPILE_COUNTER_EXACT else ">="
@@ -243,17 +270,23 @@ def run() -> List[Violation]:
     def bad(got, want):
         return (got != want) if COMPILE_COUNTER_EXACT else (got < want)
 
-    if bad(got_p, want_prefill):
+    if bad(got_p, bounds["prefill"]):
         out.append(Violation(
             "H004", _CORE_PATH, 0, "prefill_ladder",
             f"prefill executables after full warmup: {got_p}, declared "
-            f"bound {cmp_name} {want_prefill} "
-            f"(len_buckets x batch_buckets)"))
-    if bad(got_d, want_decode):
+            f"bound {cmp_name} {bounds['prefill']} "
+            f"(executable_bounds: buckets <= chunk_len x batch_buckets)"))
+    if bad(got_s, bounds["suffix"]):
+        out.append(Violation(
+            "H004", _CORE_PATH, 0, "suffix_ladder",
+            f"suffix executables after full warmup: {got_s}, declared "
+            f"bound {cmp_name} {bounds['suffix']} "
+            f"(executable_bounds: chunk indices x batch_buckets)"))
+    if bad(got_d, bounds["decode"]):
         out.append(Violation(
             "H004", _CORE_PATH, 0, "decode_ladder",
             f"decode executables after full warmup: {got_d}, declared "
-            f"bound {cmp_name} {want_decode} (batch_buckets)"))
+            f"bound {cmp_name} {bounds['decode']} (batch_buckets)"))
     if COMPILE_COUNTER_EXACT and got_i != 1:
         out.append(Violation(
             "H004", _HUB_PATH, 0, "hub_install",

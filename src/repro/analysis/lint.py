@@ -1,4 +1,4 @@
-"""AST lint pass: repo-specific serving-stack hazards (rules L001-L005).
+"""AST lint pass: repo-specific serving-stack hazards (rules L001-L006).
 
 Pure stdlib (``ast``) — importable and runnable without jax, so the CI
 job can fail fast before any lowering work starts.
@@ -30,6 +30,19 @@ L005  unpaired resource lifecycle in the serving clients: an acquire
       — maintain these invariants internally and are covered by the
       property tests in ``tests/test_paged_kv.py``, so the pairing
       rule applies to the *client* modules only.)
+L006  a prefill/suffix dispatch (``_prefill_fn``/``_suffix_fn``) whose
+      shape argument (length bucket, or chunk index) is not derived
+      from the bucket ladders — ``bucket_for``/``pad_shape`` results,
+      ``chunk_len``/``max_len``, or ``len_buckets``/``batch_buckets``
+      elements. A raw length (``toks.shape[1]``, ``len(prompt)``)
+      keys a fresh executable per distinct value: the silent
+      recompile-per-length regression the bucketed-jit contract (and
+      the H004 executable-count bound) exists to prevent. Derivation
+      is tracked by *name* across the whole file (the analysis is
+      intra-file, not intra-procedural: ``Sb`` blessed by one
+      ``bucket_for`` assignment stays blessed when passed as a
+      parameter named ``Sb``), which matches the repo idiom of
+      threading bucket values under stable names.
 
 Taint model (L001/L002): inside a traced function, positional
 parameters are traced arrays; keyword-only parameters are static
@@ -530,6 +543,122 @@ def _check_lifecycles(fn: ast.AST, parents: _Parents, path: str
 
 
 # ---------------------------------------------------------------------------
+# L006 — prefill dispatch shapes must come from the bucket ladders
+# ---------------------------------------------------------------------------
+
+_BUCKET_FNS = {"_prefill_fn", "_suffix_fn"}
+_BUCKET_SOURCES = {"bucket_for", "pad_shape", "make_buckets"}
+_BUCKET_ATTRS = {"chunk_len", "max_len", "len_buckets", "batch_buckets",
+                 "page"}
+_BUCKET_CALLS = {"range", "min", "max", "len", "sum", "sorted", "tuple",
+                 "list"}
+
+
+def _collect_blessed(tree: ast.AST) -> Set[str]:
+    """Names bound (anywhere in the file) to bucket-ladder-derived
+    values. Two propagation passes so chained assignments settle."""
+    blessed: Set[str] = set()
+
+    def ok(node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant):
+            return isinstance(node.value, int)
+        if isinstance(node, ast.Name):
+            return node.id in blessed
+        if isinstance(node, ast.Attribute):
+            return node.attr in _BUCKET_ATTRS
+        if isinstance(node, ast.Subscript):
+            return ok(node.value)
+        if isinstance(node, ast.BinOp):
+            return ok(node.left) and ok(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return ok(node.operand)
+        if isinstance(node, ast.Call):
+            last = _last_attr(_call_name(node))
+            if last in _BUCKET_SOURCES:
+                return True
+            if last in _BUCKET_CALLS:
+                return all(ok(a) for a in node.args)
+            return False
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return all(ok(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return ok(node.body) and ok(node.orelse)
+        if isinstance(node, ast.BoolOp):
+            return all(ok(v) for v in node.values)
+        return False
+
+    def mark(target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            blessed.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                mark(e)
+
+    for _ in range(2):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and ok(node.value):
+                for t in node.targets:
+                    mark(t)
+            elif isinstance(node, ast.AnnAssign) and \
+                    node.value is not None and ok(node.value):
+                mark(node.target)
+            elif isinstance(node, (ast.For, ast.AsyncFor)) and \
+                    ok(node.iter):
+                mark(node.target)
+            elif isinstance(node, ast.comprehension) and ok(node.iter):
+                mark(node.target)
+    return blessed
+
+
+def _check_bucket_shapes(tree: ast.AST, parents: _Parents,
+                         path: str) -> List[Violation]:
+    """L006: the shape-keying argument of every ``_prefill_fn(Bb, Sb)``
+    / ``_suffix_fn(Bb, k)`` call site must be bucket-derived. Only the
+    second argument is checked — the batch argument is routinely read
+    back off a descriptor array's static shape, which is already
+    bucket-sized by construction."""
+    out: List[Violation] = []
+    blessed = _collect_blessed(tree)
+
+    def ok(node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant):
+            return isinstance(node.value, int)
+        if isinstance(node, ast.Name):
+            return node.id in blessed
+        if isinstance(node, ast.Attribute):
+            return node.attr in _BUCKET_ATTRS
+        if isinstance(node, ast.Subscript):
+            return ok(node.value)
+        if isinstance(node, ast.BinOp):
+            return ok(node.left) and ok(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return ok(node.operand)
+        if isinstance(node, ast.Call):
+            last = _last_attr(_call_name(node))
+            return last in _BUCKET_SOURCES or (
+                last in _BUCKET_CALLS and all(ok(a) for a in node.args))
+        return False
+
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _last_attr(_call_name(node)) in _BUCKET_FNS
+                and len(node.args) >= 2):
+            continue
+        arg = node.args[1]
+        if not ok(arg):
+            fn = _last_attr(_call_name(node))
+            out.append(Violation(
+                "L006", path, node.lineno, parents.qualname(node),
+                f"{fn}() shape argument "
+                f"{ast.unparse(arg) if hasattr(ast, 'unparse') else '?'}"
+                " is not derived from the bucket ladders (bucket_for/"
+                "pad_shape/chunk_len/len_buckets) — every distinct "
+                "value keys a fresh XLA executable, breaking the "
+                "bounded-compile contract"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
@@ -580,6 +709,9 @@ def lint_source(src: str, path: str) -> List[Violation]:
     if any(path.endswith(p) or path == p for p in _LIFECYCLE_FILES):
         for fn in fns:
             out.extend(_check_lifecycles(fn, parents, path))
+
+    # L006 — prefill dispatch shapes come from the bucket ladders
+    out.extend(_check_bucket_shapes(tree, parents, path))
     return out
 
 

@@ -43,21 +43,28 @@ class ExpertSpec:
     kv_layout: str = "ring"
     page: Optional[int] = None          # paged-layout pool geometry
     pool_pages: Optional[int] = None
+    chunk_len: Optional[int] = None     # chunked-prefill grid (None =
+    #                                     monolithic prefill only) — part
+    #                                     of the executable ladder, so
+    #                                     differently-chunked engines
+    #                                     must not bank together
 
     @classmethod
     def of_engine(cls, engine) -> "ExpertSpec":
         """The spec of a live ``ExpertEngine`` (or any engine exposing
         the same geometry attributes)."""
         kv = getattr(engine, "kv_layout", "ring")
-        page = pool_pages = None
+        page = pool_pages = chunk_len = None
         if kv == "paged":
             page = engine.core.page
             pool_pages = engine.core.pool.n_pages
+            chunk_len = engine.core.chunk_len
         return cls(arch=engine.model.cfg.replace(name=""),
                    max_len=engine.max_len,
                    len_buckets=tuple(engine.len_buckets),
                    batch_buckets=tuple(engine.batch_buckets),
-                   kv_layout=kv, page=page, pool_pages=pool_pages)
+                   kv_layout=kv, page=page, pool_pages=pool_pages,
+                   chunk_len=chunk_len)
 
     @property
     def bankable(self) -> bool:

@@ -228,6 +228,32 @@ def paged_scatter_pages(k_pages, v_pages, scatter_tbl, k, v):
             v_pages.at[scatter_tbl].set(vu))
 
 
+def suffix_attend(q, k_suf, v_suf, pk, pv, *, offset, window=0, chunk=0):
+    """Suffix-prefill attention: queries at absolute positions
+    ``offset .. offset + Ssuf - 1`` attend over the cached prefix KV
+    (absolute positions ``0 .. offset - 1``, typically gathered through a
+    page table with :func:`paged_gather`) concatenated with the suffix's
+    own freshly-computed KV.
+
+    q, k_suf, v_suf: (B, Ssuf, ·, dh); pk, pv: (B, offset, KV, dh).
+    ``offset`` must be a static int (it shapes the position vectors).
+
+    Exactness: causal masking means prefix positions never attend to the
+    suffix, so the prefix KV read from the pool is the same tensor a
+    monolithic prefill would have computed in place — a greedy decode
+    seeded from suffix logits is token-identical to the monolithic path.
+    Rows whose prefix table points at the trash page read finite garbage;
+    their outputs must be discarded by the caller (batch padding).
+    """
+    Ssuf = q.shape[1]
+    positions = jnp.arange(offset, offset + Ssuf)
+    fk = jnp.concatenate([pk.astype(k_suf.dtype), k_suf], axis=1)
+    fv = jnp.concatenate([pv.astype(v_suf.dtype), v_suf], axis=1)
+    kv_pos = jnp.concatenate([jnp.arange(offset), positions])
+    return attention(q, fk, fv, q_pos=positions, kv_pos=kv_pos,
+                     window=window, chunk=chunk)
+
+
 def paged_append(k_pages, v_pages, tbl_col, offset, k1, v1):
     """Write one decoded token per row: tbl_col (B,) physical pages,
     offset () in-page slot (shared — rows decode in lockstep), k1, v1

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from .api import BaseModel, register_family
 from .attention import (attention, cache_append, cache_prefill,
                         init_kv_cache, paged_append, paged_gather,
-                        paged_scatter_pages)
+                        paged_scatter_pages, suffix_attend)
 from .common import (ArchConfig, KeyGen, apply_rope, dense_init, dt,
                      embed_init, ones_init, rmsnorm, softmax_xent, zeros_init)
 from .moe import init_moe, moe_ffn
@@ -96,6 +96,23 @@ def _layer_full(x, lp, cfg: ArchConfig, positions):
     # per-device activation footprint drops by the model-axis size
     x = shard_act(x, (BATCH, "model" if cfg.seq_parallel else None, None))
     return x, (k, v), aux
+
+
+def _layer_suffix(x, lp, cfg: ArchConfig, positions, pk, pv, offset):
+    """Suffix-prefill layer: queries at absolute `positions` attend over
+    the gathered prefix KV (positions 0..offset-1) plus the suffix's own
+    KV. Returns (x, (k, v)) where k, v cover only the suffix slice."""
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(h, lp, cfg, positions)
+    o = suffix_attend(q, k, v, pk, pv, offset=offset,
+                      window=cfg.sliding_window, chunk=cfg.attn_chunk)
+    B, S = x.shape[:2]
+    x = x + (o.reshape(B, S, -1) @ lp["wo"]).astype(x.dtype)
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    y, _ = _ffn(h2, lp, cfg)
+    x = x + y.astype(x.dtype)
+    x = shard_act(x, (BATCH, "model" if cfg.seq_parallel else None, None))
+    return x, (k, v)
 
 
 def _layer_decode(x, lp, layer_cache, cfg: ArchConfig, pos_scalar):
@@ -282,6 +299,41 @@ class DecoderLM(BaseModel):
         nk, nv = jax.vmap(per_layer, in_axes=(1, 1, 0, 0),
                           out_axes=(1, 1))(pool["k"], pool["v"], k, v)
         return logits, {"k": nk, "v": nv}, cache["pos"], cache["t"]
+
+    def paged_prefill_suffix(self, params, batch, pool, prefix_tbl,
+                             scatter_tbl, *, offset, page):
+        """Compute-shared suffix prefill: attend over cached prefix KV
+        (gathered through ``prefix_tbl``, (B, offset // page)) and compute
+        only the suffix tokens at absolute positions offset..offset+Ssuf-1.
+        Suffix KV is scattered into pool pages via ``scatter_tbl``
+        (B, Ssuf // page). Returns (logits, pool') where logits are the
+        last suffix position's — causal masking makes them identical to a
+        monolithic prefill of the full offset+Ssuf prompt."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        Ssuf = x.shape[1]
+        positions = jnp.arange(offset, offset + Ssuf)
+        # gather the prefix view once per layer: (L, B, offset, KV, dh)
+        gk, gv = jax.vmap(paged_gather, in_axes=(1, 1, None),
+                          out_axes=0)(pool["k"], pool["v"], prefix_tbl)
+
+        def body(x, inp):
+            lp, pk, pv = inp
+            x, kv = _layer_suffix(x, lp, cfg, positions, pk, pv, offset)
+            return x, kv
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], gk, gv))
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = self._unembed(params, x[:, -1])
+
+        def per_layer(kp, vp, kl, vl):
+            return paged_scatter_pages(kp, vp, scatter_tbl, kl, vl)
+
+        nk, nv = jax.vmap(per_layer, in_axes=(1, 1, 0, 0),
+                          out_axes=(1, 1))(pool["k"], pool["v"], ks, vs)
+        return logits, {"k": nk, "v": nv}
 
     def paged_decode(self, params, pool, table, pos, t, batch, *, page):
         """Gather the dense per-row view through the page table, run the

@@ -175,8 +175,16 @@ class EngineStats:
                    for fn in self._core._decode_fns.values())
 
     @property
+    def suffix_compiles(self) -> int:
+        if self._core is None:
+            return 0
+        return sum(_wrapper_compiles(fn)
+                   for fn in self._core._suffix_fns.values())
+
+    @property
     def jit_cache_entries(self) -> int:
-        return self.prefill_compiles + self.decode_compiles
+        return (self.prefill_compiles + self.suffix_compiles
+                + self.decode_compiles)
 
     def __repr__(self) -> str:
         return (f"EngineStats(prefill_compiles={self.prefill_compiles}, "
@@ -216,7 +224,8 @@ class _Wave:
     per_row_new: Dict[int, List[int]]
     done: Dict[int, List[bool]]
     cache: Any
-    tok: jnp.ndarray                    # (E, Bb, 1) last sampled token
+    tok: Optional[jnp.ndarray]          # (E, Bb, 1) last sampled token;
+    #   None while prefill chunks are still pending (decode is gated)
     emitted: List[Any]                  # (E, Bb) planes, device or host
     steps_left: int
     n_host: int = 0                     # emitted[:n_host] are host arrays
@@ -229,6 +238,15 @@ class _Wave:
     register: List[Tuple[int, int, int, List[bytes], List[int]]] = \
         dataclasses.field(default_factory=list)
     #   ^ (local, row, padded_len, chain, pages) to insert at retirement
+    # chunked-prefill fields (empty / None on unchunked waves): each
+    # pending descriptor is one not-yet-dispatched prefill chunk; the
+    # chunk cursor is implicit — descriptors are dispatched FIFO, and
+    # the wave's first token (and decode eligibility) materialises only
+    # when the last chunk lands (see EngineCore._finalize_wave)
+    pending_chunks: List[Dict[str, Any]] = \
+        dataclasses.field(default_factory=list)
+    finalize: Optional[Dict[str, Any]] = None
+    _tok_c: Optional[jnp.ndarray] = None     # last chunk's packed argmax
 
 
 class EngineCore:
@@ -248,7 +266,8 @@ class EngineCore:
                  mesh: Optional[Mesh] = None,
                  kv_layout: str = "ring", page_size: int = 8,
                  pool_pages: Optional[int] = None,
-                 prefix_cache_size: int = 1024):
+                 prefix_cache_size: int = 1024,
+                 chunk_len: Optional[int] = None):
         if not params_list:
             raise ValueError("EngineCore needs at least one expert")
         if kv_layout not in ("ring", "paged"):
@@ -274,6 +293,7 @@ class EngineCore:
         # shape-keyed jit wrappers; real executable counts come from
         # each wrapper's _cache_size() (see EngineStats)
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+        self._suffix_fns: Dict[Tuple[int, int], Any] = {}  # (Bb, chunk k)
         self._decode_fns: Dict[int, Any] = {}
         self._copy_fns: Dict[int, Any] = {}     # COW page-copy, by count
         params = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
@@ -317,6 +337,33 @@ class EngineCore:
                 kv = jax.device_put(
                     kv, leading_sharding(kv, "expert", self.mesh))
             self.kv_pool = kv
+        # -- chunked prefill geometry (paged only) -----------------------
+        self.chunk_len: Optional[int] = None
+        if chunk_len is not None:
+            cl = int(chunk_len)
+            if kv_layout != "paged":
+                raise ValueError("chunk_len requires kv_layout='paged' "
+                                 "(suffix prefill attends over pool pages)")
+            if cl % self.page:
+                raise ValueError(
+                    f"chunk_len={cl} must be a multiple of "
+                    f"page_size={self.page}")
+            if self.max_len % cl:
+                raise ValueError(
+                    f"max_len={self.max_len} must be a multiple of "
+                    f"chunk_len={cl} (the suffix ladder tiles max_len)")
+            if cl not in self.len_buckets:
+                raise ValueError(
+                    f"chunk_len={cl} must itself be a length bucket "
+                    f"(got buckets {self.len_buckets}) — chunk 0 reuses "
+                    "the monolithic prefill executable at that bucket")
+            bad = [b for b in self.len_buckets if b > cl and b % cl]
+            if bad:
+                raise ValueError(
+                    f"length buckets above chunk_len must be multiples "
+                    f"of chunk_len={cl}; offending buckets {bad} (every "
+                    "padded prompt must split into whole chunks)")
+            self.chunk_len = cl
 
     # -- sharded/bucketed executables -----------------------------------
     def _bank_sharding(self):
@@ -353,6 +400,53 @@ class EngineCore:
                     jitted = jax.jit(fn)
             self._prefill_fns[key] = jitted
         return self._prefill_fns[key]
+
+    def _suffix_fn(self, Bb: int, k: int):
+        """Suffix-prefill executable for chunk index ``k >= 1``: computes
+        exactly ``chunk_len`` tokens at static offset ``k * chunk_len``,
+        attending over the prefix pages already resident in the pool.
+        Keyed (Bb, k) so the ladder is bounded by
+        ``(max(len_buckets) // chunk_len - 1) * len(batch_buckets)``."""
+        key = (Bb, k)
+        if key not in self._suffix_fns:
+            s = self._bank_sharding()
+            offset = k * self.chunk_len
+            # (params, {tokens}, kv_pool, prefix_tbl, scatter_tbl) ->
+            # (logits, kv_pool'); pool donated as in _prefill_fn
+            fn = jax.vmap(
+                lambda p, b, pool, ptbl, stbl:
+                self.model.paged_prefill_suffix(
+                    p, b, pool, ptbl, stbl, offset=offset,
+                    page=self.page))
+            if s is not None:
+                jitted = jax.jit(fn, in_shardings=(s, s, s, s, s),
+                                 out_shardings=(s, s),
+                                 donate_argnums=(2,))
+            else:
+                jitted = jax.jit(fn, donate_argnums=(2,))
+            self._suffix_fns[key] = jitted
+        return self._suffix_fns[key]
+
+    def executable_bounds(self) -> Dict[str, int]:
+        """Steady-state executable-count bound per wrapper family.
+
+        With chunking enabled, monolithic prefill executables only exist
+        for length buckets <= chunk_len (longer prompts go through the
+        chunk ladder), and the suffix ladder adds one executable per
+        (batch bucket, chunk index >= 1) pair. The H004 gate and the
+        serving bench assert the live counts against exactly this."""
+        nB = len(self.batch_buckets)
+        if self.chunk_len:
+            prefill = nB * sum(1 for b in self.len_buckets
+                               if b <= self.chunk_len)
+            # deepest reachable chunk index: prompts snap to len_buckets,
+            # so the largest bucket (not max_len, which may exceed it)
+            # caps the ladder
+            suffix = nB * (max(self.len_buckets) // self.chunk_len - 1)
+        else:
+            prefill = nB * len(self.len_buckets)
+            suffix = 0
+        return {"prefill": prefill, "suffix": suffix, "decode": nB}
 
     def _decode_fn(self, Bb: int):
         if Bb not in self._decode_fns:
@@ -499,6 +593,11 @@ class EngineCore:
         self.stats.prefill_tokens_submitted += n_submitted
         self._active.append(w)
         if not defer:
+            # blocking reference: drain the wave's prefill chunks (a
+            # no-op on unchunked waves) before materialising the first
+            # token — callers of the sync API see a fully-prefilled row
+            while w.pending_chunks:
+                self._dispatch_chunk(w)
             self._materialize(w, 1)
             self.harvest()
         return True
@@ -553,6 +652,14 @@ class EngineCore:
         npp = Sb // page
         trash = self.pool.trash
         steps = max(m for ms in per_row.values() for m in ms) - 1
+        # chunked geometry: prompts longer than chunk_len split into
+        # n_chunks dispatches; partial-prefix adoption snaps DOWN to a
+        # chunk boundary so every dispatched chunk is fully uncached,
+        # and is capped at npp - ppc so the last chunk always computes
+        # (its logits carry every computed row's first token)
+        chunked = self.chunk_len is not None and Sb > self.chunk_len
+        ppc = (self.chunk_len // page) if chunked else npp
+        start_chunk: Dict[Tuple[int, int], int] = {}
         wr_pages = sorted({(s % C) // page for s in range(Sb, Sb + steps)})
         wr_prompt = [lp for lp in wr_pages if lp < npp]
         wr_decode = [lp for lp in wr_pages if lp >= npp]
@@ -613,10 +720,27 @@ class EngineCore:
                                 ledger.pop()
                                 adopted = []
                             d = len(adopted)
+                            if chunked and d:
+                                # snap adoption to the chunk grid: kept
+                                # pages are compute-shared (their chunks
+                                # are skipped, not re-run-to-trash)
+                                keep = min((d // ppc) * ppc, npp - ppc)
+                                if keep < d:
+                                    self.pool.release(local,
+                                                      adopted[keep:])
+                                    if keep:
+                                        ledger[-1] = (local,
+                                                      list(adopted[:keep]))
+                                    else:
+                                        ledger.pop()
+                                    adopted = adopted[:keep]
+                                    d = keep
                             fresh = self._alloc_pages(local, npp - d,
                                                       ledger)
                             prow = list(adopted) + fresh
                             scatter[(local, i)] = [trash] * d + fresh
+                            if chunked:
+                                start_chunk[(local, i)] = d // ppc
                             n_shared += d
                             if register_ok:
                                 register.append((local, i, Sb, chain,
@@ -654,57 +778,127 @@ class EngineCore:
         for local, i in computed:
             per_local.setdefault(local, []).append(i)
         n_computed = len(computed)
-        tok = None
-        if n_computed:
-            Bbc = bucket_for(max(len(v) for v in per_local.values()),
-                             self.batch_buckets)
-            toks_c = np.zeros((E, Bbc, Sb), np.int32)
-            stbl = np.full((E, Bbc, npp), trash, np.int32)
-            slot_of: Dict[Tuple[int, int], int] = {}
-            for local, rows in per_local.items():
-                for c, i in enumerate(rows):
-                    toks_c[local, c] = toks[local, i]
-                    stbl[local, c] = scatter[(local, i)]
-                    slot_of[(local, i)] = c
-            logits, self.kv_pool = self._prefill_fn(Bbc, Sb)(
-                self.params, {"tokens": jnp.asarray(toks_c)},
-                self.kv_pool, jnp.asarray(stbl))
-            self.stats.prefill_calls += 1
-            tok_c = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            src = np.zeros((E, Bb), np.int32)
-            for local, row_uids in uids.items():
-                for i in range(len(row_uids)):
-                    src[local, i] = slot_of.get(
-                        (local, i),
-                        slot_of.get((local, dup_src.get((local, i), -1)),
-                                    0))
-            tok = jnp.take_along_axis(tok_c, jnp.asarray(src), axis=1)
+        use_chunks = chunked and n_computed > 0
+        mask = vals = None
         if cached_tok:
             mask = np.zeros((E, Bb), bool)
             vals = np.zeros((E, Bb), np.int32)
             for (local, i), ft in cached_tok.items():
                 mask[local, i] = True
                 vals[local, i] = ft
-            tok = jnp.asarray(vals) if tok is None else \
-                jnp.where(jnp.asarray(mask), jnp.asarray(vals), tok)
-        assert tok is not None, "wave with rows but no token source"
-        # COW copies read post-prefill pages (a dup's source may have
-        # been written by this very wave's scatter)
-        self._copy_pages(copies)
-        self.stats.pages_copied += sum(len(p) for p in copies.values())
+        tok = None
+        pending: List[Dict[str, Any]] = []
+        fin: Optional[Dict[str, Any]] = None
+        if use_chunks:
+            # plan (don't dispatch) one descriptor per chunk: chunk k
+            # packs every computed row whose adopted prefix doesn't
+            # already cover it; chunk 0 reuses the monolithic prefill
+            # executable at the chunk_len bucket, chunks >= 1 go through
+            # the suffix ladder. Dispatch happens in _dispatch_chunk —
+            # immediately (blocking admit) or interleaved with decode
+            # ticks under the executor's token budget (deferred admit).
+            cl = self.chunk_len
+            for k in range(Sb // cl):
+                rows_k = [(l, i) for (l, i) in computed
+                          if start_chunk[(l, i)] <= k]
+                if not rows_k:
+                    continue
+                pl_k: Dict[int, List[int]] = {}
+                for l, i in rows_k:
+                    pl_k.setdefault(l, []).append(i)
+                Bbk = bucket_for(max(len(v) for v in pl_k.values()),
+                                 self.batch_buckets)
+                toks_k = np.zeros((E, Bbk, cl), np.int32)
+                stbl_k = np.full((E, Bbk, ppc), trash, np.int32)
+                # padding rows read the trash page through their prefix
+                # table — finite garbage, outputs discarded
+                ptbl_k = np.full((E, Bbk, k * ppc), trash, np.int32)
+                slot_of_k: Dict[Tuple[int, int], int] = {}
+                for l, rows in pl_k.items():
+                    for c, i in enumerate(rows):
+                        toks_k[l, c] = toks[l, i, k * cl:(k + 1) * cl]
+                        stbl_k[l, c] = \
+                            scatter[(l, i)][k * ppc:(k + 1) * ppc]
+                        if k:
+                            ptbl_k[l, c] = table[l, i, :k * ppc]
+                        slot_of_k[(l, i)] = c
+                pending.append({"k": k, "toks": toks_k, "stbl": stbl_k,
+                                "ptbl": ptbl_k, "rows": len(rows_k),
+                                "slot_of": slot_of_k})
+            # every computed row rides the last chunk (adoption is
+            # capped at npp - ppc), so its packed logits carry every
+            # first token; dups resolve through their representative
+            last = pending[-1]["slot_of"]
+            src = np.zeros((E, Bb), np.int32)
+            for local, row_uids in uids.items():
+                for i in range(len(row_uids)):
+                    src[local, i] = last.get(
+                        (local, i),
+                        last.get((local, dup_src.get((local, i), -1)),
+                                 0))
+            fin = {"src": src, "mask": mask, "vals": vals,
+                   "copies": copies}
+        else:
+            if n_computed:
+                Bbc = bucket_for(max(len(v) for v in per_local.values()),
+                                 self.batch_buckets)
+                toks_c = np.zeros((E, Bbc, Sb), np.int32)
+                stbl = np.full((E, Bbc, npp), trash, np.int32)
+                slot_of: Dict[Tuple[int, int], int] = {}
+                for local, rows in per_local.items():
+                    for c, i in enumerate(rows):
+                        toks_c[local, c] = toks[local, i]
+                        stbl[local, c] = scatter[(local, i)]
+                        slot_of[(local, i)] = c
+                logits, self.kv_pool = self._prefill_fn(Bbc, Sb)(
+                    self.params, {"tokens": jnp.asarray(toks_c)},
+                    self.kv_pool, jnp.asarray(stbl))
+                self.stats.prefill_calls += 1
+                tok_c = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                src = np.zeros((E, Bb), np.int32)
+                for local, row_uids in uids.items():
+                    for i in range(len(row_uids)):
+                        src[local, i] = slot_of.get(
+                            (local, i),
+                            slot_of.get((local,
+                                         dup_src.get((local, i), -1)),
+                                        0))
+                tok = jnp.take_along_axis(tok_c, jnp.asarray(src),
+                                          axis=1)
+            if mask is not None:
+                tok = jnp.asarray(vals) if tok is None else \
+                    jnp.where(jnp.asarray(mask), jnp.asarray(vals), tok)
+            assert tok is not None, "wave with rows but no token source"
+            # COW copies read post-prefill pages (a dup's source may
+            # have been written by this very wave's scatter)
+            self._copy_pages(copies)
+            self.stats.pages_copied += sum(len(p)
+                                           for p in copies.values())
+            self.stats.prefill_tokens_computed += n_computed * Sb
 
         self.stats.prefill_rows_computed += n_computed
-        self.stats.prefill_tokens_computed += n_computed * Sb
         self.stats.prefix_full_hits += n_cached
         self.stats.prefix_dup_rows += n_dup
         self.stats.prefix_pages_shared += n_shared
         pos = np.where(np.arange(C) < Sb, np.arange(C), -1).astype(
             np.int32)
-        tok = tok[..., None]
         table_dev = jnp.asarray(table)
         pos_dev = jnp.asarray(np.broadcast_to(pos, (E, C)).copy())
         t_dev = jnp.full((E,), Sb, jnp.int32)
         s = self._bank_sharding()
+        if use_chunks:
+            if s is not None:
+                # same sharding-commit reasoning as below; tok commits
+                # separately in _finalize_wave once the last chunk lands
+                table_dev, pos_dev, t_dev = jax.device_put(
+                    (table_dev, pos_dev, t_dev), s)
+            return _Wave(uids=uids, per_row_new=per_row, done=done,
+                         cache=None, tok=None, emitted=[],
+                         steps_left=steps,
+                         table=table_dev, pos=pos_dev, t=t_dev,
+                         pages_held=pages_held, register=register,
+                         pending_chunks=pending, finalize=fin)
+        tok = tok[..., None]
         if s is not None:
             # commit every wave-carried array to the bank sharding now:
             # tick 1 must present the decode executable with the same
@@ -720,6 +914,81 @@ class EngineCore:
                      table=table_dev, pos=pos_dev, t=t_dev,
                      pages_held=pages_held, register=register)
 
+    # -- chunked prefill dispatch ----------------------------------------
+    def _dispatch_chunk(self, w: _Wave) -> int:
+        """Issue the wave's next pending prefill chunk (FIFO). Chunk 0
+        goes through the monolithic prefill executable at the chunk_len
+        bucket; later chunks attend over the pages earlier chunks (or an
+        adopted prefix) already wrote. When the last chunk is issued the
+        wave is finalized — its first-token plane is assembled and it
+        becomes decode-eligible. Returns prompt tokens dispatched (real
+        rows x chunk_len, the budget currency)."""
+        d = w.pending_chunks.pop(0)
+        k = d["k"]
+        Bbk = d["toks"].shape[1]
+        if k == 0:
+            logits, self.kv_pool = self._prefill_fn(Bbk, self.chunk_len)(
+                self.params, {"tokens": jnp.asarray(d["toks"])},
+                self.kv_pool, jnp.asarray(d["stbl"]))
+        else:
+            logits, self.kv_pool = self._suffix_fn(Bbk, k)(
+                self.params, {"tokens": jnp.asarray(d["toks"])},
+                self.kv_pool, jnp.asarray(d["ptbl"]),
+                jnp.asarray(d["stbl"]))
+        self.stats.prefill_calls += 1
+        spent = d["rows"] * self.chunk_len
+        self.stats.prefill_tokens_computed += spent
+        if not w.pending_chunks:
+            w._tok_c = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self._finalize_wave(w)
+        return spent
+
+    def _finalize_wave(self, w: _Wave) -> None:
+        """Last chunk landed: gather every row's first token from the
+        final chunk's packed logits (cached rows overlay their known
+        token), apply the deferred COW copies, and commit the token
+        plane to the bank sharding — the wave is now decode-eligible."""
+        f = w.finalize
+        w.finalize = None
+        tok = jnp.take_along_axis(w._tok_c, jnp.asarray(f["src"]),
+                                  axis=1)
+        w._tok_c = None
+        if f["mask"] is not None:
+            tok = jnp.where(jnp.asarray(f["mask"]),
+                            jnp.asarray(f["vals"]), tok)
+        # COW copies must read fully-written prompt pages, so they wait
+        # for the last chunk (the unchunked path runs them post-prefill
+        # for the same reason)
+        self._copy_pages(f["copies"])
+        self.stats.pages_copied += sum(len(p)
+                                       for p in f["copies"].values())
+        tok = tok[..., None]
+        s = self._bank_sharding()
+        if s is not None:
+            tok = jax.device_put(tok, s)
+        w.tok = tok
+        w.emitted.append(tok[..., 0])
+
+    def prefill_step(self, budget: int = 0) -> int:
+        """Dispatch pending prefill chunks FIFO across active waves —
+        at least one chunk per call so whales always make progress —
+        stopping once ``budget`` prompt tokens (0 = unbounded) have been
+        issued. The executor calls this between admission and decode
+        ticks, which is the disaggregation: a whale's remaining chunks
+        interleave with co-resident waves' decode steps instead of
+        monopolising the dispatch slot. Returns tokens dispatched."""
+        spent = 0
+        for w in list(self._active):
+            while w.pending_chunks:
+                spent += self._dispatch_chunk(w)
+                if budget and spent >= budget:
+                    return spent
+        return spent
+
+    @property
+    def has_pending_chunks(self) -> bool:
+        return any(w.pending_chunks for w in self._active)
+
     # -- decoding --------------------------------------------------------
     def tick(self, *, defer: bool = False) -> int:
         """Advance every active wave one decode step — one dispatch per
@@ -733,6 +1002,11 @@ class EngineCore:
         """
         advanced = 0
         for w in list(self._active):
+            # a wave with prefill chunks still pending has no sampled
+            # token yet — decode only admits it once its last chunk
+            # lands (w.tok set in _finalize_wave)
+            if w.tok is None:
+                continue
             if w.steps_left > 0:
                 Bb = w.tok.shape[1]
                 if self.kv_layout == "paged":
@@ -857,6 +1131,13 @@ class DispatchExecutor:
     def run_step(self, sched) -> None:
         sched._service_hub()
         sched._admit_batches(defer=self.defer)
+        # prefill/decode disaggregation: pending chunks of partially-
+        # prefilled waves are issued here, bounded per step by
+        # SchedulerConfig.prefill_tokens_per_step, so the decode ticks
+        # below run every step even while a whale prompt prefills (on
+        # the blocking path admission already drained its chunks and
+        # this is a no-op)
+        sched._prefill_chunks()
         sched._tick_engines(defer=self.defer)
         sched._harvest_engines()
 

@@ -311,6 +311,7 @@ class ExpertHub:
                  batch_buckets: Optional[Sequence[int]] = None,
                  mesh: Optional[Mesh] = None, kv_layout: str = "ring",
                  page_size: int = 8, pool_pages: Optional[int] = None,
+                 chunk_len: Optional[int] = None,
                  store: Optional[str] = None, prefetch: bool = True,
                  host_cache: Optional[int] = None,
                  stage_timeout: float = 120.0):
@@ -339,7 +340,8 @@ class ExpertHub:
             model, [tmpl] * n_slots, max_len=max_len,
             min_len_bucket=min_len_bucket, len_buckets=len_buckets,
             batch_buckets=batch_buckets, mesh=mesh, kv_layout=kv_layout,
-            page_size=page_size, pool_pages=pool_pages)
+            page_size=page_size, pool_pages=pool_pages,
+            chunk_len=chunk_len)
         self.spec = ExpertSpec(
             arch=model.cfg.replace(name=""), max_len=self.bank.max_len,
             len_buckets=tuple(self.bank.len_buckets),
@@ -347,7 +349,9 @@ class ExpertHub:
             kv_layout=self.bank.kv_layout,
             page=(self.bank.core.page if kv_layout == "paged" else None),
             pool_pages=(self.bank.core.pool.n_pages
-                        if kv_layout == "paged" else None))
+                        if kv_layout == "paged" else None),
+            chunk_len=(self.bank.core.chunk_len
+                       if kv_layout == "paged" else None))
         if not self.spec.bankable:
             raise ValueError(
                 f"{model.cfg.family!r} capacity-dispatch MoE experts "

@@ -62,7 +62,8 @@ class BankedEngine:
                  batch_buckets: Optional[Sequence[int]] = None,
                  mesh: Optional[Mesh] = None,
                  kv_layout: str = "ring", page_size: int = 8,
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None,
+                 chunk_len: Optional[int] = None):
         if not params_list:
             raise ValueError("BankedEngine needs at least one expert")
         self.core = EngineCore(model, params_list, max_len=max_len,
@@ -70,7 +71,7 @@ class BankedEngine:
                                len_buckets=len_buckets,
                                batch_buckets=batch_buckets, mesh=mesh,
                                kv_layout=kv_layout, page_size=page_size,
-                               pool_pages=pool_pages)
+                               pool_pages=pool_pages, chunk_len=chunk_len)
         self.model = model
         self.n_experts = self.core.n_experts
         self.mesh = self.core.mesh
@@ -267,7 +268,9 @@ def plan_placement(registry, *, mesh: Optional[Mesh] = None,
             page_size=(engines[0].core.page
                        if engines[0].kv_layout == "paged" else 8),
             pool_pages=(engines[0].core.pool.n_pages
-                        if engines[0].kv_layout == "paged" else None))
+                        if engines[0].kv_layout == "paged" else None),
+            chunk_len=(engines[0].core.chunk_len
+                       if engines[0].kv_layout == "paged" else None))
         sid = len(shards)
         shards.append(Shard(sid=sid, experts=tuple(experts), bank=bank,
                             devices=devices))

@@ -81,6 +81,13 @@ class SchedulerConfig:
     #                                 sanitizer's invariants under real
     #                                 traffic (serving_bench
     #                                 --check-invariants)
+    prefill_tokens_per_step: int = 0
+    #                                 per-shard prompt-token budget for
+    #                                 pending prefill chunks each step
+    #                                 (0 = unbounded); at least one chunk
+    #                                 always dispatches, so whales make
+    #                                 progress while bounded budgets keep
+    #                                 co-resident decode latency flat
 
 
 @dataclasses.dataclass
@@ -579,6 +586,22 @@ class Scheduler:
                 self._done.append(self._response(
                     p, name, gen[i, :p.req.max_new_tokens]))
 
+    def _prefill_chunks(self) -> None:
+        """Issue pending prefill chunks of partially-prefilled waves,
+        bounded per shard by ``SchedulerConfig.prefill_tokens_per_step``
+        (0 = drain). Runs between admission and decode ticks — the
+        disaggregation point: a whale prompt admitted with deferred
+        chunks spends at most the budget per step, and the decode ticks
+        that follow run every step regardless of how much prefill work
+        is still queued. A wave only becomes decode-eligible once its
+        last chunk lands (chunk cursor tracked FIFO on the wave)."""
+        budget = self.config.prefill_tokens_per_step
+        for shard in self.shards:
+            eng = self._shard_engine(shard)
+            if eng is not None and getattr(eng, "core", None) is not None \
+                    and eng.core.has_pending_chunks:
+                eng.core.prefill_step(budget)
+
     def _tick_engines(self, *, defer: bool = False) -> None:
         """Advance every shard's resident waves one token. With
         ``defer`` the decode dispatches are only enqueued — no shard's
@@ -666,7 +689,8 @@ class RoutedServer:
                  placement: Optional[PlacementPlan] = None,
                  executor: "str | DispatchExecutor" = "overlapped",
                  hub: Optional[ExpertHub] = None,
-                 check_every: int = 0):
+                 check_every: int = 0,
+                 prefill_tokens_per_step: int = 0):
         self.matcher = matcher
         self.registry = registry
         self.placement = placement
@@ -690,11 +714,11 @@ class RoutedServer:
             # increments take the hub lock from here on (hits_lock)
             hub.bind_popularity(self.router.expert_hits,
                                 router=self.router)
-        self.scheduler = Scheduler(self.router, registry,
-                                   SchedulerConfig(max_batch=max_batch,
-                                                   check_every=check_every),
-                                   placement=placement,
-                                   executor=executor, hub=hub)
+        self.scheduler = Scheduler(
+            self.router, registry,
+            SchedulerConfig(max_batch=max_batch, check_every=check_every,
+                            prefill_tokens_per_step=prefill_tokens_per_step),
+            placement=placement, executor=executor, hub=hub)
 
     def close(self) -> None:
         """Join background threads (hub staging worker); idempotent."""

@@ -123,6 +123,60 @@ def test_lint_lifecycle_release_in_finally_passes():
     assert not lint.lint_source(src, "src/repro/serve/scheduler.py")
 
 
+def test_lint_catches_unbucketed_prefill_shape():
+    """L006: a prefill/suffix dispatch keyed on a raw traffic shape
+    mints executables per prompt length — the bucket bound is void."""
+    src = textwrap.dedent("""
+        def admit(self, toks):
+            S = toks.shape[1]
+            logits = self._prefill_fn(2, S)(self.params, toks)
+            return logits
+    """)
+    vs = lint.lint_source(src, "src/repro/serve/planted.py")
+    assert any(v.rule == "L006" for v in vs), vs
+    src = textwrap.dedent("""
+        def admit(self, toks):
+            k = toks.shape[1] // 16
+            out = self._suffix_fn(1, k)(self.params, toks)
+            return out
+    """)
+    vs = lint.lint_source(src, "src/repro/serve/planted.py")
+    assert any(v.rule == "L006" for v in vs), vs
+
+
+def test_lint_bucket_derived_prefill_shapes_pass():
+    """Lengths derived from the bucket/chunk geometry — bucket_for,
+    chunk_len, len_buckets, chunk indices off the ladder — are the
+    blessed currency and must not trip L006."""
+    src = textwrap.dedent("""
+        def admit(self, toks, rows):
+            Bb, Sb = self.pad_shape(rows, toks.shape[1])
+            logits = self._prefill_fn(Bb, Sb)(self.params, toks)
+            for k in range(Sb // self.chunk_len):
+                if k == 0:
+                    out = self._prefill_fn(Bb, self.chunk_len)(
+                        self.params, toks)
+                else:
+                    out = self._suffix_fn(Bb, k)(self.params, toks)
+            top = self._prefill_fn(Bb, max(self.len_buckets))(
+                self.params, toks)
+            return logits, out, top
+    """)
+    vs = lint.lint_source(src, "src/repro/serve/planted.py")
+    assert not [v for v in vs if v.rule == "L006"], vs
+
+
+def test_lint_l006_clean_on_real_core():
+    """The real engine core's dispatch sites must all derive from the
+    bucket geometry (the rule was designed against them)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "src", "repro",
+                        "serve", "core.py")
+    with open(path) as f:
+        src = f.read()
+    vs = lint.lint_source(src, "src/repro/serve/core.py")
+    assert not [v for v in vs if v.rule == "L006"], vs
+
+
 # -- baseline parsing --------------------------------------------------------
 
 

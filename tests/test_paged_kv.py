@@ -54,6 +54,12 @@ def test_page_pool_refcount_free_list_invariants(E, n_pages, seed):
             p = held[e].pop(int(rng.integers(len(held[e]))))
             pool.release(e, [p])
         pool.check()
+        # the counters pair (sampled by --check-invariants) conserves
+        # under every interleaving: free + used == E * n_pages, with
+        # free agreeing with the per-expert free lists
+        c = pool.counters()
+        assert c["free"] + c["used"] == E * n_pages, c
+        assert c["free"] == sum(pool.free_count(e2) for e2 in range(E))
         # refcounts mirror the shadow ledger exactly
         for e2 in range(E):
             want = np.bincount(held[e2], minlength=n_pages) \
@@ -64,6 +70,26 @@ def test_page_pool_refcount_free_list_invariants(E, n_pages, seed):
             pool.release(e, [p])
     pool.check()
     assert all(pool.free_count(e) == n_pages for e in range(E))
+
+
+def test_pool_counters_track_residency_not_refcounts():
+    """counters() counts page *residency* (off the free list), so a
+    retain/release cycle on a held page must not move it — only the
+    final release that returns the page to the free list does."""
+    pool = PagePool(2, 10, 8)
+    total = 2 * 10
+    assert pool.counters() == {"free": total, "used": 0}
+    a = pool.alloc(0, 3)
+    b = pool.alloc(1, 5)
+    assert pool.counters() == {"free": total - 8, "used": 8}
+    pool.retain(0, a)                  # extra refs: residency unchanged
+    assert pool.counters()["used"] == 8
+    pool.release(0, a)
+    assert pool.counters()["used"] == 8
+    pool.release(0, a)                 # last ref: pages go free
+    pool.release(1, b)
+    assert pool.counters() == {"free": total, "used": 0}
+    pool.check()
 
 
 def test_page_pool_double_free_and_stale_retain_raise():
@@ -302,7 +328,11 @@ def test_wrap_forces_copy_on_write_and_stays_identical(matcher, bench,
     e = names.index(got_p[0].expert)
     st = reg_p[e].backend.stats
     assert st.pages_copied >= 2, st
-    reg_p[e].backend.core.pool.check()
+    pool = reg_p[e].backend.core.pool
+    pool.check()
+    # COW remaps moved references between pages but conserved the books
+    c = pool.counters()
+    assert c["free"] + c["used"] == pool.n_experts * pool.n_pages, c
 
 
 # -- exhaustion / backpressure ----------------------------------------------
