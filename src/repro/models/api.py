@@ -70,6 +70,24 @@ class BaseModel:
         raise NotImplementedError(
             f"{type(self).__name__} does not support the paged KV layout")
 
+    # -- speculative verify protocol (opt-in per family) ------------------
+    @property
+    def supports_verify(self) -> bool:
+        """Whether this family implements the speculative-verify protocol
+        (``verify`` / ``paged_verify``): score a K+1 token window in one
+        dispatch with *per-row* cache positions, bitwise identical to
+        K+1 chained ``decode`` steps."""
+        return False
+
+    def verify(self, params, cache, pos, t, batch):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support speculative verify")
+
+    def paged_verify(self, params, pool, table, pos, t, batch, *,
+                     page: int):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support speculative verify")
+
     # -- shapes ------------------------------------------------------------
     def cache_capacity(self, seq_len: int) -> int:
         w = self.cfg.sliding_window

@@ -45,10 +45,15 @@ def _gqa_av(p, v):
 
 
 def _edge_mask(q_pos, kv_pos, window: int, causal: bool = True):
-    """(Sq, Sk) allowed-edge mask. q_pos: (Sq,), kv_pos: (Sk,) absolute
-    positions; kv_pos == -1 marks an empty cache slot (always masked)."""
-    qp = q_pos[:, None]
-    kp = kv_pos[None, :]
+    """Allowed-edge mask. Shared positions — q_pos (Sq,), kv_pos (Sk,)
+    — give an (Sq, Sk) mask; per-row positions — q_pos (B, Sq), kv_pos
+    (B, Sk), the speculative-verify path where rows advance by
+    different accepted-prefix lengths — give (B, Sq, Sk). kv_pos == -1
+    marks an empty cache slot (always masked); the comparisons are
+    elementwise either way, so the two ranks agree wherever a per-row
+    mask carries the same positions in every row."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
     m = kp >= 0
     if causal:
         m &= kp <= qp
@@ -63,17 +68,22 @@ def attention(q, k, v, *, q_pos, kv_pos, window: int = 0, chunk: int = 0,
 
     q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh); q_pos: (Sq,) int32 absolute
     query positions; kv_pos: (Sk,) int32 absolute key positions (-1 empty).
-    Returns (B, Sq, H, dh) in q.dtype. ``chunk`` selects the blockwise
-    online-softmax path when it tiles Sk.
+    Per-row positions — q_pos (B, Sq) / kv_pos (B, Sk) — are accepted on
+    the plain path only (speculative verify is single-token decode, which
+    never takes the flash branch). Returns (B, Sq, H, dh) in q.dtype.
+    ``chunk`` selects the blockwise online-softmax path when it tiles Sk.
     """
     Sq, Sk = q.shape[1], k.shape[1]
     scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
     if chunk and Sq > 1 and Sk > chunk and Sk % chunk == 0:
+        if q_pos.ndim != 1 or kv_pos.ndim != 1:
+            raise ValueError("flash path requires shared (1-D) positions")
         return _flash(q, k, v, q_pos=q_pos, kv_pos=kv_pos, window=window,
                       chunk=chunk, scale=scale, causal=causal)
+    m = _edge_mask(q_pos, kv_pos, window, causal)  # (Sq, Sk) | (B, Sq, Sk)
+    m = m[None, :, None, :] if m.ndim == 2 else m[:, :, None, :]
     s = _gqa_scores(q, k) * scale  # (B, Sq, H, Sk)
-    m = _edge_mask(q_pos, kv_pos, window, causal)  # (Sq, Sk)
-    s = jnp.where(m[None, :, None, :], s, NEG_INF)
+    s = jnp.where(m, s, NEG_INF)
     # guard fully-masked rows (empty cache) against NaN
     p = jax.nn.softmax(s, axis=-1)
     o = _gqa_av(p, v)
@@ -260,3 +270,16 @@ def paged_append(k_pages, v_pages, tbl_col, offset, k1, v1):
     (B, 1, KV, dh)."""
     return (k_pages.at[tbl_col, offset].set(k1[:, 0].astype(k_pages.dtype)),
             v_pages.at[tbl_col, offset].set(v1[:, 0].astype(v_pages.dtype)))
+
+
+def paged_append_rows(k_pages, v_pages, tbl_cols, offsets, kw, vw):
+    """Write W tokens per row at *per-row* slots — the speculative
+    verify scatter, where each row's write window starts at its own
+    ``t``. tbl_cols, offsets: (B, W) physical page / in-page slot per
+    written token; kw, vw: (B, W, KV, dh). Advanced indexing pairs the
+    two index arrays elementwise, so (b, w) lands in
+    ``pages[tbl_cols[b, w], offsets[b, w]]``. Rows may only collide on
+    the trash page (write windows are wave-owned per row), where the
+    winning write is irrelevant — the page is never read unmasked."""
+    return (k_pages.at[tbl_cols, offsets].set(kw.astype(k_pages.dtype)),
+            v_pages.at[tbl_cols, offsets].set(vw.astype(v_pages.dtype)))

@@ -13,8 +13,8 @@ import jax.numpy as jnp
 
 from .api import BaseModel, register_family
 from .attention import (attention, cache_append, cache_prefill,
-                        init_kv_cache, paged_append, paged_gather,
-                        paged_scatter_pages, suffix_attend)
+                        init_kv_cache, paged_append, paged_append_rows,
+                        paged_gather, paged_scatter_pages, suffix_attend)
 from .common import (ArchConfig, KeyGen, apply_rope, dense_init, dt,
                      embed_init, ones_init, rmsnorm, softmax_xent, zeros_init)
 from .moe import init_moe, moe_ffn
@@ -116,14 +116,38 @@ def _layer_suffix(x, lp, cfg: ArchConfig, positions, pk, pv, offset):
 
 
 def _layer_decode(x, lp, layer_cache, cfg: ArchConfig, pos_scalar):
-    """Single-token layer. layer_cache: {k, v} slices + shared pos/t."""
+    """Single-token layer. layer_cache: {k, v} slices + shared pos/t.
+    ``pos_scalar`` is the query position — () shared across rows (plain
+    decode) or (B,) per-row; either way the math is elementwise-
+    identical per row."""
+    q_pos = pos_scalar[..., None]         # (1,) shared or (B, 1) per-row
     h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
-    q, k1, v1 = _qkv(h, lp, cfg, pos_scalar[None])
+    q, k1, v1 = _qkv(h, lp, cfg, q_pos)
     new_k, new_v, kv_pos = layer_cache["update"](k1, v1)
-    o = attention(q, new_k, new_v, q_pos=pos_scalar[None], kv_pos=kv_pos,
+    o = attention(q, new_k, new_v, q_pos=q_pos, kv_pos=kv_pos,
                   window=cfg.sliding_window, chunk=0)
     B = x.shape[0]
     x = x + (o.reshape(B, 1, -1) @ lp["wo"]).astype(x.dtype)
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    y, _ = _ffn(h2, lp, cfg, dropless=True)
+    return x + y.astype(x.dtype), (new_k, new_v)
+
+
+def _layer_verify(x, lp, layer_cache, cfg: ArchConfig, q_pos):
+    """Speculative-verify layer: a width-K+1 causal pass over the live
+    cache. x: (B, K1, D); ``q_pos``: (B, K1) per-row absolute positions
+    of the window tokens. The whole window's KV lands in the cache
+    *before* attention and the per-row position mask (kv_pos <= q_pos_i)
+    restricts each query to exactly the key set the chained decode
+    would have seen — this is what makes verification one dispatch of
+    ~one decode-step's wall cost instead of K+1 sequential steps."""
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k1, v1 = _qkv(h, lp, cfg, q_pos)
+    new_k, new_v, kv_pos = layer_cache["update"](k1, v1)
+    o = attention(q, new_k, new_v, q_pos=q_pos, kv_pos=kv_pos,
+                  window=cfg.sliding_window, chunk=0)
+    B, S = x.shape[:2]
+    x = x + (o.reshape(B, S, -1) @ lp["wo"]).astype(x.dtype)
     h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
     y, _ = _ffn(h2, lp, cfg, dropless=True)
     return x + y.astype(x.dtype), (new_k, new_v)
@@ -259,6 +283,96 @@ class DecoderLM(BaseModel):
             "t": t + 1,
         }
         return logits, new_cache
+
+    # ------------------------------------------------------------------
+    # Speculative verify: the whole K+1 token window scored in ONE
+    # parallel causal pass — this is the mechanism that makes
+    # speculation pay: K+1 positions cost roughly one decode step of
+    # wall time (width-K1 matmuls against the same weights) instead of
+    # K+1 sequential steps. Exactness: all K+1 keys/values land in the
+    # cache ring ROPE'd at their absolute positions before attention,
+    # and the per-row position mask (kv_pos <= q_pos_i, kv_pos >= 0)
+    # gives query i exactly the key set a chained one-by-one decode
+    # would have seen; masked slots contribute *exactly* zero (score
+    # NEG_INF -> softmax weight 0.0 in f32, and 0 * finite garbage = 0
+    # — the written KV values are finite projections of valid/clamped
+    # token embeddings, never inf/NaN). Bitwise token identity against
+    # the chained decode ladder is asserted by the differential suite
+    # (tests/test_speculative.py) on the CPU platform CI pins.
+    # ------------------------------------------------------------------
+    @property
+    def supports_verify(self):
+        return True
+
+    def verify(self, params, cache, pos, t, batch):
+        """Verify a K+1 token window per row against the target model.
+
+        cache: {"k", "v"} (L, B, C, KV, dh) ring buffers; pos: (B, C)
+        per-row absolute slot positions (-1 empty); t: (B,) per-row next
+        write position; batch: {"tokens": (B, K+1)} — the last sampled
+        token followed by K draft proposals. Returns (greedy (B, K+1)
+        int32, {"k", "v"}') where greedy[:, i] is the argmax
+        continuation after feeding window token i. All K+1 slots
+        t .. t+K are written optimistically (the caller must guarantee
+        they carry pos == -1 on entry — the engine's no-wrap gate — and
+        rolls back pos over the rejected suffix)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, K1 = tokens.shape
+        C = cache["k"].shape[2]
+        rows = jnp.arange(B)[:, None]                        # (B, 1)
+        offs = t[:, None] + jnp.arange(K1)[None, :]          # (B, K1)
+        slots = offs % C
+        new_pos = pos.at[rows, slots].set(offs)
+        x = self._embed(params, {"tokens": tokens})          # (B, K1, D)
+
+        def body(x, inp):
+            lp, ck, cv = inp
+
+            def update(k1, v1):
+                nk = ck.at[rows, slots].set(k1.astype(ck.dtype))
+                nv = cv.at[rows, slots].set(v1.astype(cv.dtype))
+                return nk, nv, new_pos
+
+            x, (nk, nv) = _layer_verify(
+                x, lp, {"update": update}, cfg, offs)
+            return x, (nk, nv)
+
+        x, (nks, nvs) = jax.lax.scan(body, x, (params["layers"],
+                                               cache["k"], cache["v"]))
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        logits = self._unembed(params, x)                    # (B, K1, V)
+        gs = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return gs, {"k": nks, "v": nvs}
+
+    def paged_verify(self, params, pool, table, pos, t, batch, *, page):
+        """Paged-layout verify: gather each row's dense view through its
+        page table, run the ring ``verify`` on it, scatter the K+1
+        optimistically written slots back through ``paged_append_rows``
+        at per-row offsets. Same identity-by-construction argument as
+        ``paged_decode``. pos: (B, C), t: (B,); returns (greedy, pool')."""
+        tokens = batch["tokens"]
+        K1 = tokens.shape[1]
+        nlp = table.shape[1]
+        C = nlp * page
+        gk, gv = jax.vmap(paged_gather, in_axes=(1, 1, None),
+                          out_axes=0)(pool["k"], pool["v"], table)
+        greedy, nc = self.verify(params, {"k": gk, "v": gv}, pos, t,
+                                 batch)
+        slots = (t[:, None] + jnp.arange(K1)[None, :]) % C     # (B, K1)
+        tbl_cols = jnp.take_along_axis(table, slots // page, axis=1)
+        offs = slots % page
+        idx = slots[:, :, None, None]
+
+        def per_layer(kp, vp, kl, vl):
+            kw = jnp.take_along_axis(kl, idx, axis=1)          # (B, K1, ...)
+            vw = jnp.take_along_axis(vl, idx, axis=1)
+            return paged_append_rows(kp, vp, tbl_cols, offs, kw, vw)
+
+        nk, nv = jax.vmap(per_layer, in_axes=(1, 1, 0, 0),
+                          out_axes=(1, 1))(pool["k"], pool["v"],
+                                           nc["k"], nc["v"])
+        return greedy, {"k": nk, "v": nv}
 
     # ------------------------------------------------------------------
     # Paged KV cache protocol. The forward math is *shared with the ring

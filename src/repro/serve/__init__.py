@@ -22,6 +22,11 @@ The moving parts, front to back:
     ``PagePool`` of fixed-size pages with per-row page tables,
     refcounted prefix sharing, copy-on-write, and prefill deduplication
     — see ``kvcache``).
+  * speculative decoding (``draft``) — a cheap draft model proposes k
+    tokens per wave per tick and the target expert verifies the whole
+    window in ONE batched dispatch (``EngineCore._verify_fn``); greedy
+    verification makes the emitted tokens bitwise identical to the
+    one-by-one path while active rows advance 1..k+1 tokens per tick.
   * ``ExpertHub`` — checkpoint-backed dynamic expert lifecycle: an
     unbounded catalog (cold checkpoint store → host-staged params →
     device bank slot), refcounted residency with popularity-weighted
@@ -38,6 +43,8 @@ design and the paper mapping.
 from .core import (DispatchExecutor, EngineCore, EngineStats,
                    OverlappedExecutor, SerialExecutor, bucket_for,
                    get_executor, make_buckets)
+from .draft import (AlwaysWrongDraft, BigramTableDraft, DraftModel,
+                    MLPBaselineDraft, build_draft)
 from .engine import ExpertEngine
 from .hub import (CatalogEntry, ExpertHub, HubMember, HubStats,
                   NotResident)
@@ -54,6 +61,8 @@ __all__ = [
     "make_buckets",
     "DispatchExecutor", "SerialExecutor", "OverlappedExecutor",
     "get_executor",
+    "DraftModel", "MLPBaselineDraft", "BigramTableDraft",
+    "AlwaysWrongDraft", "build_draft",
     "CatalogEntry", "ExpertHub", "HubMember", "HubStats", "NotResident",
     "PagePool", "PagePoolExhausted", "PrefixCache", "hash_chain",
     "BankedEngine", "BankMember", "PlacementPlan", "Shard",

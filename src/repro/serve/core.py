@@ -55,6 +55,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..sharding import leading_sharding
+from .draft import build_draft
 from .kvcache import PagePool, PagePoolExhausted, PrefixCache, hash_chain
 
 
@@ -159,6 +160,13 @@ class EngineStats:
         self.prefix_dup_rows = 0        # rows deduplicated inside a wave
         self.prefix_pages_shared = 0    # page refs shared instead of built
         self.pages_copied = 0           # copy-on-write page copies
+        # speculative decoding: drafted counts k per verified row,
+        # accepted counts the matched greedy prefix (<= k); fallback
+        # waves wanted to speculate but hit the no-wrap/chunk gate
+        self.verify_steps = 0
+        self.tokens_drafted = 0
+        self.tokens_accepted = 0
+        self.spec_fallback_waves = 0
 
     @property
     def prefill_compiles(self) -> int:
@@ -182,9 +190,22 @@ class EngineStats:
                    for fn in self._core._suffix_fns.values())
 
     @property
+    def verify_compiles(self) -> int:
+        if self._core is None:
+            return 0
+        return sum(_wrapper_compiles(fn)
+                   for fn in self._core._verify_fns.values())
+
+    @property
+    def acceptance_rate(self) -> float:
+        if not self.tokens_drafted:
+            return 0.0
+        return self.tokens_accepted / self.tokens_drafted
+
+    @property
     def jit_cache_entries(self) -> int:
         return (self.prefill_compiles + self.suffix_compiles
-                + self.decode_compiles)
+                + self.decode_compiles + self.verify_compiles)
 
     def __repr__(self) -> str:
         return (f"EngineStats(prefill_compiles={self.prefill_compiles}, "
@@ -247,6 +268,21 @@ class _Wave:
         dataclasses.field(default_factory=list)
     finalize: Optional[Dict[str, Any]] = None
     _tok_c: Optional[jnp.ndarray] = None     # last chunk's packed argmax
+    # speculative-decoding fields (inert on plain waves). Spec waves
+    # advance rows at *different* rates, so they carry per-row
+    # ``row_pos``/``row_t`` instead of the shared pos/t planes; ``cap``
+    # freezes a row once it has written every token it must emit; each
+    # verify tick appends an (emit, adv, acc) device triple to
+    # ``spec_pending``, drained by ``_materialize_spec`` into the host
+    # per-row token buffer ``host_buf`` (column 0 is the prefill token).
+    spec: bool = False
+    row_pos: Optional[jnp.ndarray] = None    # (E, Bb, C) per-row slots
+    row_t: Optional[jnp.ndarray] = None      # (E, Bb) per-row write pos
+    cap: Optional[jnp.ndarray] = None        # (E, Bb) freeze position
+    spec_pending: List[Any] = dataclasses.field(default_factory=list)
+    host_buf: Optional[np.ndarray] = None    # (E, Bb, 1 + steps) int32
+    host_fill: Optional[np.ndarray] = None   # (E, Bb) tokens in host_buf
+    spec_seeded: bool = False                # host_buf column 0 written
 
 
 class EngineCore:
@@ -267,7 +303,8 @@ class EngineCore:
                  kv_layout: str = "ring", page_size: int = 8,
                  pool_pages: Optional[int] = None,
                  prefix_cache_size: int = 1024,
-                 chunk_len: Optional[int] = None):
+                 chunk_len: Optional[int] = None,
+                 speculate_k: int = 0, draft=None):
         if not params_list:
             raise ValueError("EngineCore needs at least one expert")
         if kv_layout not in ("ring", "paged"):
@@ -295,6 +332,7 @@ class EngineCore:
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
         self._suffix_fns: Dict[Tuple[int, int], Any] = {}  # (Bb, chunk k)
         self._decode_fns: Dict[int, Any] = {}
+        self._verify_fns: Dict[Tuple[int, int], Any] = {}  # (Bb, k)
         self._copy_fns: Dict[int, Any] = {}     # COW page-copy, by count
         params = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
                                         *params_list)
@@ -364,6 +402,35 @@ class EngineCore:
                     f"of chunk_len={cl}; offending buckets {bad} (every "
                     "padded prompt must split into whole chunks)")
             self.chunk_len = cl
+        # -- speculative decoding ----------------------------------------
+        self.speculate_k = int(speculate_k)
+        self.draft = None
+        self.draft_name: Optional[str] = None
+        self.draft_state = None
+        if self.speculate_k < 0:
+            raise ValueError(f"speculate_k must be >= 0, got "
+                             f"{self.speculate_k}")
+        if self.speculate_k:
+            if not model.supports_verify:
+                raise ValueError(
+                    f"model family {model.cfg.family!r} does not "
+                    "implement the speculative verify protocol; use "
+                    "speculate_k=0")
+            d = draft if draft is not None else "mlp"
+            if isinstance(d, str):
+                d = build_draft(d, int(model.cfg.padded_vocab))
+            self.draft = d
+            self.draft_name = d.name
+            # draft state is ENGINE-level (leading E axis, bank-sharded
+            # like params): it threads through every verify dispatch, so
+            # an online draft keeps learning across waves
+            st = d.init_state(jax.random.PRNGKey(0), self.n_experts)
+            if self.mesh is not None:
+                st = jax.device_put(
+                    st, leading_sharding(st, "expert", self.mesh))
+            self.draft_state = st
+        elif draft is not None:
+            raise ValueError("draft requires speculate_k > 0")
 
     # -- sharded/bucketed executables -----------------------------------
     def _bank_sharding(self):
@@ -446,7 +513,11 @@ class EngineCore:
         else:
             prefill = nB * len(self.len_buckets)
             suffix = 0
-        return {"prefill": prefill, "suffix": suffix, "decode": nB}
+        # the verify ladder is keyed (Bb, k) with k fixed per engine, so
+        # it adds at most one executable per batch bucket; engines that
+        # never speculate must build none
+        return {"prefill": prefill, "suffix": suffix, "decode": nB,
+                "verify": nB if self.speculate_k else 0}
 
     def _decode_fn(self, Bb: int):
         if Bb not in self._decode_fns:
@@ -474,6 +545,108 @@ class EngineCore:
                     jitted = jax.jit(fn, donate_argnums=(1,))
             self._decode_fns[Bb] = jitted
         return self._decode_fns[Bb]
+
+    def _verify_fn(self, Bb: int, k: int):
+        """Fused draft-k/verify-1 executable for one batch bucket.
+
+        One dispatch per wave per tick: the draft proposes ``k`` tokens
+        from each row's last emitted token, the target scores the whole
+        (Bb, k+1) window through ``model.verify`` (k+1 chained
+        single-token decode steps — bitwise identical to the plain
+        decode ladder, see models/dense.py), the matched greedy prefix
+        is accepted, per-row positions advance by ``adv``, the rejected
+        suffix's optimistically written slots roll back to pos == -1,
+        and the draft observes the verified transitions. Rows frozen at
+        ``cap`` (done emitting) get adv == 0 and acc == -1.
+
+        Returns (emit (E,Bb,k+1) greedy tokens — the host keeps the
+        first ``adv`` per row, adv (E,Bb), acc (E,Bb) accepted draft
+        count or -1, tok' (E,Bb) next feed token, kv', row_pos',
+        row_t', draft_state')."""
+        key = (Bb, k)
+        if key not in self._verify_fns:
+            s = self._bank_sharding()
+            K1 = k + 1
+            draft = self.draft
+            model = self.model
+
+            def accept(window, greedy, row_pos, row_t, tok, cap, dstate):
+                # accepted prefix: drafts matching the greedy chain
+                match = (window[:, 1:] == greedy[:, :-1])
+                j = jnp.cumprod(match.astype(jnp.int32), axis=1) \
+                    .sum(axis=1)                       # (Bb,) <= k
+                remaining = jnp.maximum(cap - row_t, 0)
+                adv = jnp.minimum(j + 1, remaining)    # >= 1 while active
+                active = remaining > 0
+                acc = jnp.where(active, j, -1).astype(jnp.int32)
+                # roll back the rejected suffix: written slots past the
+                # accepted prefix return to pos == -1 (they were -1 on
+                # entry — the admit gate guarantees slots t..t+k are
+                # unused and never wrap onto live context)
+                C = row_pos.shape[1]
+                offs = row_t[:, None] + jnp.arange(K1)[None, :]
+                keep = jnp.arange(K1)[None, :] < adv[:, None]
+                rowsB = jnp.arange(Bb)[:, None]
+                new_pos = row_pos.at[rowsB, offs % C].set(
+                    jnp.where(keep, offs, -1).astype(row_pos.dtype))
+                new_t = row_t + adv
+                tok2 = jnp.where(
+                    active,
+                    jnp.take_along_axis(
+                        greedy, jnp.maximum(adv - 1, 0)[:, None],
+                        axis=1)[:, 0],
+                    tok)
+                dstate2 = draft.observe(dstate, window, greedy, adv)
+                return (greedy, adv.astype(jnp.int32), acc, tok2,
+                        new_pos, new_t, dstate2)
+
+            if self.kv_layout == "paged":
+                # (params, kv_pool, table, row_pos, row_t, tok, cap,
+                #  dstate) -> (emit, adv, acc, tok', kv_pool', row_pos',
+                #  row_t', dstate')
+                def one(p, pool, tbl, row_pos, row_t, tok, cap, dstate):
+                    drafts = draft.propose(dstate, tok, k)
+                    window = jnp.concatenate([tok[:, None], drafts], 1)
+                    greedy, pool = model.paged_verify(
+                        p, pool, tbl, row_pos, row_t,
+                        {"tokens": window}, page=self.page)
+                    (emit, adv, acc, tok2, new_pos, new_t,
+                     dstate2) = accept(window, greedy, row_pos, row_t,
+                                       tok, cap, dstate)
+                    return emit, adv, acc, tok2, pool, new_pos, new_t, \
+                        dstate2
+
+                fn = jax.vmap(one)
+                if s is not None:
+                    jitted = jax.jit(
+                        fn, in_shardings=(s,) * 8,
+                        out_shardings=(s,) * 8, donate_argnums=(1,))
+                else:
+                    jitted = jax.jit(fn, donate_argnums=(1,))
+            else:
+                # (params, cache, row_pos, row_t, tok, cap, dstate) ->
+                # (emit, adv, acc, tok', cache', row_pos', row_t',
+                #  dstate')
+                def one(p, cache, row_pos, row_t, tok, cap, dstate):
+                    drafts = draft.propose(dstate, tok, k)
+                    window = jnp.concatenate([tok[:, None], drafts], 1)
+                    greedy, cache = model.verify(
+                        p, cache, row_pos, row_t, {"tokens": window})
+                    (emit, adv, acc, tok2, new_pos, new_t,
+                     dstate2) = accept(window, greedy, row_pos, row_t,
+                                       tok, cap, dstate)
+                    return emit, adv, acc, tok2, cache, new_pos, \
+                        new_t, dstate2
+
+                fn = jax.vmap(one)
+                if s is not None:
+                    jitted = jax.jit(
+                        fn, in_shardings=(s,) * 7,
+                        out_shardings=(s,) * 8, donate_argnums=(1,))
+                else:
+                    jitted = jax.jit(fn, donate_argnums=(1,))
+            self._verify_fns[key] = jitted
+        return self._verify_fns[key]
 
     def _copy_pages_fn(self, m: int):
         """Jitted COW page copier for ``m`` (expert, src, dst) triples.
@@ -519,6 +692,39 @@ class EngineCore:
         """(batch bucket, length bucket) this admission would snap to."""
         return (bucket_for(n_rows, self.batch_buckets),
                 bucket_for(prompt_len, self.len_buckets))
+
+    def _make_spec_wave(self, uids, per_row, done, Bb: int, Sb: int,
+                        steps: int, *, cache=None, tok=None,
+                        row_pos=None, row_t=None, table=None,
+                        pages_held=None, register=None) -> _Wave:
+        """Assemble a speculative wave: per-row position planes, the
+        per-row freeze position ``cap`` (a row stops once it has written
+        its last emitted token; padding rows freeze immediately), the
+        host-side token buffer, and the sharding commit — every
+        wave-carried array must enter the first verify with the bank
+        sharding or pjit mints one executable per sharding combination
+        (see the commit comment in ``_admit_paged``)."""
+        E = self.n_experts
+        cap = np.full((E, Bb), Sb, np.int32)
+        for local, ms in per_row.items():
+            for i, m in enumerate(ms):
+                cap[local, i] = Sb + m - 1
+        cap = jnp.asarray(cap)
+        s = self._bank_sharding()
+        if s is not None:
+            row_pos, row_t, tok, cap = jax.device_put(
+                (row_pos, row_t, tok, cap), s)
+            if table is not None:
+                table = jax.device_put(table, s)
+        return _Wave(uids=uids, per_row_new=per_row, done=done,
+                     cache=cache, tok=tok, emitted=[tok[..., 0]],
+                     steps_left=steps, table=table,
+                     pages_held=pages_held if pages_held is not None
+                     else {},
+                     register=register if register is not None else [],
+                     spec=True, row_pos=row_pos, row_t=row_t, cap=cap,
+                     host_buf=np.zeros((E, Bb, steps + 1), np.int32),
+                     host_fill=np.zeros((E, Bb), np.int32))
 
     def admit_wave(self, groups: Mapping[int, Tuple[Sequence[Any],
                                                     Sequence[np.ndarray],
@@ -584,10 +790,24 @@ class EngineCore:
             self.stats.prefill_rows_computed += n_rows
             self.stats.prefill_tokens_computed += n_rows * Sb
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[..., None]
-            w = _Wave(uids=uids, per_row_new=per_row, done=done,
-                      cache=cache, tok=tok, emitted=[tok[..., 0]],
-                      steps_left=max(m for ms in per_row.values()
-                                     for m in ms) - 1)
+            steps = max(m for ms in per_row.values() for m in ms) - 1
+            sk = self.speculate_k
+            # no-wrap gate: every slot a verify may optimistically write
+            # (up to Sb + steps - 1 + k) must fit the ring without
+            # wrapping onto live context
+            if sk and steps > 0 and Sb + steps + sk <= self.max_len:
+                w = self._make_spec_wave(
+                    uids, per_row, done, Bb, Sb, steps,
+                    cache={"k": cache["k"], "v": cache["v"]}, tok=tok,
+                    row_pos=jnp.broadcast_to(
+                        cache["pos"][:, None], (E, Bb, self.max_len)),
+                    row_t=jnp.broadcast_to(cache["t"][:, None], (E, Bb)))
+            else:
+                if sk:
+                    self.stats.spec_fallback_waves += 1
+                w = _Wave(uids=uids, per_row_new=per_row, done=done,
+                          cache=cache, tok=tok, emitted=[tok[..., 0]],
+                          steps_left=steps)
         self.stats.rows_served += n_rows
         self.stats.rows_padded += E * Bb - n_rows
         self.stats.prefill_tokens_submitted += n_submitted
@@ -660,7 +880,21 @@ class EngineCore:
         chunked = self.chunk_len is not None and Sb > self.chunk_len
         ppc = (self.chunk_len // page) if chunked else npp
         start_chunk: Dict[Tuple[int, int], int] = {}
-        wr_pages = sorted({(s % C) // page for s in range(Sb, Sb + steps)})
+        # speculative gate: the last verify of a row may start at
+        # Sb + steps - 1 and optimistically write k slots past it, so
+        # the whole write window [Sb, Sb + steps + k) must fit without
+        # wrapping — which also keeps every speculative write inside
+        # wave-owned decode pages (never a shared/prompt page) and COW
+        # out of the picture. Chunked whale waves fall back to plain
+        # decode (still token-identical, just unaccelerated).
+        sk = self.speculate_k
+        spec_ok = bool(sk) and steps > 0 and Sb + steps + sk <= C \
+            and not chunked
+        if sk and not spec_ok:
+            self.stats.spec_fallback_waves += 1
+        slack = sk if spec_ok else 0
+        wr_pages = sorted({(s % C) // page
+                           for s in range(Sb, Sb + steps + slack)})
         wr_prompt = [lp for lp in wr_pages if lp < npp]
         wr_decode = [lp for lp in wr_pages if lp >= npp]
         register_ok = not wr_prompt      # decode never clobbers a prefix
@@ -899,6 +1133,15 @@ class EngineCore:
                          pages_held=pages_held, register=register,
                          pending_chunks=pending, finalize=fin)
         tok = tok[..., None]
+        if spec_ok:
+            # per-row position planes (rows advance at different rates);
+            # _make_spec_wave performs the sharding commit
+            return self._make_spec_wave(
+                uids, per_row, done, Bb, Sb, steps, cache=None, tok=tok,
+                row_pos=jnp.broadcast_to(pos_dev[:, None], (E, Bb, C)),
+                row_t=jnp.broadcast_to(t_dev[:, None], (E, Bb)),
+                table=table_dev, pages_held=pages_held,
+                register=register)
         if s is not None:
             # commit every wave-carried array to the bank sharding now:
             # tick 1 must present the decode executable with the same
@@ -1009,6 +1252,12 @@ class EngineCore:
                 continue
             if w.steps_left > 0:
                 Bb = w.tok.shape[1]
+                if w.spec:
+                    self._spec_tick(w, Bb)
+                    advanced += 1
+                    if not defer:
+                        self._materialize_spec(w)
+                    continue
                 if self.kv_layout == "paged":
                     # the pool buffers thread through every wave's tick
                     # (donated each dispatch); pos/t stay per-wave
@@ -1030,6 +1279,29 @@ class EngineCore:
             self.harvest()
         return advanced
 
+    def _spec_tick(self, w: _Wave, Bb: int) -> None:
+        """One verify dispatch for a speculative wave: every active row
+        advances by at least one token (the corrected greedy token when
+        all drafts miss), so the wave finishes in at most ``steps``
+        ticks and usually far fewer. ``steps_left`` stays the plain
+        tick-count upper bound; harvest zeroes it early once every row
+        has its tokens."""
+        args = (w.row_pos, w.row_t, w.tok[..., 0], w.cap,
+                self.draft_state)
+        if self.kv_layout == "paged":
+            (emit, adv, acc, tok2, self.kv_pool, w.row_pos, w.row_t,
+             self.draft_state) = self._verify_fn(Bb, self.speculate_k)(
+                self.params, self.kv_pool, w.table, *args)
+        else:
+            (emit, adv, acc, tok2, w.cache, w.row_pos, w.row_t,
+             self.draft_state) = self._verify_fn(Bb, self.speculate_k)(
+                self.params, w.cache, *args)
+        w.tok = tok2[..., None]
+        w.spec_pending.append((emit, adv, acc))
+        w.steps_left -= 1
+        self.stats.decode_steps += 1
+        self.stats.verify_steps += 1
+
     # -- harvest ---------------------------------------------------------
     def _materialize(self, w: _Wave, upto: int) -> None:
         """Bring ``emitted[:upto]`` to host in one blocking transfer."""
@@ -1042,6 +1314,78 @@ class EngineCore:
         w.n_host = upto
         self.stats.host_blocks += 1
 
+    def _materialize_spec(self, w: _Wave) -> None:
+        """Drain a speculative wave's pending (emit, adv, acc) verify
+        triples (plus the prefill token plane the first time) to host in
+        one batched transfer, advancing each row's token buffer by its
+        *actual* accepted count — the host learns real progress, which
+        is what lets harvest retire the wave after ~steps/E[adv] ticks
+        instead of steps."""
+        if w.spec_seeded and not w.spec_pending:
+            return
+        first, triples = jax.device_get((w.emitted[0], w.spec_pending))
+        self.stats.host_blocks += 1
+        if not w.spec_seeded:
+            w.emitted[0] = np.asarray(first)
+            w.n_host = max(w.n_host, 1)
+            w.host_buf[:, :, 0] = w.emitted[0]
+            np.maximum(w.host_fill, 1, out=w.host_fill)
+            w.spec_seeded = True
+        k = self.speculate_k
+        for emit, adv, acc in triples:
+            emit, adv, acc = (np.asarray(x) for x in (emit, adv, acc))
+            for local, row_uids in w.uids.items():
+                for i in range(len(row_uids)):
+                    a = int(adv[local, i])
+                    if a > 0:
+                        f = int(w.host_fill[local, i])
+                        w.host_buf[local, i, f:f + a] = emit[local, i, :a]
+                        w.host_fill[local, i] = f + a
+                    c = int(acc[local, i])
+                    if c >= 0:
+                        self.stats.tokens_drafted += k
+                        self.stats.tokens_accepted += c
+        w.spec_pending = []
+
+    def _harvest_spec(self, w: _Wave) -> None:
+        """Emit every speculative row whose token buffer is full; once
+        all rows are done, zero ``steps_left`` so the wave retires now
+        instead of burning its remaining tick budget.
+
+        The device transfer is gated the same way plain waves gate
+        ``_materialize`` (``need > n_host``): each verify advances a row
+        by at most ``k + 1`` tokens, so until the pending triples could
+        arithmetically complete some unfinished row there is nothing to
+        emit and the sync is skipped — without this, speculative waves
+        host-block every harvest and give back much of the verify win.
+        """
+        if w.spec_pending and w.steps_left > 0:
+            bound = (len(w.spec_pending) * (self.speculate_k + 1)
+                     + (0 if w.spec_seeded else 1))
+            if not any(not w.done[local][i]
+                       and w.host_fill[local, i] + bound
+                       >= w.per_row_new[local][i]
+                       for local, row_uids in w.uids.items()
+                       for i in range(len(row_uids))):
+                return
+        self._materialize_spec(w)
+        for local, row_uids in w.uids.items():
+            for i, uid in enumerate(row_uids):
+                if w.done[local][i]:
+                    continue
+                n = w.per_row_new[local][i]
+                if w.host_fill[local, i] >= n:
+                    seq = np.array(w.host_buf[local, i, :n], np.int32)
+                    self._finished.append((local, uid, seq))
+                    self.stats.tokens_generated += n
+                    w.done[local][i] = True
+        if all(all(d) for d in w.done.values()):
+            w.steps_left = 0
+        if w.steps_left <= 0 and all(all(d) for d in w.done.values()):
+            self._active.remove(w)
+            if self.kv_layout == "paged":
+                self._retire_paged(w)
+
     def harvest(self) -> None:
         """Emit every row whose ``max_new`` tokens are all available and
         retire fully-done waves.
@@ -1052,6 +1396,9 @@ class EngineCore:
         is gone from the deferred path entirely.
         """
         for w in list(self._active):
+            if w.spec:
+                self._harvest_spec(w)
+                continue
             have = len(w.emitted)
             need = 0
             for local, row_uids in w.uids.items():

@@ -1,0 +1,157 @@
+"""Draft models for speculative decoding.
+
+A draft proposes ``k`` cheap continuation tokens per wave row; the
+target expert verifies the whole window in one batched dispatch
+(``models.dense.verify``) and accepts the matched greedy prefix.
+Correctness never depends on the draft — any proposal sequence yields
+bitwise-identical emitted tokens, only the acceptance rate (and thus
+throughput) changes — so drafts are free to be heuristic, adversarial,
+or to learn online from the verifier's corrections.
+
+All methods are pure-JAX and traced *inside* the engine's jitted
+verify executable, operating on a single expert's state slice; the
+engine stacks per-expert states on a leading E axis (``init_state``)
+and vmaps over it exactly like model params. State therefore lives on
+device with the bank sharding and persists across waves — the bigram
+draft keeps learning for the lifetime of the engine.
+
+Drafts:
+
+- ``MLPBaselineDraft`` ("mlp", default): the paper's always-resident
+  MLP-Softmax baseline (``core/mlp_baseline.py``) re-purposed as a
+  next-token proposer over a fixed random token embedding. Static —
+  it is the "cheap proxy predicts, big model verifies" pattern.
+- ``BigramTableDraft`` ("table"): an online-distilled per-bank draft
+  head — a (V+1,) successor table updated from every verified
+  (window token -> greedy continuation) pair. On the greedy decode
+  cycles small models collapse into, it converges to the target's own
+  transition function and acceptance approaches 1.
+- ``AlwaysWrongDraft`` ("always-wrong"): adversarial zero-acceptance
+  draft proposing the out-of-range id ``vocab`` (argmax over logits is
+  always < vocab, so no proposal is ever accepted; the embedding
+  gather clamps, keeping verification deterministic). Tests use it to
+  prove the >= 1 token-per-verify progress guarantee.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.mlp_baseline import forward as mlp_forward, init_mlp
+
+
+def _stack(per_expert):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_expert)
+
+
+class DraftModel:
+    """Interface. ``propose``/``observe`` see ONE expert's state slice."""
+
+    name = "?"
+
+    def init_state(self, key, n_experts: int):
+        """Stacked (leading E axis) per-expert draft state pytree."""
+        raise NotImplementedError
+
+    def propose(self, state, tok, k: int):
+        """tok (B,) int32 last emitted token -> (B, k) int32 proposals."""
+        raise NotImplementedError
+
+    def observe(self, state, window, greedy, adv):
+        """Learn from a verify outcome: window/greedy (B, K+1), adv (B,)
+        tokens emitted this verify (0 for frozen rows). Returns new
+        state; static drafts return it unchanged."""
+        return state
+
+    def _chain(self, state, tok, k, step):
+        def body(cur, _):
+            nxt = step(state, cur)
+            return nxt, nxt
+
+        _, drafts = jax.lax.scan(body, tok, None, length=k)
+        return jnp.moveaxis(drafts, 0, 1)  # (k, B) -> (B, k)
+
+
+class MLPBaselineDraft(DraftModel):
+    name = "mlp"
+
+    def __init__(self, vocab: int, in_dim: int = 32):
+        self.vocab = vocab
+        self.in_dim = in_dim
+
+    def _init_one(self, key):
+        kp, ke = jax.random.split(key)
+        params, states = init_mlp(kp, in_dim=self.in_dim,
+                                  n_classes=self.vocab)
+        emb = jax.random.normal(ke, (self.vocab, self.in_dim),
+                                jnp.float32)
+        return {"params": params, "states": states, "emb": emb}
+
+    def init_state(self, key, n_experts: int):
+        return _stack([self._init_one(k)
+                       for k in jax.random.split(key, n_experts)])
+
+    def propose(self, state, tok, k: int):
+        def step(st, cur):
+            x = st["emb"][cur]
+            logits, _ = mlp_forward(st["params"], st["states"], x,
+                                    train=False)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        return self._chain(state, tok, k, step)
+
+
+class BigramTableDraft(DraftModel):
+    name = "table"
+
+    def __init__(self, vocab: int):
+        self.vocab = vocab
+
+    def init_state(self, key, n_experts: int):
+        # identity successor (propose repetition) + sentinel row `vocab`
+        # absorbing masked observe writes
+        tbl = jnp.arange(self.vocab + 1, dtype=jnp.int32)
+        return {"table": jnp.broadcast_to(tbl, (n_experts,) + tbl.shape)}
+
+    def propose(self, state, tok, k: int):
+        return self._chain(state, tok, k,
+                           lambda st, cur: st["table"][cur])
+
+    def observe(self, state, window, greedy, adv):
+        # every emitted pair (window[:, i] -> greedy[:, i]), i < adv,
+        # is a verified target transition; unemitted columns (and frozen
+        # rows, adv == 0) are routed to the never-read sentinel row
+        K1 = window.shape[1]
+        mask = jnp.arange(K1)[None, :] < adv[:, None]
+        idx = jnp.where(mask, window, self.vocab)
+        return {"table": state["table"].at[idx].set(
+            jnp.where(mask, greedy, 0).astype(jnp.int32))}
+
+
+class AlwaysWrongDraft(DraftModel):
+    name = "always-wrong"
+
+    def __init__(self, vocab: int):
+        self.vocab = vocab
+
+    def init_state(self, key, n_experts: int):
+        return {"_": jnp.zeros((n_experts,), jnp.int32)}
+
+    def propose(self, state, tok, k: int):
+        # id == vocab is outside argmax's range, so never accepted; the
+        # verifier's embedding gather clamps it deterministically
+        return jnp.full(tok.shape + (k,), self.vocab, jnp.int32)
+
+
+_DRAFTS = {
+    "mlp": MLPBaselineDraft,
+    "table": BigramTableDraft,
+    "always-wrong": AlwaysWrongDraft,
+}
+
+
+def build_draft(name: str, vocab: int) -> DraftModel:
+    if name not in _DRAFTS:
+        raise ValueError(
+            f"unknown draft {name!r}; choose from {sorted(_DRAFTS)}")
+    return _DRAFTS[name](vocab)

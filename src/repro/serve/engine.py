@@ -48,12 +48,14 @@ class ExpertEngine:
                  batch_buckets: Optional[Sequence[int]] = None,
                  kv_layout: str = "ring", page_size: int = 8,
                  pool_pages: Optional[int] = None,
-                 chunk_len: Optional[int] = None):
+                 chunk_len: Optional[int] = None,
+                 speculate_k: int = 0, draft=None):
         self.core = EngineCore(model, [params], max_len=max_len,
                                min_len_bucket=min_len_bucket,
                                batch_buckets=batch_buckets,
                                kv_layout=kv_layout, page_size=page_size,
-                               pool_pages=pool_pages, chunk_len=chunk_len)
+                               pool_pages=pool_pages, chunk_len=chunk_len,
+                               speculate_k=speculate_k, draft=draft)
         self.model = model
         # the caller's unstacked params: plan_placement restacks these
         # into a BankedEngine, so the E=1 leading axis must not leak out

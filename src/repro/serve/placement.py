@@ -63,7 +63,8 @@ class BankedEngine:
                  mesh: Optional[Mesh] = None,
                  kv_layout: str = "ring", page_size: int = 8,
                  pool_pages: Optional[int] = None,
-                 chunk_len: Optional[int] = None):
+                 chunk_len: Optional[int] = None,
+                 speculate_k: int = 0, draft=None):
         if not params_list:
             raise ValueError("BankedEngine needs at least one expert")
         self.core = EngineCore(model, params_list, max_len=max_len,
@@ -71,7 +72,8 @@ class BankedEngine:
                                len_buckets=len_buckets,
                                batch_buckets=batch_buckets, mesh=mesh,
                                kv_layout=kv_layout, page_size=page_size,
-                               pool_pages=pool_pages, chunk_len=chunk_len)
+                               pool_pages=pool_pages, chunk_len=chunk_len,
+                               speculate_k=speculate_k, draft=draft)
         self.model = model
         self.n_experts = self.core.n_experts
         self.mesh = self.core.mesh
@@ -270,7 +272,9 @@ def plan_placement(registry, *, mesh: Optional[Mesh] = None,
             pool_pages=(engines[0].core.pool.n_pages
                         if engines[0].kv_layout == "paged" else None),
             chunk_len=(engines[0].core.chunk_len
-                       if engines[0].kv_layout == "paged" else None))
+                       if engines[0].kv_layout == "paged" else None),
+            speculate_k=engines[0].core.speculate_k,
+            draft=engines[0].core.draft_name)
         sid = len(shards)
         shards.append(Shard(sid=sid, experts=tuple(experts), bank=bank,
                             devices=devices))

@@ -88,6 +88,16 @@ class SchedulerConfig:
     #                                 always dispatches, so whales make
     #                                 progress while bounded budgets keep
     #                                 co-resident decode latency flat
+    speculate_k: Optional[int] = None
+    #                                 speculative-decoding contract:
+    #                                 None inherits whatever each engine
+    #                                 was built with; an int asserts
+    #                                 every tickable shard engine was
+    #                                 built with exactly that
+    #                                 speculate_k (engines own the
+    #                                 verify executables, so the
+    #                                 scheduler can only validate, not
+    #                                 retrofit)
 
 
 @dataclasses.dataclass
@@ -178,6 +188,19 @@ class Scheduler:
             self.shards = [Shard(sid=e, experts=(e,))
                            for e in range(len(registry))]
         self._shard_of = {e: s.sid for s in self.shards for e in s.experts}
+        if self.config.speculate_k is not None:
+            want = int(self.config.speculate_k)
+            for shard in self.shards:
+                eng = self._shard_engine(shard)
+                if eng is None:
+                    continue
+                got = getattr(eng.core, "speculate_k", 0)
+                if got != want:
+                    raise ValueError(
+                        f"SchedulerConfig.speculate_k={want} but shard "
+                        f"{shard.sid} engine was built with "
+                        f"speculate_k={got}; rebuild its engines with "
+                        "the matching speculate_k")
         # queues[expert][len_bucket] -> FIFO of _Pending
         self.queues: Dict[int, Dict[int, collections.deque]] = \
             collections.defaultdict(lambda: collections.defaultdict(
@@ -203,6 +226,26 @@ class Scheduler:
         eng = self._shard_engine(shard)
         return eng is not None and getattr(eng, "kv_layout", "ring") == \
             "paged"
+
+    def speculative_stats(self) -> Dict[str, Any]:
+        """Aggregate speculative-decoding counters over every tickable
+        shard — what the bench records and the CI acceptance-rate floor
+        is asserted against."""
+        drafted = accepted = verifies = fallback = 0
+        for shard in self.shards:
+            eng = self._shard_engine(shard)
+            if eng is None:
+                continue
+            st = eng.stats
+            drafted += st.tokens_drafted
+            accepted += st.tokens_accepted
+            verifies += st.verify_steps
+            fallback += st.spec_fallback_waves
+        return {"tokens_drafted": drafted, "tokens_accepted": accepted,
+                "verify_steps": verifies,
+                "spec_fallback_waves": fallback,
+                "acceptance_rate": accepted / drafted if drafted
+                else 0.0}
 
     # -- admission -------------------------------------------------------
     def submit(self, requests: Sequence[Request]) -> int:
@@ -690,7 +733,8 @@ class RoutedServer:
                  executor: "str | DispatchExecutor" = "overlapped",
                  hub: Optional[ExpertHub] = None,
                  check_every: int = 0,
-                 prefill_tokens_per_step: int = 0):
+                 prefill_tokens_per_step: int = 0,
+                 speculate_k: Optional[int] = None):
         self.matcher = matcher
         self.registry = registry
         self.placement = placement
@@ -717,7 +761,8 @@ class RoutedServer:
         self.scheduler = Scheduler(
             self.router, registry,
             SchedulerConfig(max_batch=max_batch, check_every=check_every,
-                            prefill_tokens_per_step=prefill_tokens_per_step),
+                            prefill_tokens_per_step=prefill_tokens_per_step,
+                            speculate_k=speculate_k),
             placement=placement, executor=executor, hub=hub)
 
     def close(self) -> None:

@@ -12,6 +12,14 @@ only defines behaviour for the degraded environment.
 
 Not supported (not needed by this suite): shrinking, ``assume``,
 composite strategies, stateful testing.
+
+Determinism contract: this fallback is seeded (``0xE7``) and draws a
+fixed example grid, so runs replay bit-identically everywhere. When the
+real hypothesis *is* installed, ``tests/conftest.py`` registers a
+matching "ci" profile (``derandomize=True``, no example database,
+selected under the ``CI`` env var) so property runs are equally
+deterministic there — the speculative differential suite relies on
+this to diff exact token sequences across runs.
 """
 from __future__ import annotations
 

@@ -307,7 +307,8 @@ def test_chunked_executable_bounds_exact(shared_model):
     eng = ExpertEngine(model, params[0], max_len=64, kv_layout="paged",
                        batch_buckets=(1, 2), chunk_len=16)
     bounds = eng.core.executable_bounds()
-    assert bounds == {"prefill": 4, "suffix": 6, "decode": 2}
+    assert bounds == {"prefill": 4, "suffix": 6, "decode": 2,
+                      "verify": 0}
     rng = np.random.default_rng(66)
 
     def drive():
