@@ -405,9 +405,9 @@ def run_scenario(scenario: str, server, bench, names,
     now, busy, i, done_at = 0.0, 0.0, 0, {}
     chunk_steps, overlap_steps = 0, 0
     sched = server.scheduler
-    batches0 = sched.stats["batches"]
-    stalls0 = sched.stats["kv_stalls"]
-    rstalls0 = sched.stats["resident_stalls"]
+    batches0 = sched.stats.batches
+    stalls0 = sched.stats.kv_stalls
+    rstalls0 = sched.stats.resident_stalls
     compiles0 = total_prefill_compiles(server)
     blocks0 = total_host_blocks(server)
     tokens0 = total_tokens(server)
@@ -425,7 +425,7 @@ def run_scenario(scenario: str, server, bench, names,
             eng is not None and getattr(eng, "core", None) is not None
             and eng.core.has_pending_chunks
             for eng in map(sched._shard_engine, sched.shards))
-        ticks0 = sched.stats["ticks"]
+        ticks0 = sched.stats.ticks
         t0 = time.perf_counter()
         resps = sched.step()
         # charge device completion of every harvested response to this
@@ -441,7 +441,7 @@ def run_scenario(scenario: str, server, bench, names,
         busy += dt
         if pending_chunks:
             chunk_steps += 1
-            if sched.stats["ticks"] > ticks0:
+            if sched.stats.ticks > ticks0:
                 overlap_steps += 1
         for r in resps:  # completed during this step
             done_at[r.uid] = now
@@ -468,15 +468,15 @@ def run_scenario(scenario: str, server, bench, names,
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p95_ms": float(np.percentile(lat, 95) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "batches": sched.stats["batches"] - batches0,
+            "batches": sched.stats.batches - batches0,
             "prefill_compiles": total_prefill_compiles(server) - compiles0,
             "host_blocks": blocks,
             "tokens_generated": toks,
             "host_blocks_per_tok": blocks / max(toks, 1),
             "prefill_tokens_computed": pf1[0] - pf0[0],
             "prefill_tokens_submitted": pf1[1] - pf0[1],
-            "kv_stalls": sched.stats["kv_stalls"] - stalls0,
-            "resident_stalls": sched.stats["resident_stalls"] - rstalls0}
+            "kv_stalls": sched.stats.kv_stalls - stalls0,
+            "resident_stalls": sched.stats.resident_stalls - rstalls0}
 
 
 _CSV_HEADER = ("scenario,placement,executor,kv,n,throughput_rps,p50_ms,"
@@ -592,8 +592,8 @@ def run_hub_bench(args) -> None:
             json.dump(payload, fh, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", flush=True)
     if args.check_invariants:
-        checks = (server.scheduler.stats["invariant_checks"]
-                  + base_srv.scheduler.stats["invariant_checks"])
+        checks = (server.scheduler.stats.invariant_checks
+                  + base_srv.scheduler.stats.invariant_checks)
         print(f"# invariants: {checks} mid-run sweeps "
               f"(every {args.check_invariants} steps), all held",
               flush=True)
@@ -761,6 +761,190 @@ def warm_full_ladder(server, rng, hi_bucket: int = 64,
                     core.poll()
 
 
+def _chain_stages(records) -> dict:
+    """uid -> set of lifecycle stages observed in the trace records.
+    Decode/verify spans carry only a wave id, so they are joined onto
+    uids through the wave's prefill span (which lists its uids)."""
+    have: dict = {}
+    wave_uids: dict = {}
+    decode_waves = set()
+    for rec in records:
+        name, a = rec["name"], rec["args"]
+        if name == "request.submit":
+            have.setdefault(a["uid"], set()).add("submit")
+        elif name == "route":
+            for u in a.get("uids", []):
+                have.setdefault(u, set()).add("route")
+        elif name == "request.admit":
+            for u in a.get("uids", []):
+                have.setdefault(u, set()).add("admit")
+        elif name == "wave.prefill":
+            for u in a.get("uids", []):
+                have.setdefault(u, set()).add("prefill")
+            wave_uids[a["wave"]] = list(a.get("uids", []))
+        elif name in ("wave.decode", "wave.verify"):
+            decode_waves.add(a["wave"])
+        elif name == "request.finish":
+            have.setdefault(a["uid"], set()).add("finish")
+    for w in decode_waves:
+        for u in wave_uids.get(w, []):
+            have.setdefault(u, set()).add("decode")
+    return have
+
+
+def _stage_breakdown(records) -> dict:
+    """Per-request stage table from one traced lap: queue/stalled come
+    from the ``request.finish`` event's accounting, prefill/decode from
+    the device spans of the waves each uid rode (decode time of a wave
+    is attributed to every row in it — wave time, not per-token
+    amortization). Returns p50/p95/p99 per stage in milliseconds."""
+    finish: dict = {}
+    prefill_ms: dict = {}
+    wave_uids: dict = {}
+    wave_decode_ms: dict = {}
+    for rec in records:
+        name, a = rec["name"], rec["args"]
+        dur_ms = rec.get("dur", 0.0) / 1e3
+        if name == "request.finish":
+            finish[a["uid"]] = a
+        elif name == "wave.prefill":
+            for u in a.get("uids", []):
+                prefill_ms[u] = prefill_ms.get(u, 0.0) + dur_ms
+            wave_uids[a["wave"]] = list(a.get("uids", []))
+        elif name in ("wave.decode", "wave.verify"):
+            w = a["wave"]
+            wave_decode_ms[w] = wave_decode_ms.get(w, 0.0) + dur_ms
+    decode_ms: dict = {}
+    for w, uids in wave_uids.items():
+        for u in uids:
+            decode_ms[u] = decode_ms.get(u, 0.0) + wave_decode_ms.get(
+                w, 0.0)
+    stages = ("queue_ms", "stalled_ms", "prefill_ms", "decode_ms",
+              "total_ms")
+    rows = {u: {"queue_ms": f.get("queue_ms", 0.0),
+                "stalled_ms": f.get("stalled_ms", 0.0),
+                "prefill_ms": prefill_ms.get(u, 0.0),
+                "decode_ms": decode_ms.get(u, 0.0),
+                "total_ms": f.get("total_ms", 0.0)}
+            for u, f in finish.items()}
+    out = {"requests": len(rows)}
+    for st in stages:
+        vals = np.asarray([r[st] for r in rows.values()]
+                          if rows else [0.0])
+        out[st] = {"p50": float(np.percentile(vals, 50)),
+                   "p95": float(np.percentile(vals, 95)),
+                   "p99": float(np.percentile(vals, 99))}
+    return out
+
+
+def _host_block_parity(spec, reqs) -> "tuple[int, int]":
+    """The tentpole's sync-safety claim, asserted exactly. A *timed*
+    lap cannot carry this comparison: the virtual arrival clock charges
+    real step durations, so two timed laps can legitimately form
+    different waves (and pay different harvest syncs) from timing noise
+    alone. Instead replay the identical request list as a pure state
+    machine — submit everything, drain — from a pinned starting state
+    (draft table restored, prefix caches emptied), once untraced and
+    once traced. Execution is then deterministic, so *any*
+    ``host_blocks`` delta could only come from the tracer itself."""
+    from repro.obs import Tracer
+    sched = spec.scheduler
+    cores = [eng.core for eng in map(sched._shard_engine, sched.shards)
+             if eng is not None
+             and getattr(eng, "core", None) is not None]
+    saved = [c.draft_state for c in cores]   # immutable device pytrees
+
+    def reset():
+        for c, st in zip(cores, saved):
+            c.draft_state = st
+            if getattr(c, "prefix_cache", None) is not None \
+                    and c.pool is not None:
+                for e in range(c.pool.n_experts):
+                    c.prefix_cache.evict_for(e, c.pool.n_pages)
+
+    def drain_lap(tracer):
+        reset()
+        spec.bind_tracer(tracer)
+        b0 = total_host_blocks(spec)
+        try:
+            sched.submit(reqs)
+            while sched.has_work:
+                sched.step()
+        finally:
+            spec.bind_tracer(None)
+        return total_host_blocks(spec) - b0
+
+    hb_off = drain_lap(None)
+    parity_tracer = Tracer()
+    hb_on = drain_lap(parity_tracer)
+    assert parity_tracer.open_device_count() == 0, (
+        f"{parity_tracer.open_device_count()} device span(s) left open "
+        "after a full drain — span balance broke")
+    assert hb_on == hb_off, (
+        f"tracing changed the host sync count on a deterministic "
+        f"replay: {hb_on} traced vs {hb_off} untraced — the tracer "
+        "must close device spans only at existing sync points")
+    return hb_off, hb_on
+
+
+def _traced_lap(args, spec, bench, names, reqs, ref) -> dict:
+    """One extra lap of the identical bursty stream on the *warm*
+    speculative server with lifecycle tracing on. Same process, same
+    jit caches, back to back with the tracing-off reference lap — the
+    in-job comparison CI pins the <3% overhead budget against. Asserts
+    the tentpole's sync-safety claim (``host_blocks`` identical on/off
+    via a deterministic replay, zero device spans left open) and that
+    at least one request produced a complete
+    submit→route→admit→prefill→decode→finish span chain, then exports
+    the Chrome trace (+ greppable JSONL sibling)."""
+    from repro.obs import Tracer
+    hb_off, hb_on = _host_block_parity(spec, reqs)
+    tracer = Tracer()
+    spec.bind_tracer(tracer)
+    try:
+        rt = run_scenario("bursty", spec, bench, names, args.requests,
+                          args.rate, args.seed, reqs=reqs)
+    finally:
+        spec.bind_tracer(None)
+    assert tracer.open_device_count() == 0, (
+        f"{tracer.open_device_count()} device span(s) left open after "
+        "a full drain — span balance broke")
+    records = tracer.records()
+    need = {"submit", "route", "admit", "prefill", "decode", "finish"}
+    chains = [u for u, s in _chain_stages(records).items() if need <= s]
+    assert chains, (
+        "no request produced a complete span chain "
+        "(submit→route→admit→prefill→decode→finish)")
+    regression = 100.0 * (1.0 - rt["decoded_tok_per_s"]
+                          / max(ref["decoded_tok_per_s"], 1e-9))
+    n_events = tracer.export_chrome(args.trace)
+    jsonl = args.trace + "l"  # OUT.json -> OUT.jsonl
+    tracer.export_jsonl(jsonl)
+    table = _stage_breakdown(records)
+    print(f"# traced lap: {rt['decoded_tok_per_s']:.1f} tok/s vs "
+          f"{ref['decoded_tok_per_s']:.1f} untraced "
+          f"({regression:+.2f}% overhead), host_blocks "
+          f"{hb_on}=={hb_off} on the deterministic replay, "
+          f"{len(chains)}/{args.requests} complete span chains",
+          flush=True)
+    print(f"# stage breakdown (ms): " + ", ".join(
+        f"{st} p50={table[st]['p50']:.1f} p99={table[st]['p99']:.1f}"
+        for st in ("queue_ms", "stalled_ms", "prefill_ms",
+                   "decode_ms")), flush=True)
+    print(f"# wrote {args.trace} ({n_events} events) + {jsonl}",
+          flush=True)
+    return {"tok_per_s_off": ref["decoded_tok_per_s"],
+            "tok_per_s_on": rt["decoded_tok_per_s"],
+            "regression_pct": regression,
+            "host_blocks_off": hb_off,
+            "host_blocks_on": hb_on,
+            "complete_chains": len(chains),
+            "events": n_events,
+            "chrome_trace": args.trace,
+            "jsonl": jsonl,
+            "stage_ms": table}
+
+
 def run_speculative_bench(args) -> None:
     """The speculative-decoding benchmark: one bursty decode-heavy
     stream against a draft-k/verify-1 server and a plain-decode server
@@ -854,6 +1038,9 @@ def run_speculative_bench(args) -> None:
             f"draft acceptance rate {sstats['acceptance_rate']:.3f} "
             f"below the recorded floor {args.accept_floor} — the "
             "draft has regressed against the target experts")
+    trace_block = None
+    if args.trace:
+        trace_block = _traced_lap(args, spec, bench, names, reqs, r)
     if args.json:
         payload = {"workload": "speculative",
                    "placement": args.placement,
@@ -867,6 +1054,8 @@ def run_speculative_bench(args) -> None:
                    "acceptance_floor": args.accept_floor,
                    "token_identity": True,
                    "jit_cache_stable": True}
+        if trace_block is not None:
+            payload["trace"] = trace_block
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", flush=True)
@@ -954,6 +1143,15 @@ def main():
                     help="also write machine-readable results (per-"
                          "scenario metrics + corrected compile counts + "
                          "sync counters) to this path")
+    ap.add_argument("--trace", metavar="OUT", default=None,
+                    help="(bursty speculative workload) run one extra "
+                         "lap of the identical stream on the warm "
+                         "speculative server with lifecycle tracing on, "
+                         "write a Chrome trace_event JSON to OUT (and a "
+                         "greppable OUT + 'l' JSONL sibling), assert "
+                         "host_blocks parity with the tracing-off lap + "
+                         "one complete per-request span chain, and add "
+                         "a per-request stage breakdown to --json")
     ap.add_argument("--check-invariants", type=int, default=0,
                     metavar="N",
                     help="run the concurrency-gate conservation sweep "
@@ -974,6 +1172,10 @@ def main():
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}")
+    if args.trace and (args.hub or args.workload != "bursty"):
+        print("# --trace is wired to the bursty speculative bench "
+              "only; ignoring", flush=True)
+        args.trace = None
 
     if args.hub:
         if args.requests < args.n_experts:

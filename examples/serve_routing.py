@@ -100,7 +100,7 @@ def hub_cold_start_demo(server, hub, bench, names, t0):
                 resp = r
     for step_no, state in seen:
         print(f"    step {step_no}: {name!r} {state}")
-    stalls = sched.stats["resident_stalls"]
+    stalls = sched.stats.resident_stalls
     print(f"[{time.time()-t0:5.1f}s] served by {resp.expert!r} after "
           f"{step} steps ({stalls} resident-miss stalls so far); "
           f"tokens {resp.tokens.tolist()}")
@@ -281,7 +281,7 @@ def main():
 
     # continuous-batching internals: compile counts stay bucket-bounded
     st = server.stats
-    print(f"scheduler: {st['scheduler']['batches']} micro-batches, "
+    print(f"scheduler: {st['scheduler'].batches} micro-batches, "
           f"{st['router']['cache_hits']} route-cache hits, "
           f"executor={st['executor']}")
     for name, es in {**st["engines"], **st["banks"]}.items():

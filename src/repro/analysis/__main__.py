@@ -12,7 +12,8 @@ jax initialises. The CLI handles that itself: the parent process runs
 runs the ``sanitizer`` schedule fuzzer in-process too (its stub-model
 hubs are CPU-friendly), and re-execs ``hlo`` as a child with the
 forced-device environment, collecting the child's findings over a
-JSON pipe. Exit status with ``--fail-on-violation``: 0 when every
+JSON pipe. The ``obs`` pass (rules O001–O003, the tracing/metrics
+contract) is pure AST like ``lint`` and runs in-process. Exit status with ``--fail-on-violation``: 0 when every
 error-severity finding is covered by ``baseline.toml``, 1 otherwise
 (the report prints a ready to paste baseline stanza per unbaselined
 error; ``--emit-baseline`` prints *only* those stanzas, for piping
@@ -31,13 +32,18 @@ from typing import List
 from . import (Violation, apply_baseline, format_report, load_baseline,
                REPO_ROOT)
 
-_PASSES = ("lint", "hlo", "pallas", "races", "sanitizer")
+_PASSES = ("lint", "obs", "hlo", "pallas", "races", "sanitizer")
 _CHILD_FLAG = "--emit-json"
 
 
 def _run_lint() -> List[Violation]:
     from . import lint
     return lint.run()
+
+
+def _run_obs() -> List[Violation]:
+    from . import obs_lint
+    return obs_lint.run()
 
 
 def _run_pallas() -> List[Violation]:
@@ -116,6 +122,8 @@ def main(argv=None) -> int:
     for p in passes:
         if p == "lint":
             violations += _run_lint()
+        elif p == "obs":
+            violations += _run_obs()
         elif p == "pallas":
             violations += _run_pallas()
         elif p == "races":

@@ -1,0 +1,226 @@
+"""Observability contract lint (rules O001–O003).
+
+PR 6 fixed a family of L004 timing bugs — hand-rolled ``perf_counter``
+regions that measured *enqueue* instead of completion. The tracing
+subsystem (``repro.obs``) could silently reintroduce every one of them,
+plus a new failure class: tracer calls captured inside jit-traced
+code (a host side effect that fires once at trace time, then never
+again — silently wrong data AND a retrace hazard). These rules keep
+the observability layer honest, statically:
+
+O001  a tracer call (``span``/``event``/``begin_device``/...) inside a
+      jit-traced function. Host-side tracing must stay host-side: a
+      call baked into a trace records trace-time, not run-time.
+
+O002  sync-safe device spans, two clauses. (a) a ``with tracer.span()``
+      body that dispatches device work without a blessed sync
+      (``block_until_ready``/``device_get``/``np.asarray``) times the
+      enqueue, not the work — use ``begin_device``/``end_device`` at a
+      sync site, or ``enqueue_span`` when enqueue latency is the
+      *intended* measurement (the hub's slot install). (b) an
+      ``end_device`` call in a function with no sync call: the handle
+      would close before the device work finished.
+
+O003  ``Histogram(...)`` bucket bounds must be literals (an inline
+      tuple/list of numbers, or an ALL_CAPS constant) — computed
+      buckets can silently degenerate (empty, unsorted, wrong unit)
+      and make every recorded percentile a lie.
+
+Pure AST — no jax import, safe to run anywhere. Shares the device /
+sync vocabularies with ``lint`` so the two gates can't drift.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional, Sequence, Set
+
+from . import REPO_ROOT, Violation
+from .lint import (_DEVICE_HINTS, _NON_DISPATCH, _NP_ROOTS, _SYNC_CALLS,
+                   _Parents, _call_name, _dotted, _last_attr,
+                   _walk_skip_fns, default_paths, find_traced_functions)
+
+#: The Tracer API surface — any of these on a tracer-named receiver is
+#: "a tracing call" for O001.
+_TRACER_METHODS = {"span", "enqueue_span", "event", "begin_device",
+                   "end_device", "next_id", "bind_uid", "trace_of",
+                   "release_uid", "now"}
+
+
+def _is_tracer_call(node: ast.AST, methods: Set[str]) -> bool:
+    """``<something named *tracer*>.<method>(...)``."""
+    if not (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in methods):
+        return False
+    recv = _dotted(node.func.value)
+    return recv is not None and "tracer" in recv.lower()
+
+
+def _classify(nodes: Sequence[ast.AST]) -> "tuple[Optional[ast.Call], bool]":
+    """(first device-dispatch call, any sync call present) — the same
+    vocabulary L004 uses, so the two rules agree on what 'dispatch'
+    and 'sync' mean."""
+    device: Optional[ast.Call] = None
+    synced = False
+    for node in nodes:
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node) or ""
+        last = _last_attr(name)
+        root = name.split(".")[0] if name else ""
+        if last in _SYNC_CALLS or (root in _NP_ROOTS
+                                   and last in ("asarray", "array")):
+            synced = True
+        elif (root in ("jnp", "jax") and last not in _NON_DISPATCH) \
+                or last.lstrip("_") in _DEVICE_HINTS:
+            device = device or node
+    return device, synced
+
+
+# ---------------------------------------------------------------------------
+# O001 — no tracing inside traced code
+# ---------------------------------------------------------------------------
+
+
+def _check_traced_tracing(tree: ast.AST, parents: _Parents,
+                          path: str) -> List[Violation]:
+    out: List[Violation] = []
+    for fn in find_traced_functions(tree):
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for node in _walk_skip_fns(body):
+            if _is_tracer_call(node, _TRACER_METHODS):
+                out.append(Violation(
+                    "O001", path, node.lineno, parents.qualname(node),
+                    f"tracer call {_dotted(node.func)}() inside a "
+                    "jit-traced function — host-side tracing baked "
+                    "into a trace fires at trace time only (silently "
+                    "wrong spans) and is a retrace hazard"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# O002 — device spans end at sync sites
+# ---------------------------------------------------------------------------
+
+
+def _check_span_sync(tree: ast.AST, parents: _Parents,
+                     path: str) -> List[Violation]:
+    out: List[Violation] = []
+    # (a) `with tracer.span(...)` wrapping unsynced device dispatch.
+    # `enqueue_span` is exempt by name: it declares enqueue semantics.
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.With):
+            continue
+        for item in node.items:
+            ce = item.context_expr
+            if not (_is_tracer_call(ce, {"span"})):
+                continue
+            device, synced = _classify(_walk_skip_fns(node.body))
+            if device is not None and not synced:
+                out.append(Violation(
+                    "O002", path, device.lineno,
+                    parents.qualname(device),
+                    f"span wraps device dispatch "
+                    f"({_call_name(device)}) with no block_until_ready/"
+                    "device_get — the span measures enqueue, not "
+                    "completion; use begin_device/end_device closed at "
+                    "a sync site, or enqueue_span if enqueue latency "
+                    "is the intended measurement"))
+    # (b) end_device outside a sync-bearing function.
+    for node in ast.walk(tree):
+        if not _is_tracer_call(node, {"end_device"}):
+            continue
+        fn = parents.enclosing_function(node)
+        body = fn.body if fn is not None else []
+        body = body if isinstance(body, list) else [body]
+        _dev, synced = _classify(_walk_skip_fns(body))
+        if not synced:
+            out.append(Violation(
+                "O002", path, node.lineno, parents.qualname(node),
+                "end_device() in a function with no "
+                "block_until_ready/device_get — the device span would "
+                "close before the work completed; close handles only "
+                "at the blessed sync sites (the engine's "
+                "_materialize/_materialize_spec)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# O003 — histogram buckets are literals
+# ---------------------------------------------------------------------------
+
+
+def _module_literals(tree: ast.AST) -> Set[str]:
+    """Module-level names bound to literal tuples/lists of numbers."""
+    names: Set[str] = set()
+    for stmt in getattr(tree, "body", []):
+        if isinstance(stmt, ast.Assign) and _is_literal_seq(stmt.value):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+    return names
+
+
+def _is_literal_seq(node: ast.AST) -> bool:
+    return isinstance(node, (ast.Tuple, ast.List)) and node.elts and all(
+        isinstance(e, ast.Constant)
+        and isinstance(e.value, (int, float)) for e in node.elts)
+
+
+def _check_bucket_literals(tree: ast.AST, parents: _Parents,
+                           path: str) -> List[Violation]:
+    out: List[Violation] = []
+    literal_names = _module_literals(tree)
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _last_attr(_call_name(node)) == "Histogram"):
+            continue
+        arg: Optional[ast.AST] = node.args[0] if node.args else None
+        for kw in node.keywords:
+            if kw.arg == "buckets":
+                arg = kw.value
+        if arg is None:          # library default — itself a literal
+            continue
+        if _is_literal_seq(arg):
+            continue
+        name = _dotted(arg)
+        if name is not None:
+            last = _last_attr(name)
+            if last.isupper() or last in literal_names:
+                continue         # ALL_CAPS constant / module literal
+        out.append(Violation(
+            "O003", path, node.lineno, parents.qualname(node),
+            f"Histogram buckets "
+            f"{ast.unparse(arg) if hasattr(ast, 'unparse') else '?'} "
+            "are computed, not literal — declare bounds inline or as "
+            "an ALL_CAPS constant so resolution is reviewable and "
+            "can't silently degenerate"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def lint_source(src: str, path: str) -> List[Violation]:
+    """Check one file's source. ``path`` is the repo-relative name used
+    in reports and baseline keys."""
+    tree = ast.parse(src, filename=path)
+    parents = _Parents(tree)
+    out: List[Violation] = []
+    out.extend(_check_traced_tracing(tree, parents, path))
+    out.extend(_check_span_sync(tree, parents, path))
+    out.extend(_check_bucket_literals(tree, parents, path))
+    return out
+
+
+def run(paths: Optional[Sequence[str]] = None,
+        root: str = REPO_ROOT) -> List[Violation]:
+    out: List[Violation] = []
+    for p in (paths or default_paths(root)):
+        rel = os.path.relpath(p, root) if os.path.isabs(p) else p
+        with open(os.path.join(root, rel), encoding="utf-8") as fh:
+            out.extend(lint_source(fh.read(), rel.replace(os.sep, "/")))
+    return out

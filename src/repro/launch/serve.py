@@ -26,6 +26,7 @@ from ..configs import ALL_ARCHS, get_config
 from ..core import ExpertRegistry, build_matcher, train_bank
 from ..data import load_benchmark
 from ..models import build_model
+from ..obs import Tracer
 from ..serve import ExpertEngine, ExpertHub, Request, RoutedServer
 
 
@@ -53,6 +54,11 @@ def main():
     ap.add_argument("--store", default=None,
                     help="expert checkpoint store dir for --hub-slots "
                          "(default: a temp dir)")
+    ap.add_argument("--trace", metavar="OUT", default=None,
+                    help="record request-lifecycle spans while serving "
+                         "and write a Chrome trace_event JSON to OUT "
+                         "(open in chrome://tracing or Perfetto), plus "
+                         "a greppable JSONL sibling at OUT + 'l'")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -93,8 +99,9 @@ def main():
             registry.add(n, ExpertEngine(model, model.init(
                 jax.random.PRNGKey(i)), max_len=64, kv_layout=kv),
                 arch=cfg.name)
+    tracer = Tracer() if args.trace else None
     server = RoutedServer(matcher, registry, executor=args.executor,
-                          hub=hub)
+                          hub=hub, tracer=tracer)
 
     rng = np.random.default_rng(0)
     reqs, truth = [], []
@@ -120,8 +127,13 @@ def main():
         print(f"hub: {hub.stats!r}")
         print(f"resident now: "
               f"{[hub.catalog[e].name for e in hub.resident_experts]} "
-              f"({server.scheduler.stats['resident_stalls']} "
+              f"({server.scheduler.stats.resident_stalls} "
               "resident-miss stalls)")
+    if tracer is not None:
+        n_events = tracer.export_chrome(args.trace)
+        tracer.export_jsonl(args.trace + "l")
+        print(f"trace: {n_events} events -> {args.trace} "
+              f"(+ {args.trace}l)")
 
 
 if __name__ == "__main__":

@@ -54,7 +54,7 @@ from .placement import (BankMember, BankedEngine, PlacementPlan, Shard,
                         plan_placement)
 from .router import PrefixLRU, Router, RouteResult
 from .scheduler import (Request, Response, RoutedServer, Scheduler,
-                        SchedulerConfig)
+                        SchedulerConfig, SchedulerStats)
 
 __all__ = [
     "EngineCore", "ExpertEngine", "EngineStats", "bucket_for",
@@ -69,4 +69,5 @@ __all__ = [
     "plan_placement",
     "PrefixLRU", "Router", "RouteResult",
     "Request", "Response", "RoutedServer", "Scheduler", "SchedulerConfig",
+    "SchedulerStats",
 ]

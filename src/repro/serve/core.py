@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..obs.trace import NULL_TRACER
 from ..sharding import leading_sharding
 from .draft import build_draft
 from .kvcache import PagePool, PagePoolExhausted, PrefixCache, hash_chain
@@ -207,6 +208,36 @@ class EngineStats:
         return (self.prefill_compiles + self.suffix_compiles
                 + self.decode_compiles + self.verify_compiles)
 
+    def as_dict(self) -> Dict[str, Any]:
+        """Every counter plus the live compile properties — the shape
+        the unified metrics registry snapshots (one engine = one leaf
+        group in the tree)."""
+        return {
+            "prefill_calls": self.prefill_calls,
+            "decode_steps": self.decode_steps,
+            "rows_served": self.rows_served,
+            "rows_padded": self.rows_padded,
+            "tokens_generated": self.tokens_generated,
+            "host_blocks": self.host_blocks,
+            "prefill_tokens_submitted": self.prefill_tokens_submitted,
+            "prefill_tokens_computed": self.prefill_tokens_computed,
+            "prefill_rows_computed": self.prefill_rows_computed,
+            "prefix_full_hits": self.prefix_full_hits,
+            "prefix_dup_rows": self.prefix_dup_rows,
+            "prefix_pages_shared": self.prefix_pages_shared,
+            "pages_copied": self.pages_copied,
+            "verify_steps": self.verify_steps,
+            "tokens_drafted": self.tokens_drafted,
+            "tokens_accepted": self.tokens_accepted,
+            "acceptance_rate": self.acceptance_rate,
+            "spec_fallback_waves": self.spec_fallback_waves,
+            "prefill_compiles": self.prefill_compiles,
+            "suffix_compiles": self.suffix_compiles,
+            "decode_compiles": self.decode_compiles,
+            "verify_compiles": self.verify_compiles,
+            "jit_cache_entries": self.jit_cache_entries,
+        }
+
     def __repr__(self) -> str:
         return (f"EngineStats(prefill_compiles={self.prefill_compiles}, "
                 f"decode_compiles={self.decode_compiles}, "
@@ -283,6 +314,13 @@ class _Wave:
     host_buf: Optional[np.ndarray] = None    # (E, Bb, 1 + steps) int32
     host_fill: Optional[np.ndarray] = None   # (E, Bb) tokens in host_buf
     spec_seeded: bool = False                # host_buf column 0 written
+    # tracing (inert under NULL_TRACER): the wave's id in the trace and
+    # the open device-span handles, begun at enqueue and ended only
+    # inside _materialize/_materialize_spec — the existing sync sites —
+    # so tracing never adds a host block (rule O002)
+    wave_id: int = 0
+    sp_prefill: Any = None
+    sp_decode: Any = None
 
 
 class EngineCore:
@@ -325,6 +363,10 @@ class EngineCore:
         self.mesh = mesh if (mesh is not None
                              and mesh.shape.get("expert", 1) > 1) else None
         self.stats = EngineStats(self)
+        # lifecycle tracing; rebound by the scheduler (bind_tracer) when
+        # the server carries a live tracer. Under NULL_TRACER every
+        # call below is a no-op (begin_device returns None).
+        self.tracer = NULL_TRACER
         self._active: List[_Wave] = []
         self._finished: List[Tuple[int, Any, np.ndarray]] = []
         # shape-keyed jit wrappers; real executable counts come from
@@ -493,6 +535,13 @@ class EngineCore:
                 jitted = jax.jit(fn, donate_argnums=(2,))
             self._suffix_fns[key] = jitted
         return self._suffix_fns[key]
+
+    def bind_tracer(self, tracer) -> None:
+        """Install a lifecycle tracer (None restores NULL_TRACER). The
+        core only *opens* device spans at enqueue points and closes
+        them inside its existing sync sites, so binding a live tracer
+        cannot change ``stats.host_blocks``."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     def executable_bounds(self) -> Dict[str, int]:
         """Steady-state executable-count bound per wrapper family.
@@ -779,9 +828,12 @@ class EngineCore:
             per_row[local] = [max(1, int(m)) for m in max_new]
             done[local] = [False] * len(u)
             n_rows += len(u)
+        fb0 = self.stats.spec_fallback_waves
         if self.kv_layout == "paged":
             # may raise PagePoolExhausted with no state changed — the
-            # scheduler requeues the rows as backpressure
+            # scheduler requeues the rows as backpressure; the device
+            # span below opens only after admission succeeds, so span
+            # balance holds trivially across the rollback
             w = self._admit_paged(toks, uids, per_row, done, Bb, Sb)
         else:
             logits, cache = self._prefill_fn(Bb, Sb)(
@@ -811,6 +863,16 @@ class EngineCore:
         self.stats.rows_served += n_rows
         self.stats.rows_padded += E * Bb - n_rows
         self.stats.prefill_tokens_submitted += n_submitted
+        if self.tracer.enabled:
+            w.wave_id = self.tracer.next_id()
+            flat = [u for us in uids.values() for u in us]
+            w.sp_prefill = self.tracer.begin_device(
+                "wave.prefill", wave=w.wave_id, Bb=Bb, Sb=Sb,
+                rows=n_rows, spec=w.spec, chunks=len(w.pending_chunks),
+                uids=flat,
+                traces=[self.tracer.trace_of(u) for u in flat])
+            if self.stats.spec_fallback_waves > fb0:
+                self.tracer.event("spec.fallback", wave=w.wave_id)
         self._active.append(w)
         if not defer:
             # blocking reference: drain the wave's prefill chunks (a
@@ -1181,6 +1243,9 @@ class EngineCore:
         self.stats.prefill_calls += 1
         spent = d["rows"] * self.chunk_len
         self.stats.prefill_tokens_computed += spent
+        self.tracer.event("wave.chunk", wave=w.wave_id, chunk=k,
+                          tokens=spent,
+                          remaining=len(w.pending_chunks))
         if not w.pending_chunks:
             w._tok_c = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             self._finalize_wave(w)
@@ -1252,6 +1317,12 @@ class EngineCore:
                 continue
             if w.steps_left > 0:
                 Bb = w.tok.shape[1]
+                if w.sp_decode is None and self.tracer.enabled:
+                    # covers every tick enqueued until the next harvest
+                    # sync closes it (one span per materialise window)
+                    w.sp_decode = self.tracer.begin_device(
+                        "wave.verify" if w.spec else "wave.decode",
+                        wave=w.wave_id, Bb=Bb)
                 if w.spec:
                     self._spec_tick(w, Bb)
                     advanced += 1
@@ -1313,6 +1384,15 @@ class EngineCore:
             w.emitted[w.n_host + k] = np.asarray(plane)
         w.n_host = upto
         self.stats.host_blocks += 1
+        # blessed sync site: the device_get above completed everything
+        # enqueued for this wave, so its open device spans close here —
+        # tracing rides the sync the engine already pays for (O002)
+        if w.sp_prefill is not None:
+            self.tracer.end_device(w.sp_prefill, planes=upto)
+            w.sp_prefill = None
+        if w.sp_decode is not None:
+            self.tracer.end_device(w.sp_decode, planes=upto)
+            w.sp_decode = None
 
     def _materialize_spec(self, w: _Wave) -> None:
         """Drain a speculative wave's pending (emit, adv, acc) verify
@@ -1325,6 +1405,14 @@ class EngineCore:
             return
         first, triples = jax.device_get((w.emitted[0], w.spec_pending))
         self.stats.host_blocks += 1
+        # blessed sync site (the speculative twin of _materialize)
+        if w.sp_prefill is not None:
+            self.tracer.end_device(w.sp_prefill)
+            w.sp_prefill = None
+        if w.sp_decode is not None:
+            self.tracer.end_device(w.sp_decode,
+                                   verifies=len(triples))
+            w.sp_decode = None
         if not w.spec_seeded:
             w.emitted[0] = np.asarray(first)
             w.n_host = max(w.n_host, 1)

@@ -63,6 +63,11 @@ class DraftModel:
         state; static drafts return it unchanged."""
         return state
 
+    def describe(self) -> dict:
+        """Identity metadata for the obs snapshot tree (pure host data,
+        never device arrays)."""
+        return {"name": self.name, "kind": type(self).__name__}
+
     def _chain(self, state, tok, k, step):
         def body(cur, _):
             nxt = step(state, cur)

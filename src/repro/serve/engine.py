@@ -70,6 +70,12 @@ class ExpertEngine:
     def stats(self) -> EngineStats:
         return self.core.stats
 
+    def bind_tracer(self, tracer) -> None:
+        """Install a lifecycle tracer on the core (None disables).
+        Device spans open at admit/tick and close only at the core's
+        harvest sync points — tracing adds no host blocks."""
+        self.core.bind_tracer(tracer)
+
     @property
     def spec(self) -> ExpertSpec:
         """The shared catalog entry type describing this engine

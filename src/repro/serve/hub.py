@@ -83,7 +83,6 @@ import collections
 import dataclasses
 import queue
 import threading
-import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -93,6 +92,7 @@ from jax.sharding import Mesh
 
 from ..checkpoint import io as ckpt_io
 from ..core.registry import ExpertRegistry, ExpertSpec
+from ..obs.trace import NULL_TRACER
 from .placement import BankedEngine
 
 # ---------------------------------------------------------------------------
@@ -148,7 +148,9 @@ THREAD_CONTRACT = {
         "stager": ["ExpertHub._stage_loop"],
     },
     "lock_guarded": {
-        "entry_fields": ["state", "params", "slot", "pins", "last_used"],
+        "entry_fields": ["state", "params", "slot", "pins", "last_used",
+                         "misses", "stage_ms", "commit_ms",
+                         "resident_s", "resident_since"],
         "fields": ["catalog", "_wanted", "_staging", "_stage_errors",
                    "popularity", "_stage_thread", "_closed"],
         "stats_fields": ["loads", "evictions", "resident_misses",
@@ -262,6 +264,14 @@ class CatalogEntry:
     slot: int = -1                  # device bank slot while resident
     pins: int = 0                   # in-flight rows holding residency
     last_used: int = 0              # hub clock at last admission
+    # per-expert lifecycle metrics (obs registry → future rebalancer):
+    # residency wall time, admission misses, cumulative stage/commit
+    # latency — all attributed to this expert, not just the hub total
+    misses: int = 0                 # acquire() found this expert cold
+    stage_ms: float = 0.0           # cumulative cold→host stage latency
+    commit_ms: float = 0.0          # cumulative host→slot enqueue latency
+    resident_s: float = 0.0         # total seconds spent resident
+    resident_since: float = 0.0     # tracer clock at the last commit
 
 
 @dataclasses.dataclass
@@ -386,6 +396,18 @@ class ExpertHub:
         # seam for the schedule-fuzzing sanitizer: it swaps in managed
         # thread/lock/queue shims before the worker first spawns
         self._thread_factory = threading.Thread
+        # lifecycle tracer (repro.obs). Bound once, before traffic, by
+        # Scheduler.bind_tracer; both threads only ever *read* it, and
+        # the disabled NULL_TRACER spans still measure (HubStats keeps
+        # its stage/commit latencies with tracing off)
+        self._tracer = NULL_TRACER
+
+    def bind_tracer(self, tracer) -> None:
+        """Install a lifecycle tracer (None restores the disabled
+        NULL_TRACER). Call before traffic, from the scheduler thread —
+        hub spans record stage/commit latency with the same clock reads
+        that feed ``HubStats``."""
+        self._tracer = tracer if tracer is not None else NULL_TRACER
 
     # -- catalog ---------------------------------------------------------
     def add_expert(self, name: str, params: Any = None, *,
@@ -502,6 +524,7 @@ class ExpertHub:
                 return c.slot
             self._want_locked(e)
             self.stats.resident_misses += 1
+            c.misses += 1
             name = c.name
         raise NotResident(e, name)
 
@@ -688,18 +711,23 @@ class ExpertHub:
         state transitions (the pre-gate code reset failed entries to
         cold with no lock at all — rule R001's finding)."""
         e, name, store = job
-        t0 = time.perf_counter()
+        # one clock-read pair: the span's measurement IS the HubStats
+        # stage latency (sp.ms is taken even with tracing disabled, so
+        # the counters never go dark). The span closes — with an error
+        # attribute — before the failure path runs, so span balance
+        # survives a flaky cold tier.
+        sp = self._tracer.span("hub.stage", expert=e, expert_name=name)
         try:
-            params = ckpt_io.load_expert(store, name,
-                                         like=self._host_like)
+            with sp:
+                params = ckpt_io.load_expert(store, name,
+                                             like=self._host_like)
         except Exception as exc:
             with self._lock:
                 self._stage_fail_locked(e, exc)
                 self._cv.notify_all()
             return
-        ms = (time.perf_counter() - t0) * 1e3
         with self._lock:
-            self._stage_publish_locked(e, params, ms)
+            self._stage_publish_locked(e, params, sp.ms)
             self._cv.notify_all()
 
     def _stage_publish_locked(self, e: int, params: Any,
@@ -710,6 +738,7 @@ class ExpertHub:
         c.state = "staged"
         self.stats.stage_count += 1
         self.stats.stage_ms += ms
+        c.stage_ms += ms
 
     def _stage_fail_locked(self, e: int,
                            exc: BaseException) -> None:
@@ -797,6 +826,7 @@ class ExpertHub:
         c.state = "staged"                # host copy retained: reloads
         c.slot = -1                       # skip the cold tier entirely
         #                                   (bounded by host_cache)
+        c.resident_s += self._tracer.now() - c.resident_since
         self._slot_expert[slot] = None
         self.stats.evictions += 1
         return slot
@@ -811,25 +841,33 @@ class ExpertHub:
         reader can see a resident entry with ``slot == -1``."""
         c = self.catalog[e]
         core = self.bank.core
-        t0 = time.perf_counter()
-        if self._install is None:
-            s = core._bank_sharding()
-            def fn(bank, new, at):
-                return jax.tree_util.tree_map(
-                    lambda a, b: a.at[at].set(b), bank, new)
-            if s is not None:
-                self._install = jax.jit(fn, donate_argnums=(0,),
-                                        out_shardings=s)
-            else:
-                self._install = jax.jit(fn, donate_argnums=(0,))
-        core.params = self._install(core.params, c.params,
-                                    jnp.asarray(slot, jnp.int32))
-        self.stats.commit_ms += (time.perf_counter() - t0) * 1e3
+        # enqueue_span, deliberately: the install scatter is async
+        # dispatch and commit latency is *defined* as enqueue cost (the
+        # device work completes under the wave's harvest sync) — the
+        # O002 gate exempts enqueue_span by name for exactly this case.
+        # One clock-read pair feeds both the span and HubStats.
+        with self._tracer.enqueue_span("hub.commit", expert=e,
+                                       slot=slot) as sp:
+            if self._install is None:
+                s = core._bank_sharding()
+                def fn(bank, new, at):
+                    return jax.tree_util.tree_map(
+                        lambda a, b: a.at[at].set(b), bank, new)
+                if s is not None:
+                    self._install = jax.jit(fn, donate_argnums=(0,),
+                                            out_shardings=s)
+                else:
+                    self._install = jax.jit(fn, donate_argnums=(0,))
+            core.params = self._install(core.params, c.params,
+                                        jnp.asarray(slot, jnp.int32))
+        self.stats.commit_ms += sp.ms
         self.stats.commit_count += 1
         self.stats.loads += 1
+        c.commit_ms += sp.ms
         c.slot = slot
         c.last_used = self._tick
         c.state = "resident"
+        c.resident_since = self._tracer.now()
         self._slot_expert[slot] = e
 
     # -- warmup ----------------------------------------------------------
@@ -874,6 +912,32 @@ class ExpertHub:
                     break
 
     # -- bookkeeping -----------------------------------------------------
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """The hub's node in the unified metrics tree: the HubStats
+        counters plus a per-expert breakdown (router hits, lifecycle
+        state, pins, admission misses, cumulative stage/commit latency,
+        resident wall time — with the live tail for currently-resident
+        experts). This is the feature vector a future residency
+        rebalancer would rank on. One lock hold, pure Python."""
+        now = self._tracer.now()
+        with self._lock:
+            experts: Dict[str, Any] = {}
+            for e, c in enumerate(self.catalog):
+                live = (now - c.resident_since
+                        if c.state == "resident" else 0.0)
+                experts[c.name] = {
+                    "hits": int(self.popularity[e]),
+                    "state": c.state,
+                    "pins": c.pins,
+                    "misses": c.misses,
+                    "stage_ms": c.stage_ms,
+                    "commit_ms": c.commit_ms,
+                    "resident_s": c.resident_s + live,
+                }
+            return {**self.stats.as_dict(),
+                    "slots": self.n_slots,
+                    "experts": experts}
+
     def check(self) -> None:
         """Invariant sweep (tests, the sanitizer, and the scheduler's
         ``--check-invariants`` mode): slot maps and catalog agree, pins

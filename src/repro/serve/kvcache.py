@@ -97,6 +97,12 @@ class PagePool:
         # keeps the hot working set small in the device buffer
         self._free: List[List[int]] = [
             list(range(n_pages - 1, -1, -1)) for _ in range(n_experts)]
+        # cumulative traffic counters (obs registry): pages handed out /
+        # returned over the pool's lifetime, and how many transactional
+        # allocs bounced with PagePoolExhausted (the backpressure rate)
+        self.page_allocs = 0
+        self.page_releases = 0
+        self.exhausted = 0
 
     @property
     def trash(self) -> int:
@@ -110,11 +116,25 @@ class PagePool:
         return self.n_pages - len(self._free[e])
 
     def counters(self) -> Dict[str, int]:
-        """Pool-wide {free, used} page totals — the conservation pair
-        the scheduler's ``--check-invariants`` mode samples (free + used
-        == E * n_pages always; ``check()`` proves the per-page books)."""
+        """Pool-wide page totals: the live {free, used} conservation
+        pair the scheduler's ``--check-invariants`` mode samples (free +
+        used == E * n_pages always; ``check()`` proves the per-page
+        books). Equality of two ``counters()`` snapshots means "no net
+        page movement" — the transactional-rollback tests rely on it,
+        so the monotonic traffic counters live in :meth:`telemetry`."""
         free = sum(len(f) for f in self._free)
-        return {"free": free, "used": self.n_experts * self.n_pages - free}
+        return {"free": free,
+                "used": self.n_experts * self.n_pages - free}
+
+    def telemetry(self) -> Dict[str, int]:
+        """The obs-registry view: the live conservation pair plus the
+        cumulative alloc/release traffic and how many transactional
+        allocs bounced with ``PagePoolExhausted`` (the backpressure
+        rate)."""
+        return {**self.counters(),
+                "page_allocs": self.page_allocs,
+                "page_releases": self.page_releases,
+                "exhausted": self.exhausted}
 
     def alloc(self, e: int, n: int) -> List[int]:
         """Take ``n`` pages for expert ``e`` (each at refcount 1), or
@@ -123,11 +143,13 @@ class PagePool:
             raise ValueError(f"alloc({n})")
         free = self._free[e]
         if n > len(free):
+            self.exhausted += 1
             raise PagePoolExhausted(
                 f"expert {e}: need {n} pages, {len(free)} free of "
                 f"{self.n_pages}")
         out = [free.pop() for _ in range(n)]
         self.refs[e, out] = 1
+        self.page_allocs += n
         return out
 
     def retain(self, e: int, pages: Sequence[int]) -> None:
@@ -146,6 +168,7 @@ class PagePool:
             self.refs[e, p] -= 1
             if self.refs[e, p] == 0:
                 self._free[e].append(p)
+                self.page_releases += 1
 
     def shared(self, e: int, page: int) -> bool:
         """True when more than one owner references the page — a row

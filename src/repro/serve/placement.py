@@ -94,6 +94,12 @@ class BankedEngine:
     def stats(self) -> EngineStats:
         return self.core.stats
 
+    def bind_tracer(self, tracer) -> None:
+        """Install a lifecycle tracer on the core (None disables).
+        Device spans open at admit/tick and close only at the core's
+        harvest sync points — tracing adds no host blocks."""
+        self.core.bind_tracer(tracer)
+
     # -- admission -------------------------------------------------------
     def pad_shape(self, n_rows: int, prompt_len: int) -> Tuple[int, int]:
         """(batch bucket, length bucket) this admission would snap to."""

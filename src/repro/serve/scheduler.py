@@ -34,12 +34,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.matcher import ExpertMatcher
 from ..core.registry import ExpertRegistry
+from ..obs.metrics import Counter, Histogram, MetricsRegistry
+from ..obs.trace import NULL_TRACER
 from .core import DispatchExecutor, get_executor
 from .engine import ExpertEngine
 from .hub import ExpertHub, HubMember, NotResident
@@ -100,6 +102,29 @@ class SchedulerConfig:
     #                                 retrofit)
 
 
+@dataclasses.dataclass(frozen=True)
+class SchedulerStats:
+    """Immutable snapshot of the scheduler's counters (one field per
+    former loose-dict key). Read it as attributes; ``as_dict()`` is the
+    shape the unified metrics registry snapshots. The live counters are
+    ``repro.obs`` Counters on the scheduler — this type is only ever a
+    point-in-time copy, so callers can hold one across a step without
+    it mutating under them."""
+    submitted: int = 0
+    rejected: int = 0
+    batches: int = 0
+    ticks: int = 0
+    responses: int = 0
+    promotions: int = 0
+    orphaned: int = 0
+    kv_stalls: int = 0
+    resident_stalls: int = 0
+    invariant_checks: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
 @dataclasses.dataclass
 class _Pending:
     req: Request
@@ -109,6 +134,15 @@ class _Pending:
     seq: int = 0                    # submit order, for age promotion
     prefix_key: bytes = b""         # prompt-prefix cohort key (PrefixLRU)
     expert: int = -1                # routed expert (hub demux + unpin)
+    # lifecycle accounting (tracer clock, seconds): queue time is
+    # submit→admit minus the stalled share; ``stall_since`` is open
+    # while the row is parked on NotResident / PagePoolExhausted
+    # backpressure
+    trace: int = 0                  # trace id (0 when tracing is off)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    stalled_s: float = 0.0
+    stall_since: Optional[float] = None
 
 
 class Scheduler:
@@ -119,7 +153,8 @@ class Scheduler:
                  config: Optional[SchedulerConfig] = None,
                  placement: Optional[PlacementPlan] = None,
                  executor: "str | DispatchExecutor" = "overlapped",
-                 hub: Optional[ExpertHub] = None):
+                 hub: Optional[ExpertHub] = None,
+                 tracer=None):
         self.router = router
         self.registry = registry
         self.config = config or SchedulerConfig()
@@ -209,10 +244,8 @@ class Scheduler:
         self._seq = 0
         self._skips: Dict[Tuple[int, int], int] = \
             collections.defaultdict(int)   # (shard, bucket) skip rounds
-        self.stats = {"submitted": 0, "rejected": 0, "batches": 0,
-                      "ticks": 0, "responses": 0, "promotions": 0,
-                      "orphaned": 0, "kv_stalls": 0,
-                      "resident_stalls": 0, "invariant_checks": 0}
+        self._counters: Dict[str, Counter] = {
+            f.name: Counter() for f in dataclasses.fields(SchedulerStats)}
         self._steps = 0
         self._done: List[Response] = []
         self._meta: Dict[int, _Pending] = {}   # uid -> routing info
@@ -221,6 +254,69 @@ class Scheduler:
         page = next((self._shard_engine(s).core.page for s in self.shards
                      if self._paged_shard(s)), 8)
         self.prefix_lru = PrefixLRU(page=page)
+        # latency attribution — always on (two perf_counter stamps per
+        # request, no numpy): queue_ms excludes the stalled share so the
+        # two histograms decompose wait time the way the bench's stage
+        # table reports it
+        self._h_queue = Histogram()
+        self._h_stalled = Histogram()
+        self.tracer = NULL_TRACER
+        self.bind_tracer(tracer)
+        self.obs = self._build_metrics()
+
+    @property
+    def stats(self) -> SchedulerStats:
+        """Frozen point-in-time snapshot of the scheduler counters."""
+        return SchedulerStats(**{k: c.value
+                                 for k, c in self._counters.items()})
+
+    def bind_tracer(self, tracer) -> None:
+        """Install a lifecycle tracer here, on every shard engine core
+        and on the hub (None restores the disabled NULL_TRACER). Safe
+        between steps; rows already in flight keep trace id 0."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        for shard in self.shards:
+            eng = self._shard_engine(shard)
+            core = getattr(eng, "core", None)
+            if core is not None:
+                core.bind_tracer(self.tracer)
+        if self.hub is not None:
+            self.hub.bind_tracer(self.tracer)
+
+    def _build_metrics(self) -> MetricsRegistry:
+        """The unified snapshot tree: scheduler counters + latency
+        histograms, every shard engine's ``EngineStats``, every paged
+        shard's page-pool counters, the router and (when present) the
+        hub's per-expert metrics — one ``snapshot()`` call is the whole
+        mesh's state."""
+        obs = MetricsRegistry()
+        obs.register("scheduler", lambda: self.stats.as_dict())
+        obs.register("scheduler/latency/queue_ms", self._h_queue)
+        obs.register("scheduler/latency/stalled_ms", self._h_stalled)
+        obs.register("executor", lambda: {"name": self.executor.name})
+        for shard in self.shards:
+            eng = self._shard_engine(shard)
+            if eng is None:
+                continue
+            label = f"shard{shard.sid}"
+            obs.register(f"engines/{label}",
+                         (lambda e=eng: e.stats.as_dict()))
+            core = getattr(eng, "core", None)
+            if core is not None and core.pool is not None:
+                obs.register(f"kv/{label}", core.pool.telemetry)
+            if core is not None and core.draft is not None:
+                obs.register(f"engines/{label}/draft",
+                             core.draft.describe())
+        if self.router is not None:
+            obs.register("router", self._router_metrics)
+        if self.hub is not None:
+            obs.register("hub", self.hub.metrics_snapshot)
+        return obs
+
+    def _router_metrics(self) -> Dict[str, Any]:
+        r = self.router
+        return {**r.stats, "expert_hits": dict(r.expert_hits),
+                "prefix_lru": dict(self.prefix_lru.stats)}
 
     def _paged_shard(self, shard: Shard) -> bool:
         eng = self._shard_engine(shard)
@@ -268,7 +364,8 @@ class Scheduler:
                 raise ValueError(f"duplicate in-flight uid {r.uid}")
             batch_seen.add(r.uid)
         room = max(self.config.max_queue - self.n_queued, 0)
-        self.stats["rejected"] += len(requests) - min(len(requests), room)
+        self._counters["rejected"].inc(
+            len(requests) - min(len(requests), room))
         requests = requests[:room]
         if not requests:
             return 0
@@ -277,8 +374,12 @@ class Scheduler:
             raise ValueError(
                 "scheduler has no router: every request must be "
                 "pre-routed (Request.expert set)")
-        routed = self.router.route(np.stack(
-            [requests[i].features for i in miss])) if miss else None
+        routed = None
+        if miss:
+            with self.tracer.span("route", rows=len(miss),
+                                  uids=[requests[i].uid for i in miss]):
+                routed = self.router.route(np.stack(
+                    [requests[i].features for i in miss]))
         routed_at = {i: j for j, i in enumerate(miss)}
         top_k = routed.coarse.shape[1] if routed is not None else 1
         admitted = 0
@@ -316,12 +417,19 @@ class Scheduler:
             self._seq += 1
             p = _Pending(r, fine, scores, shard=sid, seq=self._seq,
                          prefix_key=self.prefix_lru.observe(r.prompt),
-                         expert=e)
+                         expert=e, t_submit=self.tracer.now())
+            if self.tracer.enabled:
+                p.trace = self.tracer.next_id()
+                self.tracer.bind_uid(r.uid, p.trace)
+                self.tracer.event("request.submit", uid=r.uid,
+                                  trace=p.trace, expert=e, shard=sid,
+                                  prompt_len=len(r.prompt),
+                                  max_new=int(r.max_new_tokens))
             self.queues[e][sb].append(p)
             self._meta[r.uid] = p
             self.n_queued += 1
             admitted += 1
-        self.stats["submitted"] += admitted
+        self._counters["submitted"].inc(admitted)
         return admitted
 
     # -- one scheduling round -------------------------------------------
@@ -329,7 +437,7 @@ class Scheduler:
         self.executor.run_step(self)
         self._harvest()
         out, self._done = self._done, []
-        self.stats["responses"] += len(out)
+        self._counters["responses"].inc(len(out))
         self._steps += 1
         if (self.config.check_every
                 and self._steps % self.config.check_every == 0):
@@ -372,7 +480,7 @@ class Scheduler:
             assert pins == in_flight, (
                 f"pin conservation broke: hub holds {pins} pins but "
                 f"{in_flight} rows are admitted and unharvested")
-        self.stats["invariant_checks"] += 1
+        self._counters["invariant_checks"].inc()
 
     def close(self) -> None:
         """Shut down background machinery (the hub's staging worker);
@@ -419,7 +527,7 @@ class Scheduler:
                     >= self.config.promote_after]
         if starving:
             sb = min(starving, key=lambda b: oldest[b])
-            self.stats["promotions"] += 1
+            self._counters["promotions"].inc()
         else:
             sb = max(counts, key=lambda b: (counts[b], -oldest[b]))
         for other in counts:
@@ -472,6 +580,61 @@ class Scheduler:
             q.appendleft(p)
         self.n_queued += len(take)
 
+    def _note_stall(self, event: str, e: int, sb: int) -> None:
+        """Open the stall clock on every parked row in queue (e, sb)
+        that isn't already stalled, and emit one ``event`` (``hub.park``
+        or ``kv.requeue``) covering exactly those rows — so a row parked
+        across many rounds produces one event and one stall interval,
+        not one per round."""
+        q = self.queues[e].get(sb)
+        if not q:
+            return
+        t = self.tracer.now()
+        fresh = [p for p in q if p.stall_since is None]
+        for p in fresh:
+            p.stall_since = t
+        if fresh and self.tracer.enabled:
+            self.tracer.event(event, expert=e, rows=len(fresh),
+                              uids=[p.req.uid for p in fresh],
+                              traces=[p.trace for p in fresh])
+
+    def _mark_admitted(self, takes: Sequence[List[_Pending]], sid: int,
+                       sb: int) -> None:
+        """Close stall clocks and stamp admission time on every row of
+        a successfully admitted dispatch group."""
+        t = self.tracer.now()
+        rows = [p for take in takes for p in take]
+        for p in rows:
+            if p.stall_since is not None:
+                p.stalled_s += t - p.stall_since
+                p.stall_since = None
+            p.t_admit = t
+        if rows and self.tracer.enabled:
+            self.tracer.event("request.admit", shard=sid, bucket=sb,
+                              uids=[p.req.uid for p in rows],
+                              traces=[p.trace for p in rows])
+
+    def _finish_row(self, p: _Pending) -> None:
+        """Close the row's lifecycle accounting at response emission:
+        fold any still-open stall, decompose the wait into the
+        queue/stalled histograms (milliseconds) and emit
+        ``request.finish`` + release the uid→trace binding."""
+        t = self.tracer.now()
+        if p.stall_since is not None:
+            p.stalled_s += t - p.stall_since
+            p.stall_since = None
+        admit = p.t_admit if p.t_admit else t
+        queue_s = max(admit - p.t_submit - p.stalled_s, 0.0)
+        self._h_queue.observe(queue_s * 1e3)
+        self._h_stalled.observe(p.stalled_s * 1e3)
+        if self.tracer.enabled:
+            self.tracer.event(
+                "request.finish", uid=p.req.uid, trace=p.trace,
+                expert=p.expert, queue_ms=queue_s * 1e3,
+                stalled_ms=p.stalled_s * 1e3,
+                total_ms=(t - p.t_submit) * 1e3)
+            self.tracer.release_uid(p.req.uid)
+
     def _service_hub(self) -> None:
         """Drive the expert hub's lifecycle one round (no-op without a
         hub): poll staged checkpoints, commit wanted experts into bank
@@ -522,6 +685,7 @@ class Scheduler:
                 slot = hub.acquire(e)
             except NotResident:
                 stalled += 1        # rows stay parked in their queue
+                self._note_stall("hub.park", e, sb)
                 continue
             take = self._pop(e, sb, cap, prefix_group=paged)
             if not take:
@@ -532,7 +696,7 @@ class Scheduler:
                             [p.req.prompt for p in take],
                             [p.req.max_new_tokens for p in take])
         if stalled:
-            self.stats["resident_stalls"] += stalled
+            self._counters["resident_stalls"].inc(stalled)
         if not groups:
             return
         try:
@@ -547,9 +711,12 @@ class Scheduler:
                 hub.unpin(e, len(take))
             if not bank.n_active:
                 raise            # pool too small for even one wave
-            self.stats["kv_stalls"] += 1
+            self._counters["kv_stalls"].inc()
+            for e in popped:
+                self._note_stall("kv.requeue", e, sb)
             return
-        self.stats["batches"] += 1
+        self._counters["batches"].inc()
+        self._mark_admitted(list(popped.values()), shard.sid, sb)
 
     def _admit_banked(self, shard: Shard, sb: int, *,
                       defer: bool = False) -> None:
@@ -580,9 +747,11 @@ class Scheduler:
             for local, e in enumerate(shard.experts):
                 if local in popped:
                     self._requeue(e, sb, popped[local])
-            self.stats["kv_stalls"] += 1
+                    self._note_stall("kv.requeue", e, sb)
+            self._counters["kv_stalls"].inc()
             return
-        self.stats["batches"] += 1
+        self._counters["batches"].inc()
+        self._mark_admitted(list(popped.values()), shard.sid, sb)
 
     def _admit_single(self, e: int, sb: int, *,
                       defer: bool = False) -> None:
@@ -606,18 +775,21 @@ class Scheduler:
                 if not engine.n_active:
                     raise      # pool too small for even one wave
                 self._requeue(e, sb, take)
-                self.stats["kv_stalls"] += 1
+                self._note_stall("kv.requeue", e, sb)
+                self._counters["kv_stalls"].inc()
                 return
-            self.stats["batches"] += 1
+            self._counters["batches"].inc()
+            self._mark_admitted([take], self._shard_of.get(e, -1), sb)
         elif engine is None:
-            self.stats["batches"] += 1
+            self._counters["batches"].inc()
             for p in take:
                 self._meta.pop(p.req.uid, None)
                 self._done.append(self._response(
                     p, name, np.zeros(p.req.max_new_tokens, np.int32)))
+                self._finish_row(p)
         else:
             # legacy blocking engines: one padded batch call
-            self.stats["batches"] += 1
+            self._counters["batches"].inc()
             m = max(len(p.req.prompt) for p in take)
             toks = np.zeros((len(take), m), np.int32)
             for i, p in enumerate(take):
@@ -628,6 +800,7 @@ class Scheduler:
                 self._meta.pop(p.req.uid, None)
                 self._done.append(self._response(
                     p, name, gen[i, :p.req.max_new_tokens]))
+                self._finish_row(p)
 
     def _prefill_chunks(self) -> None:
         """Issue pending prefill chunks of partially-prefilled waves,
@@ -653,7 +826,7 @@ class Scheduler:
             eng = self._shard_engine(shard)
             if eng is not None and eng.n_active:
                 eng.tick(defer=defer)
-                self.stats["ticks"] += 1
+                self._counters["ticks"].inc()
 
     def _harvest_engines(self) -> None:
         """One batched device→host transfer per wave (at most): emit
@@ -680,7 +853,7 @@ class Scheduler:
                     # its rows eventually surface here with no owner —
                     # drop them (with a stat). Unknown *int* uids stay
                     # a loud KeyError: that's a demux bug, not litter.
-                    self.stats["orphaned"] += 1
+                    self._counters["orphaned"].inc()
                     continue
                 p = self._meta.pop(uid)
                 if self.hub is not None:
@@ -696,6 +869,7 @@ class Scheduler:
                     name = self.registry[shard.experts[0]].name
                 self._done.append(self._response(
                     p, name, toks[:p.req.max_new_tokens]))
+                self._finish_row(p)
 
     def _response(self, p: _Pending, name: str,
                   tokens: np.ndarray) -> Response:
@@ -734,7 +908,8 @@ class RoutedServer:
                  hub: Optional[ExpertHub] = None,
                  check_every: int = 0,
                  prefill_tokens_per_step: int = 0,
-                 speculate_k: Optional[int] = None):
+                 speculate_k: Optional[int] = None,
+                 tracer=None):
         self.matcher = matcher
         self.registry = registry
         self.placement = placement
@@ -763,7 +938,21 @@ class RoutedServer:
             SchedulerConfig(max_batch=max_batch, check_every=check_every,
                             prefill_tokens_per_step=prefill_tokens_per_step,
                             speculate_k=speculate_k),
-            placement=placement, executor=executor, hub=hub)
+            placement=placement, executor=executor, hub=hub,
+            tracer=tracer)
+        #: the unified metrics registry — ``obs.snapshot()`` is the
+        #: whole mesh's state as one nested dict
+        self.obs = self.scheduler.obs
+
+    def bind_tracer(self, tracer) -> None:
+        """Install (or, with None, disable) a lifecycle tracer across
+        the scheduler, every engine core and the hub."""
+        self.scheduler.bind_tracer(tracer)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Resolve the unified metrics tree (scheduler / engines / kv /
+        router / hub) into one nested dict."""
+        return self.obs.snapshot()
 
     def close(self) -> None:
         """Join background threads (hub staging worker); idempotent."""

@@ -212,7 +212,7 @@ def test_hub_token_identical_to_resident_and_per_engine(model, params4):
                                       err_msg=str(a.uid))
     assert hub_small.stats.evictions > 0
     assert hub_full.stats.evictions == 0
-    assert srv_small.scheduler.stats["resident_stalls"] > 0
+    assert srv_small.scheduler.stats.resident_stalls > 0
     # pins all released, maps consistent
     assert all(c.pins == 0 for c in hub_small.catalog)
     hub_small.check()
@@ -234,7 +234,7 @@ def test_cold_start_parks_then_serves(tmp_path, model, params4):
     [r] = srv.serve([Request(uid=0, features=np.zeros(784, np.float32),
                              prompt=prompt, max_new_tokens=4, expert=1)])
     assert r.expert == "ex1" and r.tokens.shape == (4,)
-    assert srv.scheduler.stats["resident_stalls"] >= 1
+    assert srv.scheduler.stats.resident_stalls >= 1
     assert hub.stats.stage_count >= 1
     ref = ExpertEngine(model, params4[1], max_len=32)
     np.testing.assert_array_equal(r.tokens,
@@ -304,7 +304,7 @@ def test_hub_warmup_prevents_steady_state_compiles(model, params4):
     rng = np.random.default_rng(13)
     srv.serve(_reqs(rng, 16, 4))
     assert hub.bank.stats.jit_cache_entries + hub.install_compiles == jit0
-    assert srv.scheduler.stats["orphaned"] == 0, \
+    assert srv.scheduler.stats.orphaned == 0, \
         "warmup leaked rows into the scheduler's poll stream"
 
 

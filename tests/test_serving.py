@@ -299,7 +299,7 @@ def test_backpressure_prefix_admission(matcher, bench):
     reqs = [Request(uid=u, features=x[u], prompt=np.arange(5),
                     max_new_tokens=1) for u in range(6)]
     assert srv.submit(reqs) == 3         # prefix admitted, tail rejected
-    assert srv.scheduler.stats["rejected"] == 3
+    assert srv.scheduler.stats.rejected == 3
     got, todo = {}, reqs[3:]             # resubmit only the rejected tail
     while todo or srv.scheduler.has_work:
         if todo:
@@ -333,7 +333,7 @@ def test_sparse_bucket_age_promotion_prevents_starvation(matcher, bench):
             done_during_flood.add(r.uid)
     assert 0 in done_during_flood, \
         "sparse-bucket request starved through 10 flooded rounds"
-    assert srv.scheduler.stats["promotions"] >= 1
+    assert srv.scheduler.stats.promotions >= 1
     # drain the rest; nothing is lost or duplicated
     rest = {r.uid for r in srv.scheduler.drain()}
     assert done_during_flood | rest == set(range(uid))
@@ -739,9 +739,9 @@ def test_overlapped_host_blocks_bounded_per_step(matcher, bench):
                                         size=int(rng.integers(2, 30))),
                     max_new_tokens=int(rng.integers(1, 6))))
             uid += srv.submit(reqs)
-        b0, a0, n0 = blocks(), active(), sched.stats["batches"]
+        b0, a0, n0 = blocks(), active(), sched.stats.batches
         srv.step()
-        admitted = sched.stats["batches"] - n0
+        admitted = sched.stats.batches - n0
         assert blocks() - b0 <= a0 + admitted, \
             (f"step {steps}: {blocks() - b0} host blocks for "
              f"{a0} resident + {admitted} admitted waves")
